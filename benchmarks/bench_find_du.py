@@ -1,0 +1,76 @@
+"""Paper SII-B4: rbh-find / rbh-du clones vs POSIX walking, on a REAL
+directory tree (PosixFs backend)."""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from repro.core import Catalog, Reports, Scanner, StatsAggregator
+from repro.fs import PosixFs
+
+
+def _make_tree(root, n_dirs=40, files_per_dir=25):
+    rng = __import__("random").Random(0)
+    dirs = [root]
+    for i in range(n_dirs):
+        d = os.path.join(rng.choice(dirs[-10:]), f"d{i}")
+        os.makedirs(d, exist_ok=True)
+        dirs.append(d)
+        for j in range(files_per_dir):
+            with open(os.path.join(d, f"f{j}.dat"), "wb") as f:
+                f.write(b"x" * rng.randint(0, 4096))
+
+
+def run() -> list:
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="rbh_bench_")
+    try:
+        _make_tree(tmp)
+        fs = PosixFs(tmp)
+        cat = Catalog()
+        stats = StatsAggregator(cat.strings)
+        cat.add_delta_hook(stats.on_delta)
+        t0 = time.perf_counter()
+        st = Scanner(fs, cat, n_threads=4).scan()
+        scan_dt = time.perf_counter() - t0
+        rows.append(("posix_initial_scan", 1e6 * scan_dt / st.entries,
+                     f"{st.entries}_entries"))
+        rep = Reports(cat, stats)
+
+        # find: files > 2KB
+        t0 = time.perf_counter()
+        hits_posix = []
+        for dirpath, _d, files in os.walk(tmp):
+            for f in files:
+                p = os.path.join(dirpath, f)
+                if os.path.getsize(p) > 2048:
+                    hits_posix.append(p)
+        dt_posix = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        hits_db = rep.find("type == file and size > 2k")
+        dt_db = time.perf_counter() - t0
+        assert len(hits_db) == len(hits_posix)
+        rows.append(("find_posix_walk", 1e6 * dt_posix,
+                     f"{len(hits_posix)}_hits"))
+        rows.append(("find_rbh_db", 1e6 * dt_db,
+                     f"speedup_{dt_posix/max(dt_db,1e-9):.1f}x"))
+
+        # du -s
+        t0 = time.perf_counter()
+        total = 0
+        for dirpath, _d, files in os.walk(tmp):
+            for f in files:
+                total += os.path.getsize(os.path.join(dirpath, f))
+        dt_posix_du = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        du = rep.du(tmp)
+        dt_db_du = time.perf_counter() - t0
+        assert du["volume"] == total
+        rows.append(("du_posix_walk", 1e6 * dt_posix_du, f"{total}_bytes"))
+        rows.append(("du_rbh_db", 1e6 * dt_db_du,
+                     f"speedup_{dt_posix_du/max(dt_db_du,1e-9):.1f}x"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows

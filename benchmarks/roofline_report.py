@@ -1,0 +1,64 @@
+"""Aggregate experiments/dryrun/*.json into the roofline table (markdown +
+CSV rows for run.py)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | MODEL/HLO flops | peak GiB/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"| {r.get('arch')} | {r.get('shape')} | "
+                         f"{r.get('mesh')} | | | | | | | FAIL: "
+                         f"{r.get('error', '?')[:60]} |")
+            continue
+        mem = r["memory"]["peak_estimate_bytes"] / 2 ** 30
+        if "bottleneck" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+                f"| {r['collective_s']:.4f} | {r['bottleneck']} "
+                f"| {r.get('model_vs_hlo_flops', 0):.3f} | {mem:.2f} | ok |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | | | | "
+                f"(multi-pod: fit/sharding only) | | {mem:.2f} | ok |")
+    return "\n".join(lines)
+
+
+def run() -> list:
+    recs = [r for r in load_records() if "__16x16" in
+            f"{r.get('arch')}__{r.get('shape')}__{r.get('mesh')}"
+            or r.get("mesh") == "16x16"]
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok" or "bottleneck" not in r:
+            continue
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((f"roofline_{r['arch']}_{r['shape']}",
+                     dom * 1e6,
+                     f"bottleneck_{r['bottleneck']}"
+                     f"_computefrac_{r['compute_s']/dom:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_records()))

@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract). Run:
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "bench_scan",        # Fig. 3: parallel DFS + multi-client scan
+    "bench_changelog",   # SII-C2/SIII-A2: changelog rates, async dirty-tag
+    "bench_stats",       # SII-B3: O(1) pre-aggregated reports
+    "bench_policy",      # SII-B1: policy matching (4 evaluators)
+    "bench_find_du",     # SII-B4: find/du clones vs POSIX walk
+    "bench_kvtier",      # adapted C7/C8: KV-page tiering + paged serving
+    "roofline_report",   # SRoofline summary rows from the dry-run artifacts
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in MODULES:
+        if args.only and args.only != name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.2f},{derived}", flush=True)
+        except Exception as e:
+            failed += 1
+            print(f"{name},NaN,ERROR_{type(e).__name__}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

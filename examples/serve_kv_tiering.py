@@ -1,0 +1,32 @@
+"""Serve batched requests while the policy engine tiers KV pages
+HBM <-> host underneath (the paper's OST-watermark purge, adapted).
+
+    PYTHONPATH=src python examples/serve_kv_tiering.py
+"""
+from repro.serve.engine import PagedLMConfig, Request, ServingEngine
+
+
+def main() -> None:
+    cfg = PagedLMConfig(n_layers=2, n_pages=20, page_size=8,
+                        high_wm=70.0, low_wm=40.0)
+    engine = ServingEngine(cfg, seed=0)
+    requests = [
+        Request(req_id=i, prompt=[(13 * i + j) % cfg.vocab
+                                  for j in range(10)], max_new=12)
+        for i in range(5)
+    ]
+    print(f"serving {len(requests)} requests; hot pool = "
+          f"{cfg.n_pages} pages x {cfg.page_size} tokens per layer")
+    done = engine.run(requests, policy_interval=2)
+    for r in done:
+        print(f"  req{r.req_id}: generated {r.generated}")
+    for li, rep in enumerate(engine.tier_report()):
+        print(f"layer {li} tier report: {rep}")
+    cache = engine.caches[0]
+    print("\nper-sequence O(1) residency stats during run were available "
+          "via cache.residency_report(seq_id) — pages now freed:",
+          cache.tier_report())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end training driver: train an LM for a few hundred steps with
+the full stack (data pipeline, AdamW, Robinhood-managed checkpoints,
+restart-capable loop).
+
+Default preset is CPU-sized (~3M params, 200 steps, minutes). The ``100m``
+preset instantiates a ~100M-param gemma2-family model — the same code path
+deployed on the production mesh by src/repro/launch/train.py.
+
+    PYTHONPATH=src python examples/train_lm.py [--preset small|100m]
+        [--steps N]
+"""
+import argparse
+import sys
+import tempfile
+
+sys.argv0 = sys.argv[0]
+
+from repro.launch import train as train_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=["small", "100m"])
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+
+    ckpt = tempfile.mkdtemp(prefix="repro_train_")
+    if args.preset == "small":
+        steps = args.steps or 200
+        argv = ["--arch", "chatglm3-6b", "--smoke", "--steps", str(steps),
+                "--batch", "8", "--seq", "64", "--lr", "3e-3",
+                "--ckpt-dir", ckpt, "--ckpt-interval", "50"]
+    else:
+        # ~100M params: gemma2-family, 12 layers, d_model 512
+        import dataclasses
+        from repro.configs import gemma2_9b
+        from repro.models.config import ModelConfig
+        cfg = dataclasses.replace(
+            gemma2_9b.SMOKE, name="gemma2_100m", n_layers=12, d_model=512,
+            n_heads=8, n_kv=4, head_dim=64, d_ff=2048, vocab=32768,
+            window=256)
+        gemma2_9b.SMOKE = cfg  # install the preset
+        steps = args.steps or 300
+        argv = ["--arch", "gemma2-9b", "--smoke", "--steps", str(steps),
+                "--batch", "8", "--seq", "256", "--lr", "1e-3",
+                "--ckpt-dir", ckpt, "--ckpt-interval", "100"]
+    sys.argv = [sys.argv[0]] + argv
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Robinhood Policy Engine core — the paper's contribution.
+
+Collect (scanner/changelog/pipeline) -> store (catalog) -> exploit
+(stats/reports/policies/alerts/HSM).
+"""
+from .types import (ChangelogRecord, ChangelogType, Entry, FsType, HsmState,
+                    format_size, parse_duration, parse_size)
+from .catalog import Catalog, CatalogShard, StringTable
+from .changelog import ChangelogHub, ChangelogStream
+from .scanner import Scanner, multi_client_scan, prune_missing
+from .pipeline import EventPipeline, PipelineConfig
+from .policy import (ALWAYS, And, Cmp, Const, Expr, Not, Or, PolicyError,
+                     compile_program, parse_expr, KERNEL_COLUMNS)
+from .policy_engine import (PolicyDefinition, PolicyEngine, Rule, RunReport,
+                            UsageWatermarkTrigger)
+from .stats import ChangelogCounters, DirUsage, StatsAggregator
+from .reports import Reports
+from .alerts import AlertManager, AlertRule
+from .hsm import HsmCoordinator
+from .plugins import PLUGIN_REGISTRY, register_plugin
+
+__all__ = [
+    "ChangelogRecord", "ChangelogType", "Entry", "FsType", "HsmState",
+    "format_size", "parse_duration", "parse_size",
+    "Catalog", "CatalogShard", "StringTable",
+    "ChangelogHub", "ChangelogStream",
+    "Scanner", "multi_client_scan", "prune_missing",
+    "EventPipeline", "PipelineConfig",
+    "ALWAYS", "And", "Cmp", "Const", "Expr", "Not", "Or", "PolicyError",
+    "compile_program", "parse_expr", "KERNEL_COLUMNS",
+    "PolicyDefinition", "PolicyEngine", "Rule", "RunReport",
+    "UsageWatermarkTrigger",
+    "ChangelogCounters", "DirUsage", "StatsAggregator",
+    "Reports", "AlertManager", "AlertRule", "HsmCoordinator",
+    "PLUGIN_REGISTRY", "register_plugin",
+]

@@ -1,0 +1,64 @@
+"""Alerts (C5 §II-B2): detect 'abnormal or toxic' entries at ingest time.
+
+Alert rules are policy criteria checked against every entry as it flows into
+the catalog (entry hook) — no scan. Matching entries trigger a configurable
+action: append to an alert log file, collect in memory, or call back.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional
+
+from .policy import Expr, parse_expr
+from .types import Entry
+
+
+class AlertRule:
+    def __init__(self, name: str, criteria: str,
+                 action: Optional[Callable[[str, Entry], None]] = None,
+                 cooldown: float = 0.0) -> None:
+        self.name = name
+        self.expr: Expr = parse_expr(criteria)
+        self.action = action
+        self.cooldown = cooldown          # per-fid re-alert suppression
+        self._last_fired = {}
+
+    def check(self, e: Entry, now: float) -> bool:
+        if not self.expr.evaluate(e, now):
+            return False
+        last = self._last_fired.get(e.fid, 0.0)
+        if self.cooldown and now - last < self.cooldown:
+            return False
+        self._last_fired[e.fid] = now
+        return True
+
+
+class AlertManager:
+    def __init__(self, log_path: Optional[str] = None,
+                 clock: Callable[[], float] = time.time) -> None:
+        self.rules: List[AlertRule] = []
+        self.fired: List[dict] = []
+        self.log_path = log_path
+        self.clock = clock
+        self._lock = threading.Lock()
+
+    def add_rule(self, rule: AlertRule) -> None:
+        self.rules.append(rule)
+
+    def on_entry(self, e: Entry) -> None:
+        """Wire as ``catalog.add_entry_hook(mgr.on_entry)``."""
+        now = self.clock()
+        for rule in self.rules:
+            if rule.check(e, now):
+                rec = {"alert": rule.name, "fid": e.fid, "path": e.path,
+                       "owner": e.owner, "size": e.size, "time": now}
+                with self._lock:
+                    self.fired.append(rec)
+                    if self.log_path:
+                        with open(self.log_path, "a", encoding="utf-8") as f:
+                            f.write(f"{now:.3f} ALERT {rule.name} "
+                                    f"path={e.path} owner={e.owner} "
+                                    f"size={e.size}\n")
+                if rule.action is not None:
+                    rule.action(rule.name, e)

@@ -1,0 +1,421 @@
+"""Columnar, sharded metadata catalog — the paper's "database" (C1).
+
+The paper stores the filesystem-metadata mirror in MySQL and observes
+(SIII-B) that a single DB host becomes the bottleneck once DNE spreads the
+namespace over several MDSes; it names catalog *sharding* as the way out.
+This implementation builds that future directly:
+
+* entries live in N independent **shards** (hash of fid), each with its own
+  lock, so concurrent changelog streams (one per MDT) never contend;
+* each shard is **columnar** (struct-of-arrays, numpy): policy predicates and
+  report aggregations run as vectorized column masks — the in-process
+  analogue of a DB table scan, and the exact memory layout consumed by the
+  ``policy_scan`` Pallas kernel on TPU;
+* durability is sqlite WAL (optional): a batch of updates is committed to
+  sqlite *before* the changelog reader acks, preserving the paper's
+  transactional contract (SII-C2).
+
+Strings (owner, group, pool, status) are interned to int32 codes in a shared
+:class:`StringTable`, which is what makes vectorized/accelerator predicate
+evaluation possible.
+"""
+from __future__ import annotations
+
+import os
+import sqlite3
+import threading
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .types import Entry, FsType, HsmState
+
+# Stats/alert hooks receive these light tuples instead of full Entries.
+# (owner_code, group_code, type, size, blocks, hsm_state)
+Delta = Tuple[int, int, int, int, int, int]
+
+_NUMERIC_COLUMNS: Tuple[Tuple[str, np.dtype], ...] = (
+    ("fid", np.int64),
+    ("parent_fid", np.int64),
+    ("type", np.int8),
+    ("size", np.int64),
+    ("blocks", np.int64),
+    ("mode", np.int32),
+    ("nlink", np.int32),
+    ("atime", np.float64),
+    ("mtime", np.float64),
+    ("ctime", np.float64),
+    ("ost_idx", np.int16),
+    ("hsm_state", np.int8),
+    ("archive_id", np.int32),
+    ("owner", np.int32),     # interned code
+    ("group", np.int32),     # interned code
+    ("pool", np.int32),      # interned code
+    ("status", np.int32),    # interned code (v3 generic-policy status)
+    ("dirty", np.int8),
+)
+_STRING_FIELDS = ("owner", "group", "pool", "status")
+
+
+class StringTable:
+    """Bidirectional string<->int32 interning table (thread-safe)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._to_code: Dict[str, int] = {}
+        self._to_str: List[str] = []
+        self.intern("")  # code 0 is always the empty string
+
+    def intern(self, s: str) -> int:
+        with self._lock:
+            code = self._to_code.get(s)
+            if code is None:
+                code = len(self._to_str)
+                self._to_code[s] = code
+                self._to_str.append(s)
+            return code
+
+    def lookup(self, code: int) -> str:
+        return self._to_str[code]
+
+    def code_of(self, s: str) -> Optional[int]:
+        return self._to_code.get(s)
+
+    def __len__(self) -> int:
+        return len(self._to_str)
+
+
+class CatalogShard:
+    """One catalog shard: columnar entry store with amortized growth."""
+
+    _INITIAL = 1024
+
+    def __init__(self, shard_id: int, strings: StringTable) -> None:
+        self.shard_id = shard_id
+        self.strings = strings
+        self.lock = threading.RLock()
+        self._rows: Dict[int, int] = {}          # fid -> row index
+        self._free: List[int] = []
+        self._n = 0                               # high-water row count
+        self._cols: Dict[str, np.ndarray] = {
+            name: np.zeros(self._INITIAL, dtype=dt) for name, dt in _NUMERIC_COLUMNS
+        }
+        self._valid = np.zeros(self._INITIAL, dtype=bool)
+        self._names: List[str] = [""] * self._INITIAL
+        self._paths: List[str] = [""] * self._INITIAL
+        self._xattrs: List[Optional[dict]] = [None] * self._INITIAL
+        self._stripes: List[tuple] = [()] * self._INITIAL
+
+    # -- storage management -------------------------------------------------
+    def _grow(self) -> None:
+        cap = len(self._valid)
+        new_cap = cap * 2
+        for name in self._cols:
+            col = np.zeros(new_cap, dtype=self._cols[name].dtype)
+            col[:cap] = self._cols[name]
+            self._cols[name] = col
+        valid = np.zeros(new_cap, dtype=bool)
+        valid[:cap] = self._valid
+        self._valid = valid
+        self._names.extend([""] * cap)
+        self._paths.extend([""] * cap)
+        self._xattrs.extend([None] * cap)
+        self._stripes.extend([()] * cap)
+
+    def _alloc_row(self) -> int:
+        if self._free:
+            return self._free.pop()
+        if self._n >= len(self._valid):
+            self._grow()
+        row = self._n
+        self._n += 1
+        return row
+
+    # -- entry operations ---------------------------------------------------
+    def _row_delta(self, row: int) -> Delta:
+        c = self._cols
+        return (int(c["owner"][row]), int(c["group"][row]), int(c["type"][row]),
+                int(c["size"][row]), int(c["blocks"][row]),
+                int(c["hsm_state"][row]))
+
+    def upsert(self, e: Entry) -> Tuple[Optional[Delta], Delta]:
+        """Insert or update an entry; returns (old_delta|None, new_delta)."""
+        with self.lock:
+            row = self._rows.get(e.fid)
+            old: Optional[Delta] = None
+            if row is None:
+                row = self._alloc_row()
+                self._rows[e.fid] = row
+                self._valid[row] = True
+            else:
+                old = self._row_delta(row)
+            c = self._cols
+            c["fid"][row] = e.fid
+            c["parent_fid"][row] = e.parent_fid
+            c["type"][row] = int(e.type)
+            c["size"][row] = e.size
+            c["blocks"][row] = e.blocks
+            c["mode"][row] = e.mode
+            c["nlink"][row] = e.nlink
+            c["atime"][row] = e.atime
+            c["mtime"][row] = e.mtime
+            c["ctime"][row] = e.ctime
+            c["ost_idx"][row] = e.ost_idx
+            c["hsm_state"][row] = int(e.hsm_state)
+            c["archive_id"][row] = e.archive_id
+            c["owner"][row] = self.strings.intern(e.owner)
+            c["group"][row] = self.strings.intern(e.group)
+            c["pool"][row] = self.strings.intern(e.pool)
+            c["status"][row] = self.strings.intern(e.status)
+            c["dirty"][row] = 1 if e.dirty else 0
+            self._names[row] = e.name
+            self._paths[row] = e.path
+            self._xattrs[row] = dict(e.xattrs) if e.xattrs else None
+            self._stripes[row] = tuple(e.stripe_osts)
+            return old, self._row_delta(row)
+
+    def update_fields(self, fid: int, **fields) -> Optional[Tuple[Delta, Delta]]:
+        """Patch a subset of attributes; returns (old, new) deltas or None."""
+        with self.lock:
+            row = self._rows.get(fid)
+            if row is None:
+                return None
+            old = self._row_delta(row)
+            c = self._cols
+            for k, v in fields.items():
+                if k in ("name",):
+                    self._names[row] = v
+                elif k in ("path",):
+                    self._paths[row] = v
+                elif k == "xattrs":
+                    self._xattrs[row] = dict(v) if v else None
+                elif k == "stripe_osts":
+                    self._stripes[row] = tuple(v)
+                elif k in _STRING_FIELDS:
+                    c[k][row] = self.strings.intern(v)
+                elif k == "hsm_state":
+                    c[k][row] = int(v)
+                elif k == "type":
+                    c[k][row] = int(v)
+                elif k == "dirty":
+                    c[k][row] = 1 if v else 0
+                else:
+                    c[k][row] = v
+            return old, self._row_delta(row)
+
+    def remove(self, fid: int) -> Optional[Delta]:
+        with self.lock:
+            row = self._rows.pop(fid, None)
+            if row is None:
+                return None
+            old = self._row_delta(row)
+            self._valid[row] = False
+            self._names[row] = self._paths[row] = ""
+            self._xattrs[row] = None
+            self._stripes[row] = ()
+            self._free.append(row)
+            return old
+
+    def get(self, fid: int) -> Optional[Entry]:
+        with self.lock:
+            row = self._rows.get(fid)
+            if row is None:
+                return None
+            return self._entry_at(row)
+
+    def _entry_at(self, row: int) -> Entry:
+        c = self._cols
+        return Entry(
+            fid=int(c["fid"][row]), parent_fid=int(c["parent_fid"][row]),
+            name=self._names[row], path=self._paths[row],
+            type=FsType(int(c["type"][row])), size=int(c["size"][row]),
+            blocks=int(c["blocks"][row]), mode=int(c["mode"][row]),
+            nlink=int(c["nlink"][row]), atime=float(c["atime"][row]),
+            mtime=float(c["mtime"][row]), ctime=float(c["ctime"][row]),
+            ost_idx=int(c["ost_idx"][row]),
+            stripe_osts=self._stripes[row],
+            pool=self.strings.lookup(int(c["pool"][row])),
+            hsm_state=HsmState(int(c["hsm_state"][row])),
+            archive_id=int(c["archive_id"][row]),
+            owner=self.strings.lookup(int(c["owner"][row])),
+            group=self.strings.lookup(int(c["group"][row])),
+            status=self.strings.lookup(int(c["status"][row])),
+            xattrs=self._xattrs[row] or {},
+            dirty=bool(c["dirty"][row]),
+        )
+
+    # -- vectorized access ----------------------------------------------------
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Columnar views (copies) limited to valid rows, for vector queries."""
+        with self.lock:
+            valid = self._valid[: self._n]
+            out = {name: self._cols[name][: self._n][valid].copy()
+                   for name in self._cols}
+            idx = np.nonzero(valid)[0]
+            out["_paths"] = [self._paths[i] for i in idx]   # type: ignore
+            out["_names"] = [self._names[i] for i in idx]   # type: ignore
+            return out
+
+    def count(self) -> int:
+        with self.lock:
+            return len(self._rows)
+
+    def fids(self) -> List[int]:
+        with self.lock:
+            return list(self._rows.keys())
+
+
+class Catalog:
+    """Sharded catalog facade: routing, hooks, persistence, vector queries."""
+
+    def __init__(self, n_shards: int = 4, db_path: Optional[str] = None) -> None:
+        self.strings = StringTable()
+        self.shards = [CatalogShard(i, self.strings) for i in range(n_shards)]
+        self.n_shards = n_shards
+        self._hooks: List[Callable[[Optional[Delta], Optional[Delta]], None]] = []
+        self._entry_hooks: List[Callable[[Entry], None]] = []
+        self.db_path = db_path
+        self._db: Optional[sqlite3.Connection] = None
+        self._db_lock = threading.Lock()
+        if db_path:
+            self._open_db(db_path)
+
+    # -- persistence ----------------------------------------------------------
+    _SCHEMA = (
+        "CREATE TABLE IF NOT EXISTS entries ("
+        "fid INTEGER PRIMARY KEY, parent_fid INTEGER, name TEXT, path TEXT,"
+        "type INTEGER, size INTEGER, blocks INTEGER, owner TEXT, grp TEXT,"
+        "mode INTEGER, nlink INTEGER, atime REAL, mtime REAL, ctime REAL,"
+        "ost_idx INTEGER, pool TEXT, hsm_state INTEGER, archive_id INTEGER,"
+        "status TEXT, dirty INTEGER)"
+    )
+
+    def _open_db(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._db = sqlite3.connect(path, check_same_thread=False)
+        self._db.execute("PRAGMA journal_mode=WAL")
+        self._db.execute("PRAGMA synchronous=NORMAL")
+        self._db.execute(self._SCHEMA)
+        self._db.commit()
+
+    def _persist(self, entries: Sequence[Entry], removed: Sequence[int]) -> None:
+        if self._db is None:
+            return
+        with self._db_lock:
+            if entries:
+                self._db.executemany(
+                    "INSERT OR REPLACE INTO entries VALUES "
+                    "(?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+                    [(e.fid, e.parent_fid, e.name, e.path, int(e.type), e.size,
+                      e.blocks, e.owner, e.group, e.mode, e.nlink, e.atime,
+                      e.mtime, e.ctime, e.ost_idx, e.pool, int(e.hsm_state),
+                      e.archive_id, e.status, int(e.dirty)) for e in entries],
+                )
+            if removed:
+                self._db.executemany("DELETE FROM entries WHERE fid=?",
+                                     [(f,) for f in removed])
+            self._db.commit()   # durable before changelog ack
+
+    def load_from_db(self) -> int:
+        """Crash recovery: repopulate shards from sqlite. Returns #entries."""
+        if self._db is None:
+            return 0
+        n = 0
+        with self._db_lock:
+            cur = self._db.execute("SELECT * FROM entries")
+            rows = cur.fetchall()
+        for r in rows:
+            e = Entry(fid=r[0], parent_fid=r[1], name=r[2], path=r[3],
+                      type=FsType(r[4]), size=r[5], blocks=r[6], owner=r[7],
+                      group=r[8], mode=r[9], nlink=r[10], atime=r[11],
+                      mtime=r[12], ctime=r[13], ost_idx=r[14], pool=r[15],
+                      hsm_state=HsmState(r[16]), archive_id=r[17],
+                      status=r[18], dirty=bool(r[19]))
+            self.upsert(e, persist=False)
+            n += 1
+        return n
+
+    # -- hooks (stats aggregators, alerts) -------------------------------------
+    def add_delta_hook(self, fn: Callable[[Optional[Delta], Optional[Delta]], None]) -> None:
+        self._hooks.append(fn)
+
+    def add_entry_hook(self, fn: Callable[[Entry], None]) -> None:
+        """Entry-level hook (alerts need names/paths, not just deltas)."""
+        self._entry_hooks.append(fn)
+
+    def _fire(self, old: Optional[Delta], new: Optional[Delta]) -> None:
+        for fn in self._hooks:
+            fn(old, new)
+
+    # -- routing ----------------------------------------------------------------
+    def shard_of(self, fid: int) -> CatalogShard:
+        return self.shards[fid % self.n_shards]
+
+    # -- operations ---------------------------------------------------------------
+    def upsert(self, e: Entry, persist: bool = True) -> None:
+        old, new = self.shard_of(e.fid).upsert(e)
+        self._fire(old, new)
+        for fn in self._entry_hooks:
+            fn(e)
+        if persist:
+            self._persist([e], [])
+
+    def upsert_batch(self, entries: Sequence[Entry]) -> None:
+        """Apply a batch then durably commit — callers ack changelog after."""
+        for e in entries:
+            old, new = self.shard_of(e.fid).upsert(e)
+            self._fire(old, new)
+            for fn in self._entry_hooks:
+                fn(e)
+        self._persist(entries, [])
+
+    def update_fields(self, fid: int, **fields) -> bool:
+        res = self.shard_of(fid).update_fields(fid, **fields)
+        if res is None:
+            return False
+        self._fire(res[0], res[1])
+        if self._db is not None:
+            e = self.get(fid)
+            if e is not None:
+                self._persist([e], [])
+        return True
+
+    def remove(self, fid: int, persist: bool = True) -> bool:
+        old = self.shard_of(fid).remove(fid)
+        if old is None:
+            return False
+        self._fire(old, None)
+        if persist:
+            self._persist([], [fid])
+        return True
+
+    def get(self, fid: int) -> Optional[Entry]:
+        return self.shard_of(fid).get(fid)
+
+    def __len__(self) -> int:
+        return sum(s.count() for s in self.shards)
+
+    def entries(self) -> Iterator[Entry]:
+        for s in self.shards:
+            for fid in s.fids():
+                e = s.get(fid)
+                if e is not None:
+                    yield e
+
+    # -- vectorized queries ----------------------------------------------------
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Concatenate all shards' columns (the full 'table')."""
+        per_shard = [s.arrays() for s in self.shards]
+        out: Dict[str, np.ndarray] = {}
+        for name, _ in _NUMERIC_COLUMNS:
+            out[name] = np.concatenate([p[name] for p in per_shard]) \
+                if per_shard else np.zeros(0)
+        out["_paths"] = sum((p["_paths"] for p in per_shard), [])  # type: ignore
+        out["_names"] = sum((p["_names"] for p in per_shard), [])  # type: ignore
+        return out
+
+    def query_fids(self, mask_fn: Callable[[Dict[str, np.ndarray]], np.ndarray]) -> np.ndarray:
+        """Vectorized query: mask_fn(columns)->bool mask; returns matching fids."""
+        cols = self.arrays()
+        mask = mask_fn(cols)
+        return cols["fid"][mask]

@@ -1,0 +1,175 @@
+"""Transactional, persistent changelog streams — MDT ChangeLog analogue (C3).
+
+Contract reproduced from the paper (SII-C2):
+
+* records are appended to a per-MDT stream with monotonically increasing
+  sequence numbers and kept on persistent storage;
+* a consumer registers, reads batches, and **acks** a sequence number only
+  after the corresponding change has been committed to its own database;
+* records are purged only once acked, so no event is ever lost — even if the
+  consumer crashes mid-processing, unacked records are re-delivered on
+  restart.
+
+Persistence is an append-only JSONL file per stream (fsync on append batch)
+plus a tiny ack cursor file. DNE is modelled by running one stream per MDT.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from collections import deque
+from typing import Deque, Dict, Iterable, List, Optional
+
+from .types import ChangelogRecord, ChangelogType
+
+
+class ChangelogStream:
+    """One MDT's changelog: producer side (append) + consumer side (read/ack)."""
+
+    def __init__(self, mdt: int = 0, persist_dir: Optional[str] = None,
+                 fsync: bool = False) -> None:
+        self.mdt = mdt
+        self._lock = threading.Condition()
+        self._records: Deque[ChangelogRecord] = deque()
+        self._next_seq = 1
+        self._acked = 0                  # highest acked seq
+        self._read_cursor = 0            # highest seq handed to the consumer
+        self._persist_dir = persist_dir
+        self._fsync = fsync
+        self._fh = None
+        self._closed = False
+        if persist_dir:
+            os.makedirs(persist_dir, exist_ok=True)
+            self._log_path = os.path.join(persist_dir, f"changelog_mdt{mdt}.jsonl")
+            self._ack_path = os.path.join(persist_dir, f"changelog_mdt{mdt}.ack")
+            self._recover()
+            self._fh = open(self._log_path, "a", encoding="utf-8")
+
+    # -- persistence -----------------------------------------------------------
+    def _recover(self) -> None:
+        """Reload unacked records after a crash (paper: no event loss)."""
+        acked = 0
+        if os.path.exists(self._ack_path):
+            with open(self._ack_path, "r", encoding="utf-8") as f:
+                txt = f.read().strip()
+                acked = int(txt) if txt else 0
+        self._acked = acked
+        if os.path.exists(self._log_path):
+            with open(self._log_path, "r", encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    d = json.loads(line)
+                    rec = ChangelogRecord(
+                        seq=d["seq"], type=ChangelogType(d["type"]),
+                        fid=d["fid"], parent_fid=d.get("parent_fid", -1),
+                        name=d.get("name", ""), time=d.get("time", 0.0),
+                        uid=d.get("uid", ""), jobid=d.get("jobid", ""),
+                        mdt=self.mdt, attrs=d.get("attrs"))
+                    if rec.seq > acked:
+                        self._records.append(rec)
+                    self._next_seq = max(self._next_seq, rec.seq + 1)
+        # re-delivery: reader starts from the oldest unacked record
+        self._read_cursor = acked
+
+    def _persist_records(self, recs: List[ChangelogRecord]) -> None:
+        if self._fh is None:
+            return
+        for r in recs:
+            self._fh.write(json.dumps({
+                "seq": r.seq, "type": int(r.type), "fid": r.fid,
+                "parent_fid": r.parent_fid, "name": r.name, "time": r.time,
+                "uid": r.uid, "jobid": r.jobid, "attrs": r.attrs}) + "\n")
+        self._fh.flush()
+        if self._fsync:
+            os.fsync(self._fh.fileno())
+
+    # -- producer ----------------------------------------------------------------
+    def emit(self, type: ChangelogType, fid: int, **kw) -> ChangelogRecord:
+        with self._lock:
+            rec = ChangelogRecord(seq=self._next_seq, type=type, fid=fid,
+                                  mdt=self.mdt, **kw)
+            self._next_seq += 1
+            self._records.append(rec)
+            self._persist_records([rec])
+            self._lock.notify_all()
+            return rec
+
+    def emit_batch(self, recs: Iterable[ChangelogRecord]) -> None:
+        with self._lock:
+            out = []
+            for r in recs:
+                r.seq = self._next_seq
+                r.mdt = self.mdt
+                self._next_seq += 1
+                self._records.append(r)
+                out.append(r)
+            self._persist_records(out)
+            self._lock.notify_all()
+
+    # -- consumer -----------------------------------------------------------------
+    def read(self, max_records: int = 1024, timeout: Optional[float] = None
+             ) -> List[ChangelogRecord]:
+        """Read the next batch past the read cursor (does NOT ack)."""
+        with self._lock:
+            if timeout is not None:
+                self._lock.wait_for(
+                    lambda: self._closed or any(
+                        r.seq > self._read_cursor for r in self._records),
+                    timeout=timeout)
+            out = [r for r in self._records if r.seq > self._read_cursor]
+            out = out[:max_records]
+            if out:
+                self._read_cursor = out[-1].seq
+            return out
+
+    def ack(self, seq: int) -> None:
+        """Acknowledge every record up to ``seq``; they are then purged."""
+        with self._lock:
+            self._acked = max(self._acked, seq)
+            while self._records and self._records[0].seq <= self._acked:
+                self._records.popleft()
+            if self._persist_dir:
+                tmp = self._ack_path + ".tmp"
+                with open(tmp, "w", encoding="utf-8") as f:
+                    f.write(str(self._acked))
+                os.replace(tmp, self._ack_path)
+
+    def reset_cursor(self) -> None:
+        """Simulate consumer restart: unacked records are re-delivered."""
+        with self._lock:
+            self._read_cursor = self._acked
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(1 for r in self._records if r.seq > self._acked)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+            self._lock.notify_all()
+
+
+class ChangelogHub:
+    """All MDT streams of a (possibly DNE) filesystem."""
+
+    def __init__(self, n_mdts: int = 1, persist_dir: Optional[str] = None,
+                 fsync: bool = False) -> None:
+        self.streams: Dict[int, ChangelogStream] = {
+            i: ChangelogStream(i, persist_dir, fsync) for i in range(n_mdts)
+        }
+
+    def stream(self, mdt: int = 0) -> ChangelogStream:
+        return self.streams[mdt]
+
+    def total_pending(self) -> int:
+        return sum(s.pending() for s in self.streams.values())
+
+    def close(self) -> None:
+        for s in self.streams.values():
+            s.close()

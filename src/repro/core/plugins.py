@@ -1,0 +1,137 @@
+"""Shipped policy plugins (C10 — robinhood v3 architecture, Fig. 4).
+
+Each plugin is an action factory: given runtime handles it returns an
+``Action`` callable usable in a :class:`PolicyDefinition`. Administrators
+compose policies from these "with a few lines of configuration"; custom
+plugins are just new callables registered in :data:`PLUGIN_REGISTRY`.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Callable, Dict
+
+from .catalog import Catalog
+from .types import Entry, HsmState
+
+PluginFactory = Callable[..., Callable[[Entry, dict], bool]]
+PLUGIN_REGISTRY: Dict[str, PluginFactory] = {}
+
+
+def register_plugin(name: str) -> Callable[[PluginFactory], PluginFactory]:
+    def deco(fn: PluginFactory) -> PluginFactory:
+        PLUGIN_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+@register_plugin("purge")
+def purge_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
+    """Delete entries (classic cleanup policy)."""
+
+    def action(e: Entry, params: dict) -> bool:
+        fs.unlink(e.fid)
+        catalog.remove(e.fid)
+        return True
+
+    return action
+
+
+@register_plugin("rmdir_empty")
+def rmdir_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
+    """Remove old empty directories."""
+
+    def action(e: Entry, params: dict) -> bool:
+        if fs.readdir(e.fid):
+            return False
+        fs.unlink(e.fid)
+        catalog.remove(e.fid)
+        return True
+
+    return action
+
+
+@register_plugin("archive")
+def archive_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
+    def action(e: Entry, params: dict) -> bool:
+        fs.hsm_archive(e.fid, archive_id=params.get("archive_id", 1))
+        catalog.update_fields(e.fid, hsm_state=HsmState.ARCHIVED)
+        return True
+
+    return action
+
+
+@register_plugin("release")
+def release_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
+    def action(e: Entry, params: dict) -> bool:
+        fs.hsm_release(e.fid)
+        catalog.update_fields(e.fid, hsm_state=HsmState.RELEASED, blocks=0)
+        return True
+
+    return action
+
+
+@register_plugin("migrate_pool")
+def migrate_pool_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
+    """Internal data migration between OST pools (paper SIII-D: SSD<->HDD).
+
+    Re-stripes a file's data onto the target pool's OSTs (simulated move)
+    and updates pool/ost metadata — the 'data must be moved between pools of
+    storage resources according to site-specific policies' case.
+    """
+
+    def action(e: Entry, params: dict) -> bool:
+        target_pool = params.get("pool", "")
+        cands = fs.pools.get(target_pool)
+        if not cands:
+            return False
+        node = fs._nodes.get(e.fid)
+        if node is None:
+            return False
+        with fs._lock:
+            per = node.data_len // max(1, len(e.stripe_osts)) if e.stripe_osts else 0
+            for idx in e.stripe_osts:
+                fs.osts[idx].free(per)
+            n = min(fs.stripe_count, len(cands))
+            new_stripes = tuple(cands[i % len(cands)] for i in range(n))
+            per_new = node.data_len // max(1, len(new_stripes))
+            for idx in new_stripes:
+                fs.osts[idx].alloc(per_new)
+            node.entry.stripe_osts = new_stripes
+            node.entry.ost_idx = new_stripes[0] if new_stripes else -1
+            node.entry.pool = target_pool
+        catalog.update_fields(e.fid, pool=target_pool,
+                              ost_idx=new_stripes[0] if new_stripes else -1,
+                              stripe_osts=new_stripes)
+        return True
+
+    return action
+
+
+@register_plugin("checksum")
+def checksum_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
+    """Data-integrity check pass (paper SIII-D 'data integrity checks').
+
+    The sim has no payload bytes; we verify metadata consistency instead:
+    catalog size/blocks must match FS truth.
+    """
+
+    def action(e: Entry, params: dict) -> bool:
+        truth = fs.stat(e.fid)
+        if truth is None:
+            return False
+        ok = truth.size == e.size
+        catalog.update_fields(e.fid, status="checked" if ok else "corrupt")
+        return ok
+
+    return action
+
+
+@register_plugin("tag_status")
+def tag_status_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
+    """Generic post-processing: set the v3 status field."""
+
+    def action(e: Entry, params: dict) -> bool:
+        return catalog.update_fields(e.fid, status=params.get("status", "seen"))
+
+    return action

@@ -1,0 +1,217 @@
+"""Generic policy engine (C5, C7, C10) — robinhood v3 plugin architecture.
+
+A *policy* is: a **scope** (criteria restricting which entries it may ever
+touch), ordered **rules** (criteria -> parameters), an **action** (plugin
+callable), **triggers** (periodic / usage-watermark / manual), and run
+options (sort order, rate limits, target volume/count).
+
+This is the paper's v3 "generic policies": archive/purge/rmdir are just
+shipped plugin configurations; users register custom actions the same way
+(see ``plugins.py``). Watermark triggers reproduce the per-OST purge (C7):
+when an OST exceeds ``high_wm``, the engine runs the policy restricted to
+entries striped on that OST until usage is projected below ``low_wm``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .catalog import Catalog
+from .policy import ALWAYS, Expr, parse_expr
+from .types import Entry, FsType
+
+Action = Callable[[Entry, dict], bool]   # returns True on success
+
+
+@dataclasses.dataclass
+class Rule:
+    name: str
+    condition: Expr
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class PolicyDefinition:
+    name: str
+    action: Action
+    scope: Expr = dataclasses.field(default_factory=lambda: ALWAYS)
+    rules: List[Rule] = dataclasses.field(default_factory=list)
+    # run behaviour
+    sort_by: str = "atime"          # LRU by default, like robinhood purge
+    sort_desc: bool = False
+    max_actions_per_run: int = 0    # 0 = unlimited
+    max_volume_per_run: int = 0     # 0 = unlimited (bytes)
+    n_threads: int = 1
+    dry_run: bool = False
+
+    @classmethod
+    def from_config(cls, name: str, action: Action, scope: str = "true",
+                    rules: Optional[Sequence[Tuple[str, str, dict]]] = None,
+                    **kw) -> "PolicyDefinition":
+        """Build from string criteria — 'a few lines of configuration'."""
+        pd = cls(name=name, action=action, scope=parse_expr(scope), **kw)
+        for rname, cond, params in rules or []:
+            pd.rules.append(Rule(rname, parse_expr(cond), params))
+        return pd
+
+
+@dataclasses.dataclass
+class RunReport:
+    policy: str
+    matched: int = 0
+    succeeded: int = 0
+    failed: int = 0
+    volume: int = 0          # bytes touched (e.g. freed / archived)
+    elapsed: float = 0.0
+    trigger: str = "manual"
+
+
+class UsageWatermarkTrigger:
+    """Per-resource usage trigger (OST / pool / HBM page pool).
+
+    ``usage_fn()`` returns a list of (resource_key, used, capacity); when
+    ``used/capacity`` exceeds ``high_pct``, the policy runs with a target of
+    freeing down to ``low_pct``, restricted by ``restrict_fn(resource_key)``.
+    """
+
+    def __init__(self, usage_fn: Callable[[], List[Tuple[object, int, int]]],
+                 high_pct: float, low_pct: float,
+                 restrict_fn: Callable[[object], Expr]) -> None:
+        self.usage_fn = usage_fn
+        self.high_pct = high_pct
+        self.low_pct = low_pct
+        self.restrict_fn = restrict_fn
+
+    def check(self) -> List[Tuple[object, Expr, int]]:
+        """Returns (resource, extra_criteria, bytes_to_free) per firing."""
+        out = []
+        for key, used, cap in self.usage_fn():
+            if cap <= 0:
+                continue
+            if 100.0 * used / cap >= self.high_pct:
+                target = used - int(cap * self.low_pct / 100.0)
+                out.append((key, self.restrict_fn(key), target))
+        return out
+
+
+class PolicyEngine:
+    """Evaluates policies over the catalog and applies actions."""
+
+    def __init__(self, catalog: Catalog, clock: Callable[[], float] = time.time
+                 ) -> None:
+        self.catalog = catalog
+        self.clock = clock
+        self.policies: Dict[str, PolicyDefinition] = {}
+        self.triggers: List[Tuple[str, UsageWatermarkTrigger]] = []
+        self.history: List[RunReport] = []
+        self._lock = threading.Lock()
+
+    def register(self, policy: PolicyDefinition) -> None:
+        self.policies[policy.name] = policy
+
+    def add_watermark_trigger(self, policy_name: str,
+                              trigger: UsageWatermarkTrigger) -> None:
+        self.triggers.append((policy_name, trigger))
+
+    # -- matching -----------------------------------------------------------------
+    def _match(self, policy: PolicyDefinition, extra: Optional[Expr],
+               now: float) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        cols = self.catalog.arrays()
+        mask = policy.scope.mask(cols, self.catalog.strings, now)
+        if policy.rules:
+            rule_mask = np.zeros_like(mask)
+            for rule in policy.rules:
+                rule_mask |= rule.condition.mask(cols, self.catalog.strings, now)
+            mask &= rule_mask
+        if extra is not None:
+            mask &= extra.mask(cols, self.catalog.strings, now)
+        return mask, cols
+
+    def _rule_params(self, policy: PolicyDefinition, e: Entry, now: float) -> dict:
+        for rule in policy.rules:
+            if rule.condition.evaluate(e, now):
+                return rule.params
+        return {}
+
+    # -- execution -----------------------------------------------------------------
+    def run(self, policy_name: str, extra_criteria: Optional[Expr] = None,
+            target_volume: int = 0, trigger: str = "manual") -> RunReport:
+        """One policy run: match -> sort -> apply until targets met."""
+        policy = self.policies[policy_name]
+        now = self.clock()
+        t0 = time.perf_counter()
+        mask, cols = self._match(policy, extra_criteria, now)
+        fids = cols["fid"][mask]
+        report = RunReport(policy=policy_name, matched=int(fids.size),
+                           trigger=trigger)
+
+        if fids.size:
+            sort_col = cols[policy.sort_by][mask]
+            order = np.argsort(sort_col)
+            if policy.sort_desc:
+                order = order[::-1]
+            fids = fids[order]
+
+        budget_volume = target_volume or policy.max_volume_per_run
+        budget_count = policy.max_actions_per_run
+
+        work = list(fids.tolist())
+        work_lock = threading.Lock()
+        stop = threading.Event()
+
+        def runner() -> None:
+            while not stop.is_set():
+                with work_lock:
+                    if not work:
+                        return
+                    fid = work.pop(0)
+                e = self.catalog.get(fid)
+                if e is None:
+                    continue
+                params = self._rule_params(policy, e, now)
+                size = e.size
+                if policy.dry_run:
+                    ok = True
+                else:
+                    try:
+                        ok = policy.action(e, params)
+                    except Exception:
+                        ok = False
+                with self._lock:
+                    if ok:
+                        report.succeeded += 1
+                        report.volume += size
+                    else:
+                        report.failed += 1
+                    if budget_volume and report.volume >= budget_volume:
+                        stop.set()
+                    if budget_count and report.succeeded >= budget_count:
+                        stop.set()
+
+        threads = [threading.Thread(target=runner, daemon=True)
+                   for _ in range(max(1, policy.n_threads))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        report.elapsed = time.perf_counter() - t0
+        self.history.append(report)
+        return report
+
+    def check_triggers(self) -> List[RunReport]:
+        """Fire any watermark triggers whose threshold is exceeded (C7)."""
+        reports = []
+        for policy_name, trig in self.triggers:
+            for key, extra, target in trig.check():
+                reports.append(self.run(policy_name, extra_criteria=extra,
+                                        target_volume=target,
+                                        trigger=f"watermark:{key}"))
+        return reports
+
+    def run_all_periodic(self) -> List[RunReport]:
+        return [self.run(name) for name in self.policies]

@@ -1,0 +1,105 @@
+"""`rbh-report` / `rbh-find` / `rbh-du` clones (C6, C9) — answer from the DB.
+
+All queries here run against the catalog (vectorized column masks) or the
+pre-aggregated stats — never against the filesystem, which is the paper's
+point: *"all these metadata queries do not generate extra load on the
+filesystem"*.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .catalog import Catalog
+from .policy import Expr, parse_expr
+from .stats import StatsAggregator
+from .types import FsType, format_size
+
+
+class Reports:
+    def __init__(self, catalog: Catalog, stats: Optional[StatsAggregator] = None,
+                 clock=time.time) -> None:
+        self.catalog = catalog
+        self.stats = stats
+        self.clock = clock
+
+    # -- rbh-report ---------------------------------------------------------------
+    def report_user(self, user: str) -> List[dict]:
+        """O(1) per-user summary (pre-aggregated)."""
+        if self.stats is None:
+            raise RuntimeError("stats aggregator not attached")
+        return self.stats.report_user(user)
+
+    def format_user_report(self, user: str) -> str:
+        rows = self.report_user(user)
+        lines = ["user, type, count, spc_used, avg_size"]
+        for r in rows:
+            lines.append(f"{r['user']}, {r['type']}, {r['count']}, "
+                         f"{format_size(r['spc_used'])}, "
+                         f"{format_size(r['avg_size'])}")
+        return "\n".join(lines)
+
+    # -- rbh-find -----------------------------------------------------------------
+    def find(self, criteria: str, limit: int = 0) -> List[str]:
+        """DB-backed `find`: returns matching paths."""
+        expr = parse_expr(criteria)
+        cols = self.catalog.arrays()
+        mask = expr.mask(cols, self.catalog.strings, self.clock())
+        idx = np.nonzero(mask)[0]
+        if limit:
+            idx = idx[:limit]
+        paths = cols["_paths"]
+        return [paths[i] for i in idx]
+
+    # -- rbh-du --------------------------------------------------------------------
+    def du(self, path_prefix: str) -> dict:
+        """DB-backed `du -s`: aggregate a subtree with one vector pass."""
+        cols = self.catalog.arrays()
+        prefix = path_prefix.rstrip("/")
+        paths = cols["_paths"]
+        mask = np.fromiter(
+            (p == prefix or p.startswith(prefix + "/") for p in paths),
+            dtype=bool, count=len(paths))
+        file_mask = mask & (cols["type"] == int(FsType.FILE))
+        return {
+            "count": int(mask.sum()),
+            "files": int(file_mask.sum()),
+            "volume": int(cols["size"][file_mask].sum()),
+            "spc_used": int(cols["blocks"][file_mask].sum()),
+        }
+
+    # -- top-N listings (paper SII-B3) ----------------------------------------------
+    def top_files(self, by: str = "size", k: int = 10,
+                  desc: bool = True) -> List[dict]:
+        cols = self.catalog.arrays()
+        fidx = np.nonzero(cols["type"] == int(FsType.FILE))[0]
+        vals = cols[by][fidx]
+        if vals.size == 0:
+            return []
+        k = min(k, vals.size)
+        order = np.argsort(vals, kind="stable")
+        order = order[::-1][:k] if desc else order[:k]
+        paths = cols["_paths"]
+        return [{"path": paths[fidx[o]], by: float(vals[o]),
+                 "fid": int(cols["fid"][fidx[o]])} for o in order]
+
+    def top_dirs_by_count(self, k: int = 10) -> List[dict]:
+        """Top directories by direct child count (one vector groupby)."""
+        cols = self.catalog.arrays()
+        parents = cols["parent_fid"]
+        uniq, counts = np.unique(parents[parents >= 0], return_counts=True)
+        if uniq.size == 0:
+            return []
+        k = min(k, uniq.size)
+        top = np.argsort(counts)[::-1][:k]
+        out = []
+        for i in top:
+            e = self.catalog.get(int(uniq[i]))
+            out.append({"path": e.path if e else f"fid:{int(uniq[i])}",
+                        "children": int(counts[i])})
+        return out
+
+    def oldest_files(self, k: int = 10) -> List[dict]:
+        return self.top_files(by="atime", k=k, desc=False)

@@ -1,0 +1,7 @@
+"""Filesystem backends: simulated Lustre (OSTs/pools/DNE/HSM) and POSIX."""
+from .base import FsBackend
+from .lustrefs import LustreSim, Ost
+from .posixfs import PosixFs
+from .hsm_backend import HsmBackend
+
+__all__ = ["FsBackend", "LustreSim", "Ost", "PosixFs", "HsmBackend"]

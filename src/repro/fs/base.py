@@ -1,0 +1,18 @@
+"""Minimal backend interface the scanner and pipeline consume."""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Protocol, Tuple
+
+from ..core.types import Entry
+
+
+class FsBackend(Protocol):
+    """What Robinhood needs from a filesystem: readdir + stat, by fid."""
+
+    def root_fid(self) -> int: ...
+
+    def readdir(self, fid: int) -> List[Tuple[str, int]]:
+        """(name, child_fid) pairs of a directory."""
+        ...
+
+    def stat(self, fid: int) -> Optional[Entry]: ...

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel directory ships three files:
+
+* ``kernel.py`` — the ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
+  (TPU is the target; validated on CPU with ``interpret=True``);
+* ``ops.py``    — the jit'd public wrapper (dispatches kernel on TPU,
+  interpret-mode kernel or the oracle elsewhere);
+* ``ref.py``    — the pure-jnp oracle the kernel is tested against.
+
+Kernels:
+
+* ``policy_scan``     — columnar predicate-program evaluation + aggregation
+  (the TPU-native analogue of the paper's DB table scan, C1+C6);
+* ``paged_attention`` — decode attention over non-contiguous KV pages (the
+  hot tier of the HSM-style KV cache);
+* ``rglru_scan``      — RG-LRU sequential recurrence (recurrentgemma);
+* ``rwkv6_step``      — RWKV6 decode state update.
+"""

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: decode attention over HSM-tiered KV pages.
+
+Serving hot spot of the Robinhood adaptation: the hot tier of the KV cache
+lives as fixed-size pages in a global pool (kvcache/paged.py); sequences
+reference pages through a page table, so K/V for one sequence are NOT
+contiguous in HBM. This kernel walks the page list with an online-softmax
+accumulator, one (page, kv-head-group) block at a time.
+
+Tiling:
+* grid = (B, max_pages): each step processes one page of one sequence;
+* q block (1, H, hd) VMEM — revisited across the page axis;
+* page K/V blocks (1, P, K, hd) VMEM, selected through the page table via
+  the BlockSpec index_map (scalar-prefetch style indirection: the page id
+  lookup happens at block-fetch time, the kernel body never sees HBM);
+* accumulators (m, l, acc) carried in VMEM across grid steps of the same
+  sequence (axis 1 is the reduction axis).
+
+Dims: hd is lane-aligned (128/256 for the assigned archs); P defaults to
+64 sublanes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _paged_attn_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, page_size: int, G: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page_id = pt_ref[b, j]
+    length = len_ref[b]
+    valid_page = page_id >= 0
+
+    q = q_ref[0].astype(jnp.float32)              # (H, hd)
+    hd = q.shape[-1]
+    k = k_ref[0].astype(jnp.float32)              # (P, K, hd)
+    v = v_ref[0].astype(jnp.float32)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=1)              # (P, H, hd)
+        v = jnp.repeat(v, G, axis=1)
+
+    s = jnp.einsum("hd,phd->hp", q / jnp.sqrt(float(hd)), k)  # (H, P)
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    ok = (pos < length) & valid_page
+    s = jnp.where(ok, s, -1e30)
+
+    m_prev, l_prev, acc_prev = m_ref[0], l_ref[0], acc_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))          # (H,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(s > -0.5e30, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * corr[:, None] + jnp.einsum("hp,phd->hd", p, v)
+    m_ref[0], l_ref[0], acc_ref[0] = m_new, l_new, acc_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[0] / jnp.maximum(l_ref[0], 1e-20)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B,H,hd); pages: (n_pages,P,K,hd); table: (B,max_pages) int32."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, H, hd = q.shape
+    n_pages, P, K, _ = k_pages.shape
+    G = H // K
+    max_pages = page_table.shape[1]
+
+    kernel = functools.partial(_paged_attn_kernel, page_size=P, G=G)
+
+    def page_map(b, j, pt, ln):
+        return (jnp.maximum(pt[b, j], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j, pt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, P, K, hd), page_map),
+            pl.BlockSpec((1, P, K, hd), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, j, pt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, H), jnp.float32),        # m
+            pltpu.VMEM((1, H), jnp.float32),        # l
+            pltpu.VMEM((1, H, hd), jnp.float32),    # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

@@ -1,0 +1,22 @@
+"""Public paged-attention op (kernel on TPU / interpret elsewhere)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import paged_attention as _kernel
+from .ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def paged_attention(q, k_pages, v_pages, page_table, lengths,
+                    use_kernel: bool = True):
+    if not use_kernel:
+        return paged_attention_ref(q, k_pages, v_pages, page_table, lengths)
+    return _kernel(q, k_pages, v_pages, page_table, lengths,
+                   interpret=not _on_tpu())

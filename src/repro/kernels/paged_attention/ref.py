@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array
+                        ) -> jax.Array:
+    """Decode attention over a paged KV pool.
+
+    q:          (B, H, hd)            — one query token per sequence
+    k_pages:    (n_pages, P, K, hd)   — global page pool (P = page size)
+    v_pages:    (n_pages, P, K, hd)
+    page_table: (B, max_pages) int32  — page ids per sequence, -1 = unused
+    lengths:    (B,) int32            — tokens in each sequence's cache
+    Returns (B, H, hd). GQA: H = K * G.
+    """
+    B, H, hd = q.shape
+    n_pages, P, K, _ = k_pages.shape
+    G = H // K
+    max_pages = page_table.shape[1]
+
+    # gather each sequence's pages -> contiguous (B, max_pages*P, K, hd)
+    safe_ids = jnp.maximum(page_table, 0)
+    k_seq = k_pages[safe_ids]                  # (B, max_pages, P, K, hd)
+    v_seq = v_pages[safe_ids]
+    k_seq = k_seq.reshape(B, max_pages * P, K, hd)
+    v_seq = v_seq.reshape(B, max_pages * P, K, hd)
+    if G > 1:
+        k_seq = jnp.repeat(k_seq, G, axis=2)
+        v_seq = jnp.repeat(v_seq, G, axis=2)
+
+    pos = jnp.arange(max_pages * P)[None, :]                # (1, L)
+    page_valid = jnp.repeat(page_table >= 0, P, axis=1)     # (B, L)
+    valid = (pos < lengths[:, None]) & page_valid
+
+    s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32) / jnp.sqrt(float(hd)),
+                   k_seq.astype(jnp.float32))
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    p = jnp.where(s > -0.5e30, p, 0.0)
+    o = jnp.einsum("bhl,blhd->bhd", p, v_seq.astype(jnp.float32))
+    return (o / jnp.maximum(p.sum(-1)[..., None], 1e-20)).astype(q.dtype)

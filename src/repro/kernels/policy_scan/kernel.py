@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: fused columnar predicate scan + aggregation.
+
+The TPU-native analogue of Robinhood's MySQL table scan (paper C1) fused
+with its on-the-fly aggregation (C6): one pass through the entry table
+evaluates a postfix predicate program and accumulates count / volume /
+spc_used / size-profile histogram — without materializing intermediate
+masks in HBM.
+
+Tiling: the entry table is columnar f32[n_cols, N]; the grid walks row
+tiles of ``tile`` entries (lane-dim aligned to 128). Each grid step holds a
+(n_cols, tile) block in VMEM, evaluates the program on the tile with a
+small in-register stack, emits the tile's match mask, and accumulates the
+aggregate vector into a (1, N_AGG) accumulator block (revisited by every
+grid step — standard Pallas reduction pattern).
+
+The program (ops/colidx/operands) rides in SMEM-like small blocks; P is
+static (padded with NOPs), so the instruction loop fully unrolls into
+vector selects — no scalar branching on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import N_AGG
+
+LANE = 128
+# static python floats (array constants cannot be captured by a kernel)
+_EDGE_VALS = (0.0, 1.0, 32.0, float(1 << 10), float(32 << 10),
+              float(1 << 20), float(32 << 20), float(1 << 30),
+              float(32 << 30), float(1 << 40))
+
+
+def _policy_scan_kernel(ops_ref, colidx_ref, operands_ref, cols_ref,
+                        mask_ref, agg_ref, *, n_instr: int, max_stack: int,
+                        size_col: int, blocks_col: int, valid_col: int):
+    step = pl.program_id(0)
+
+    cols = cols_ref[...]                       # (n_cols, tile) f32 in VMEM
+    tile = cols.shape[1]
+
+    # --- unrolled postfix-program evaluation on the tile ------------------
+    stack = jnp.zeros((max_stack, tile), jnp.float32)
+    sp = jnp.zeros((), jnp.int32)
+    for i in range(n_instr):                   # static unroll
+        op = ops_ref[i]
+        col = colidx_ref[i]
+        val = operands_ref[i]
+        vec = jax.lax.dynamic_index_in_dim(cols, col, axis=0,
+                                           keepdims=False)
+        cmps = jnp.stack([
+            (vec == val), (vec != val), (vec > val), (vec >= val),
+            (vec < val), (vec <= val)], axis=0).astype(jnp.float32)
+        cmp = jax.lax.dynamic_index_in_dim(cmps, jnp.clip(op, 0, 5), axis=0,
+                                           keepdims=False)
+        a = jax.lax.dynamic_index_in_dim(stack, jnp.maximum(sp - 1, 0),
+                                         axis=0, keepdims=False)
+        b = jax.lax.dynamic_index_in_dim(stack, jnp.maximum(sp - 2, 0),
+                                         axis=0, keepdims=False)
+        is_cmp = op < 6
+        is_and = op == 6
+        is_or = op == 7
+        is_not = op == 8
+        is_nop = op < 0
+        new_val = jnp.where(is_cmp, cmp,
+                            jnp.where(is_and, a * b,
+                                      jnp.where(is_or, jnp.clip(a + b, 0, 1),
+                                                1.0 - a)))
+        write_pos = jnp.where(is_cmp, sp, jnp.where(is_not, sp - 1, sp - 2))
+        write_pos = jnp.clip(write_pos, 0, max_stack - 1)
+        written = jax.lax.dynamic_update_index_in_dim(
+            stack, new_val, write_pos, axis=0)
+        stack = jnp.where(is_nop, stack, written)
+        sp = jnp.where(is_nop, sp,
+                       jnp.where(is_cmp, sp + 1,
+                                 jnp.where(is_not, sp, sp - 1)))
+
+    mask = jax.lax.dynamic_index_in_dim(stack, jnp.maximum(sp - 1, 0),
+                                        axis=0, keepdims=False)
+    if valid_col >= 0:
+        mask = mask * cols[valid_col]
+    mask_ref[...] = mask[None, :]
+
+    # --- fused aggregation -------------------------------------------------
+    size = cols[size_col]
+    spc = cols[blocks_col]
+    count = jnp.sum(mask)
+    volume = jnp.sum(mask * size)
+    spc_used = jnp.sum(mask * spc)
+    bucket = sum((size >= e).astype(jnp.int32) for e in _EDGE_VALS) - 1
+    bucket = jnp.clip(bucket, 0, 9)
+    iota10 = jax.lax.broadcasted_iota(jnp.int32, (10, tile), 0)
+    onehot = (bucket[None, :] == iota10).astype(jnp.float32)
+    hist = onehot @ mask                       # (10,)
+    any_match = jnp.max(mask)
+    agg = jnp.concatenate([jnp.stack([count, volume, spc_used]), hist,
+                           any_match[None]])            # (N_AGG,)
+
+    @pl.when(step == 0)
+    def _init():
+        agg_ref[...] = jnp.zeros_like(agg_ref)
+
+    prev = agg_ref[0, :]
+    acc = prev + agg
+    # any_match is a max-, not sum-, accumulator
+    agg_ref[0, :] = acc.at[N_AGG - 1].set(jnp.maximum(prev[N_AGG - 1],
+                                                      any_match))
+
+
+def policy_scan_pallas(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
+                       operands: jax.Array, *, size_col: int = 0,
+                       blocks_col: int = 1, valid_col: int = -1,
+                       tile: int = 8 * LANE, max_stack: int = 8,
+                       interpret: bool = True
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """cols: (n_cols, N) f32, N % tile == 0. Returns (mask (N,), agg)."""
+    n_cols, n = cols.shape
+    assert n % tile == 0, f"N={n} must be padded to tile={tile}"
+    grid = (n // tile,)
+    n_instr = int(ops.shape[0])
+
+    kernel = functools.partial(
+        _policy_scan_kernel, n_instr=n_instr, max_stack=max_stack,
+        size_col=size_col, blocks_col=blocks_col, valid_col=valid_col)
+
+    mask, agg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_instr,), lambda i: (0,)),       # ops
+            pl.BlockSpec((n_instr,), lambda i: (0,)),       # colidx
+            pl.BlockSpec((n_instr,), lambda i: (0,)),       # operands
+            pl.BlockSpec((n_cols, tile), lambda i: (0, i)),  # column tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),       # mask
+            pl.BlockSpec((1, N_AGG), lambda i: (0, 0)),      # aggregates
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, N_AGG), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ops, colidx, operands, cols)
+    return mask[0], agg[0]

@@ -1,0 +1,76 @@
+"""Public policy-scan op: pads, dispatches kernel/oracle, unpads."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import LANE, policy_scan_pallas
+from .ref import N_AGG, policy_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("size_col", "blocks_col", "valid_col",
+                                   "use_kernel", "tile"))
+def policy_scan(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
+                operands: jax.Array, size_col: int = 0, blocks_col: int = 1,
+                valid_col: int = -1, use_kernel: bool = True,
+                tile: int = 8 * LANE) -> Tuple[jax.Array, jax.Array]:
+    """Evaluate a predicate program over a columnar table + aggregates.
+
+    cols: (n_cols, N) f32. Returns (mask (N,) f32, agg (N_AGG,) f32).
+    Rows are padded to the tile size with an all-invalid pad (mask forced 0
+    via a validity column the wrapper appends when ``valid_col`` < 0).
+    """
+    n_cols, n = cols.shape
+    pad = (-n) % tile
+    if valid_col < 0:
+        valid = jnp.ones((1, n), jnp.float32)
+        cols = jnp.concatenate([cols, valid], axis=0)
+        valid_col = n_cols
+        n_cols += 1
+    if pad:
+        cols = jnp.pad(cols, ((0, 0), (0, pad)))
+    mask, agg = policy_scan_pallas(
+        cols, ops.astype(jnp.int32), colidx.astype(jnp.int32),
+        operands.astype(jnp.float32), size_col=size_col,
+        blocks_col=blocks_col, valid_col=valid_col, tile=tile,
+        interpret=not _on_tpu()) if use_kernel else policy_scan_ref(
+        cols, ops.astype(jnp.int32), colidx.astype(jnp.int32),
+        operands.astype(jnp.float32), size_col=size_col,
+        blocks_col=blocks_col, valid_col=valid_col)
+    return mask[:n], agg
+
+
+def scan_catalog(catalog, expr, now: float, use_kernel: bool = True
+                 ) -> Tuple[np.ndarray, dict]:
+    """Run a core.policy expression over a Catalog via the kernel path.
+
+    Only numeric/categorical predicates compile to the kernel program;
+    glob predicates raise PolicyError (callers fall back to Expr.mask).
+    Returns (matching fids, aggregate dict).
+    """
+    from ...core.policy import KERNEL_COLUMNS, compile_program
+    arrays = catalog.arrays()
+    ops, colidx, operands = compile_program(expr, catalog.strings, now)
+    cols = jnp.stack([jnp.asarray(arrays[c], jnp.float32)
+                      for c in KERNEL_COLUMNS], axis=0)
+    size_col = KERNEL_COLUMNS.index("size")
+    blocks_col = KERNEL_COLUMNS.index("blocks")
+    mask, agg = policy_scan(cols, jnp.asarray(ops), jnp.asarray(colidx),
+                            jnp.asarray(operands), size_col=size_col,
+                            blocks_col=blocks_col, use_kernel=use_kernel)
+    mask_np = np.asarray(mask) > 0.5
+    agg_np = np.asarray(agg)
+    return arrays["fid"][mask_np], {
+        "count": float(agg_np[0]), "volume": float(agg_np[1]),
+        "spc_used": float(agg_np[2]),
+        "size_profile": agg_np[3:13].tolist(),
+        "any_match": bool(agg_np[13] > 0.5),
+    }

@@ -1,0 +1,92 @@
+"""Pure-jnp oracle for the columnar policy-scan kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+N_AGG = 14   # count, volume, spc_used, 10 size-profile buckets, matched_max
+
+# size-profile bucket edges (log-ish, matches core.types.SIZE_PROFILE_EDGES)
+_EDGES = jnp.array([0, 1, 32, 1 << 10, 32 << 10, 1 << 20, 32 << 20, 1 << 30,
+                    32 << 30, 1 << 40], dtype=jnp.float32)
+
+# opcodes (shared with core.policy)
+OP_EQ, OP_NE, OP_GT, OP_GE, OP_LT, OP_LE, OP_AND, OP_OR, OP_NOT = range(9)
+OP_NOP = -1
+
+
+def eval_program(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
+                 operands: jax.Array, max_stack: int = 8) -> jax.Array:
+    """Evaluate a postfix predicate program.
+
+    cols: (n_cols, N) f32 columnar attributes; ops/colidx/operands: (P,)
+    program (OP_NOP padded). Returns (N,) f32 mask in {0, 1}.
+    """
+    n = cols.shape[1]
+    stack = jnp.zeros((max_stack, n), dtype=jnp.float32)
+    sp = jnp.zeros((), jnp.int32)
+
+    def step(carry, instr):
+        stack, sp = carry
+        op, col, val = instr
+        vec = jnp.take(cols, col, axis=0)                   # (N,)
+        cmps = jnp.stack([
+            (vec == val), (vec != val), (vec > val), (vec >= val),
+            (vec < val), (vec <= val)], axis=0).astype(jnp.float32)
+        cmp = jnp.take(cmps, jnp.clip(op, 0, 5), axis=0)
+        a = jnp.take(stack, jnp.maximum(sp - 1, 0), axis=0)
+        b = jnp.take(stack, jnp.maximum(sp - 2, 0), axis=0)
+        is_cmp = op < 6
+        is_and = op == OP_AND
+        is_or = op == OP_OR
+        is_not = op == OP_NOT
+        is_nop = op < 0
+        # value written and its position
+        new_val = jnp.where(is_cmp, cmp,
+                            jnp.where(is_and, a * b,
+                                      jnp.where(is_or,
+                                                jnp.clip(a + b, 0, 1),
+                                                1.0 - a)))
+        write_pos = jnp.where(is_cmp, sp,
+                              jnp.where(is_not, sp - 1, sp - 2))
+        write_pos = jnp.clip(write_pos, 0, max_stack - 1)
+        new_stack = jnp.where(is_nop, stack,
+                              stack.at[write_pos].set(new_val))
+        new_sp = jnp.where(is_nop, sp,
+                           jnp.where(is_cmp, sp + 1,
+                                     jnp.where(is_not, sp, sp - 1)))
+        return (new_stack, new_sp), None
+
+    (stack, sp), _ = jax.lax.scan(step, (stack, sp),
+                                  (ops, colidx, operands))
+    return jnp.take(stack, jnp.maximum(sp - 1, 0), axis=0)
+
+
+def policy_scan_ref(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
+                    operands: jax.Array, size_col: int = 0,
+                    blocks_col: int = 1, valid_col: int = -1
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: (mask (N,) f32, aggregates (N_AGG,) f32).
+
+    Aggregates: [count, volume, spc_used, hist0..hist9, any_match].
+    ``valid_col``: column of 0/1 row validity (-1 = all valid).
+    """
+    mask = eval_program(cols, ops, colidx, operands)
+    if valid_col >= 0:
+        mask = mask * cols[valid_col]
+    size = cols[size_col]
+    spc = cols[blocks_col]
+    count = jnp.sum(mask)
+    volume = jnp.sum(mask * size)
+    spc_used = jnp.sum(mask * spc)
+    # size-profile histogram of matched rows
+    bucket = jnp.sum((size[None, :] >= _EDGES[:, None]).astype(jnp.int32),
+                     axis=0) - 1
+    bucket = jnp.clip(bucket, 0, 9)
+    hist = jnp.zeros((10,), jnp.float32).at[bucket].add(mask)
+    any_match = jnp.max(mask)
+    agg = jnp.concatenate([jnp.stack([count, volume, spc_used]), hist,
+                           any_match[None]])
+    return mask, agg

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: RG-LRU diagonal linear recurrence (recurrentgemma).
+
+The pure-JAX path uses ``jax.lax.associative_scan`` (log-depth, but
+materializes O(log S) intermediate (B,S,R) tensors in HBM). On TPU the
+recurrence is better served by a sequential in-VMEM loop: each grid step
+owns a (block_s, r_tile) tile of the sequence, the carry h lives in a VMEM
+scratch accumulator, and HBM traffic is exactly one read of (log_a, b) and
+one write of h — the memory-roofline optimum.
+
+Grid: (B, R // r_tile, S // block_s); the time loop runs inside the kernel
+over ``block_s`` steps (sublane-dim), with the lane dim carrying r_tile
+channels (128-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rglru_kernel(h0_ref, la_ref, b_ref, h_ref, carry_ref, *, block_s: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        carry_ref[...] = h0_ref[...]
+
+    h = carry_ref[0]                                   # (r_tile,)
+    la = la_ref[0]                                     # (block_s, r_tile)
+    bb = b_ref[0]
+
+    def step(t, h):
+        h_new = jnp.exp(la[t]) * h + bb[t]
+        h_ref[0, t, :] = h_new
+        return h_new
+
+    h = jax.lax.fori_loop(0, block_s, step, h)
+    carry_ref[0] = h
+
+
+def rglru_pallas(log_a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                 r_tile: int = 128, block_s: int = 64,
+                 interpret: bool = True) -> jax.Array:
+    """log_a, b: (B, S, R) f32; h0: (B, R) f32 -> h: (B, S, R)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, S, R = log_a.shape
+    r_tile = min(r_tile, R)
+    block_s = min(block_s, S)
+    assert R % r_tile == 0 and S % block_s == 0
+
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    grid = (B, R // r_tile, S // block_s)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, r_tile), lambda b_, r, s: (b_, r)),
+            pl.BlockSpec((1, block_s, r_tile), lambda b_, r, s: (b_, s, r)),
+            pl.BlockSpec((1, block_s, r_tile), lambda b_, r, s: (b_, s, r)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, r_tile),
+                               lambda b_, r, s: (b_, s, r)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, r_tile), jnp.float32)],
+        interpret=interpret,
+    )(h0, log_a, b)

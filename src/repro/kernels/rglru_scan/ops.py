@@ -1,0 +1,23 @@
+"""Public RG-LRU scan op."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_pallas
+from .ref import rglru_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def rglru_scan(log_a, b, h0=None, use_kernel: bool = True):
+    if h0 is None:
+        h0 = jnp.zeros((log_a.shape[0], log_a.shape[2]), jnp.float32)
+    if not use_kernel:
+        return rglru_ref(log_a, b, h0)
+    return rglru_pallas(log_a, b, h0, interpret=not _on_tpu())

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = exp(log_a_t) * h_{t-1} + b_t, sequentially.
+
+    log_a, b: (B, S, R) f32; h0: (B, R). Returns h: (B, S, R).
+    """
+    def step(h, inp):
+        la, bt = inp
+        h = jnp.exp(la) * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (log_a.transpose(1, 0, 2),
+                                    b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

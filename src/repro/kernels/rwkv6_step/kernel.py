@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: RWKV6 decode state update (serving hot path).
+
+At decode time rwkv6's cost is dominated by the per-head state update:
+S' = diag(w) S + k v^T with readout y = r.(S + u k v^T). The state
+(B, H, hd, hd) f32 is the serving-time "KV cache" of the SSM family and is
+managed by the same HSM page-tier machinery; this kernel performs the
+update in one pass per (batch, head) with everything resident in VMEM:
+one HBM read + one write of S per token — the bandwidth optimum.
+
+Grid: (B, H). Blocks: S tile (1, 1, hd, hd) [hd is 64 for rwkv6-1.6b —
+lane-padded to 128 by Mosaic]; r/k/v/w/u vectors (1, 1, hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rwkv6_step_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s_ref,
+                       y_ref, s_out_ref):
+    r = r_ref[0, 0].astype(jnp.float32)            # (hd,)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)
+    s = s_ref[0, 0]                                 # (hd, hd) f32
+
+    kv = k[:, None] * v[None, :]                    # (hd_k, hd_v)
+    y = (r[None, :] @ (s + u[:, None] * kv))[0]     # (hd_v,)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    s_out_ref[0, 0] = w[:, None] * s + kv
+
+
+def rwkv6_step_pallas(r, k, v, w, u, state, *, interpret: bool = True):
+    """r,k,v,w: (B,H,hd); u: (H,hd); state: (B,H,hd,hd) f32."""
+    B, H, hd = r.shape
+    vec = pl.BlockSpec((1, 1, hd), lambda b, h: (b, h, 0))
+    y, s_new = pl.pallas_call(
+        _rwkv6_step_kernel,
+        grid=(B, H),
+        in_specs=[
+            vec, vec, vec, vec,
+            pl.BlockSpec((1, hd), lambda b, h: (h, 0)),            # u
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, s_new

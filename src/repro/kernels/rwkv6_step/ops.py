@@ -1,0 +1,21 @@
+"""Public RWKV6 decode-step op."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import rwkv6_step_pallas
+from .ref import rwkv6_step_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def rwkv6_step(r, k, v, w, u, state, use_kernel: bool = True):
+    if not use_kernel:
+        return rwkv6_step_ref(r, k, v, w, u, state)
+    return rwkv6_step_pallas(r, k, v, w, u, state,
+                             interpret=not _on_tpu())

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the RWKV6 decode-step kernel (= models.rwkv6.wkv_step)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_step_ref(r, k, v, w, u, state) -> Tuple[jax.Array, jax.Array]:
+    """One token. r,k,v,w: (B,H,hd); u: (H,hd); state: (B,H,hd,hd) f32.
+
+    y_t[j] = sum_i r[i] (S[i,j] + u[i] k[i] v[j]);  S' = diag(w) S + k v^T
+    """
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return y, new_state

@@ -1,0 +1,67 @@
+"""Paged KV storage: fixed-size pages in a global pool + per-seq tables.
+
+The pool is the "OST" of the serving tier: a bounded device-memory region
+whose usage the policy engine watches. Pages are the catalog's entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SequencePages:
+    seq_id: int
+    page_ids: List[int] = dataclasses.field(default_factory=list)
+    length: int = 0          # tokens written
+
+    def table(self, max_pages: int) -> np.ndarray:
+        t = np.full(max_pages, -1, np.int32)
+        t[: len(self.page_ids)] = self.page_ids
+        return t
+
+
+class PagePool:
+    """(n_pages, page_size, K, hd) K/V pool with a free list."""
+
+    def __init__(self, n_pages: int, page_size: int, n_kv: int,
+                 head_dim: int, dtype=np.float32) -> None:
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_kv = n_kv
+        self.head_dim = head_dim
+        self.k = np.zeros((n_pages, page_size, n_kv, head_dim), dtype)
+        self.v = np.zeros((n_pages, page_size, n_kv, head_dim), dtype)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+
+    # -- allocation ------------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def free(self, page_id: int) -> None:
+        self.k[page_id] = 0
+        self.v[page_id] = 0
+        self._free.append(page_id)
+
+    @property
+    def used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def usage_pct(self) -> float:
+        return 100.0 * self.used / self.n_pages
+
+    # -- data ---------------------------------------------------------------------
+    def write_token(self, page_id: int, slot: int, k: np.ndarray,
+                    v: np.ndarray) -> None:
+        self.k[page_id, slot] = k
+        self.v[page_id, slot] = v
+
+    def read_page(self, page_id: int) -> Tuple[np.ndarray, np.ndarray]:
+        return self.k[page_id].copy(), self.v[page_id].copy()
+
+    def write_page(self, page_id: int, k: np.ndarray, v: np.ndarray) -> None:
+        self.k[page_id] = k
+        self.v[page_id] = v

@@ -1,0 +1,400 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Two compiles per cell:
+
+* **production** — the deployable program (lax.scan over layer superblocks,
+  chunked attention, real grad-accum). Proves sharding coherence and gives
+  ``memory_analysis()`` (per-device fit) and compile time. XLA's
+  ``cost_analysis()`` counts while-loop bodies ONCE (verified in
+  EXPERIMENTS.md SDry-run), so its FLOPs are NOT usable for the roofline.
+* **analysis** (single-pod roofline cells only) — the same math with every
+  loop unrolled (layers via a Python loop, attention/rwkv chunk scans via
+  ``lax.scan(unroll=True)``) and accum=1, so every FLOP/byte/collective is
+  counted. A separately-lowered optimizer-update program isolates the
+  once-per-step cost; the full step is then
+      step = (analysis - opt) * accum + opt.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod both
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model, shapes_for
+from repro.models.config import ALL_SHAPES, ShapeSpec
+from repro.optim import AdamW
+from repro.runtime.sharding import ShardingRules, profile_for
+from repro.serve import make_prefill, make_serve_step
+from repro.train import init_train_state, make_train_step
+
+DEFAULT_ACCUM = 4
+ACCUM_OVERRIDES = {
+    "mixtral_8x22b": 8,
+    "llama4_maverick_400b_a17b": 8,
+    "deepseek_coder_33b": 8,
+}
+# bf16 adam moments for the 400B model (single-pod HBM fit; DESIGN SS5)
+BF16_MOMENTS = {"llama4_maverick_400b_a17b"}
+
+
+def _canon(arch: str) -> str:
+    return ALIASES.get(arch, arch).replace("-", "_").replace(".", "p")
+
+
+def batch_specs(cfg, shape: ShapeSpec, accum: int,
+                train: bool = False) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    mb = B // accum
+    # train batches always carry the leading accum dim (scan-consumed)
+    lead = (accum,) if (train or accum > 1) else ()
+    out: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct(lead + (mb, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (mb, S), jnp.int32),
+    }
+    extras = {}
+    if cfg.encoder is not None:
+        extras["frames"] = jax.ShapeDtypeStruct(
+            lead + (mb, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.n_img_tokens:
+        extras["img"] = jax.ShapeDtypeStruct(
+            lead + (mb, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    if extras:
+        out["extras"] = extras
+    return out
+
+
+def _logits_pspec(cfg, rules: ShardingRules, shape: ShapeSpec):
+    dp = rules._dp_if(shape.global_batch if shape.kind != "train"
+                      else shape.global_batch // 1)
+    vcol = rules._col(cfg.vocab)
+    if vcol is not None:
+        return P(dp, None, vcol)
+    if shape.kind != "decode" and shape.seq_len % rules.tp_size == 0:
+        return P(dp, rules.axes.tp, None)      # sequence-shard the loss
+    return P(dp, None, None)
+
+
+REMAT_POLICY = {"value": "full"}   # overridable via --remat (SPerf)
+
+
+def _make_model(cfg, rules, shape, analysis: bool, kv_chunk: int) -> Model:
+    return Model(
+        cfg, kv_chunk=kv_chunk,
+        unroll_layers=analysis, inner_unroll=True if analysis else 1,
+        logits_pspec=_logits_pspec(cfg, rules, shape),
+        remat_policy=REMAT_POLICY["value"])
+
+
+def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
+               accum: Optional[int] = None, kv_chunk: int = 1024,
+               profile: Optional[str] = None, analysis: bool = False,
+               cfg_override=None, moe_groups: int = 0,
+               kv_int8: bool = False):
+    """Lower one cell; returns (lowered, context dict)."""
+    arch = _canon(arch)
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    if moe_groups or kv_int8:
+        import dataclasses as _dc0
+        if moe_groups:
+            cfg = _dc0.replace(cfg, moe_groups=moe_groups)
+        if kv_int8:
+            cfg = _dc0.replace(cfg, kv_cache_dtype="int8")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(cfg, mesh, profile or profile_for(cfg))
+    if cfg.moe is not None and cfg.moe_groups > 1 and cfg.moe_pspec is None:
+        import dataclasses as _dc1
+        dp = rules.axes.dp if len(rules.axes.dp) > 1 else rules.axes.dp[0]
+        cfg = _dc1.replace(cfg, moe_pspec=P(dp, None, None, None))
+    model = _make_model(cfg, rules, shape, analysis, kv_chunk)
+    ctx = {"cfg": cfg, "mesh": mesh, "rules": rules}
+
+    if shape.kind == "train":
+        acc = 1 if analysis else (
+            accum or ACCUM_OVERRIDES.get(arch, DEFAULT_ACCUM))
+        ctx["accum"] = acc
+        opt = AdamW(moment_dtype=jnp.bfloat16 if arch in BF16_MOMENTS
+                    else jnp.float32)
+        ctx["opt"] = opt
+        state_specs = jax.eval_shape(
+            lambda: init_train_state(model, opt, jax.random.PRNGKey(0)))
+        ctx["state_specs"] = state_specs
+        pspecs = {
+            "params": rules.param_pspecs(state_specs["params"]),
+            "opt": {"m": rules.opt_state_pspecs(state_specs["params"]),
+                    "v": rules.opt_state_pspecs(state_specs["params"]),
+                    "count": P()},
+            "step": P(),
+        }
+        ctx["state_pspecs"] = pspecs
+        state_sh = rules.to_shardings(pspecs)
+        batch = batch_specs(cfg, shape, acc, train=True)
+        batch_sh = rules.to_shardings(rules.batch_pspecs(batch))
+        step_fn = make_train_step(
+            model, opt,
+            grad_pspecs=rules.opt_state_pspecs(state_specs["params"]))
+        metrics_sh = {k: NamedSharding(mesh, P())
+                      for k in ("loss", "ce", "aux")}
+        with mesh:
+            lowered = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, metrics_sh),
+                              donate_argnums=0).lower(state_specs, batch)
+        return lowered, ctx
+
+    param_specs = model.param_specs()
+    param_sh = rules.to_shardings(rules.param_pspecs(param_specs))
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, accum=1)
+        batch_sh = rules.to_shardings(rules.batch_pspecs(batch))
+        prefill_fn = make_prefill(model, cache_len=shape.seq_len)
+        cache_specs = model.init_cache(shape.global_batch, shape.seq_len,
+                                       abstract=True)
+        cache_sh = rules.to_shardings(rules.cache_pspecs(cache_specs))
+        logits_sh = NamedSharding(
+            mesh, P(rules._dp_if(shape.global_batch), None))
+        args = (param_specs, batch["tokens"])
+        in_sh = (param_sh, batch_sh["tokens"])
+        if "extras" in batch:
+            args = args + (batch["extras"],)
+            in_sh = in_sh + (batch_sh["extras"],)
+        with mesh:
+            lowered = jax.jit(prefill_fn, in_shardings=in_sh,
+                              out_shardings=(logits_sh, cache_sh)
+                              ).lower(*args)
+        return lowered, ctx
+
+    # decode
+    cache_specs = model.init_cache(shape.global_batch, shape.seq_len,
+                                   abstract=True)
+    cache_sh = rules.to_shardings(rules.cache_pspecs(cache_specs))
+    B = shape.global_batch
+    tok_spec = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(rules._dp_if(B), None))
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    serve_fn = make_serve_step(model)
+    with mesh:
+        lowered = jax.jit(
+            serve_fn,
+            in_shardings=(param_sh, cache_sh, tok_sh,
+                          NamedSharding(mesh, P())),
+            out_shardings=(tok_sh, cache_sh),
+            donate_argnums=1,               # cache is updated in place
+        ).lower(param_specs, cache_specs, tok_spec, pos_spec)
+    return lowered, ctx
+
+
+def _opt_cost(ctx) -> Dict[str, float]:
+    """Cost of the once-per-step optimizer update, lowered standalone."""
+    rules, mesh, opt = ctx["rules"], ctx["mesh"], ctx["opt"]
+    state_specs = ctx["state_specs"]
+    pspecs = ctx["state_pspecs"]
+    params = state_specs["params"]
+    grad_specs = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16), params)
+    param_sh = rules.to_shardings(pspecs["params"])
+    opt_sh = rules.to_shardings(pspecs["opt"])
+    with mesh:
+        lowered = jax.jit(
+            opt.update,
+            in_shardings=(param_sh, opt_sh, param_sh),
+            out_shardings=(param_sh, opt_sh),
+        ).lower(grad_specs, state_specs["opt"], params)
+    compiled = lowered.compile()
+    a = roofline.analyze(compiled)
+    return {"flops": a["flops_per_device"],
+            "bytes": a["bytes_accessed_per_device"],
+            "wire": a["collective_wire_bytes"]}
+
+
+def build_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
+               accum: Optional[int] = None, kv_chunk: int = 1024,
+               profile: Optional[str] = None,
+               with_analysis: bool = True,
+               moe_groups: int = 0, kv_int8: bool = False) -> Dict[str, Any]:
+    arch = _canon(arch)
+    cfg = get_config(arch)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape.name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+
+    # ---- production compile: sharding coherence + memory fit -------------
+    t0 = time.perf_counter()
+    lowered, ctx = lower_cell(arch, shape, multi_pod, accum=accum,
+                              kv_chunk=kv_chunk, profile=profile,
+                              moe_groups=moe_groups, kv_int8=kv_int8)
+    rec["lower_s"] = time.perf_counter() - t0
+    rec["profile"] = ctx["rules"].profile
+    rec["accum"] = ctx.get("accum", 1)
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    rec["compile_s"] = time.perf_counter() - t0
+    prod = roofline.analyze(compiled)
+    rec["memory"] = prod["memory"]
+    rec["production_collectives"] = prod["collectives"]
+    rec["production_flops_once_counted"] = prod["flops_per_device"]
+
+    # ---- analysis compiles: loop-corrected roofline -----------------------
+    # Two reduced-depth, fully-unrolled lowerings (1 and 2 pattern periods,
+    # + the real tail) give exact base and per-superblock marginal costs;
+    # the full-depth step extrapolates linearly (flops/bytes/collectives
+    # are all linear in the repeated-superblock count — embed/head/loss/
+    # optimizer fixed costs live in the base). The accum=1 analysis
+    # program covers one full semantic step (all tokens, one grad reduce,
+    # one optimizer update).
+    if with_analysis:
+        import dataclasses as _dc
+        t0 = time.perf_counter()
+        p = len(cfg.pattern)
+        tail = cfg.n_layers % p
+
+        def reduced(n_periods: int):
+            c = _dc.replace(cfg, n_layers=n_periods * p + tail)
+            if moe_groups:
+                c = _dc.replace(c, moe_groups=moe_groups)
+            if kv_int8:
+                c = _dc.replace(c, kv_cache_dtype="int8")
+            if cfg.encoder is not None:
+                c = _dc.replace(c, encoder=_dc.replace(
+                    cfg.encoder, n_layers=n_periods))
+            return c
+
+        results = []
+        for n_periods in (1, 2):
+            lowered_a, _ = lower_cell(arch, shape, multi_pod, accum=accum,
+                                      kv_chunk=kv_chunk, profile=profile,
+                                      analysis=True,
+                                      cfg_override=reduced(n_periods),
+                                      moe_groups=moe_groups,
+                                      kv_int8=kv_int8)
+            results.append(roofline.analyze(lowered_a.compile()))
+        rec["analysis_compile_s"] = time.perf_counter() - t0
+        a1, a2 = results
+        mult = cfg.n_super - 1
+
+        def extrap(key):
+            return a1[key] + (a2[key] - a1[key]) * mult
+
+        flops = extrap("flops_per_device")
+        nbytes = extrap("bytes_accessed_per_device")
+        wire = extrap("collective_wire_bytes")
+        rec["flops_per_device"] = flops
+        rec["bytes_accessed_per_device"] = nbytes
+        rec["collective_wire_bytes"] = wire
+        rec["analysis_base"] = {k: a1[k] for k in
+                                ("flops_per_device",
+                                 "bytes_accessed_per_device",
+                                 "collective_wire_bytes")}
+        rec["collectives_per_superblock"] = {
+            op: {kk: a2["collectives"][op][kk]
+                 - a1["collectives"].get(op, {}).get(kk, 0)
+                 for kk in ("count", "bytes", "wire_bytes")}
+            for op in a2["collectives"]}
+        rec.update(roofline.roofline_terms(flops, nbytes, wire))
+        rec.update(roofline.model_flops(cfg, shape, rec["devices"]))
+        if flops:
+            rec["model_vs_hlo_flops"] = (rec["model_flops_per_device"]
+                                         / flops)
+    return rec
+
+
+def iter_cells(archs, shapes, pods):
+    for arch in archs:
+        cfg = get_config(arch)
+        arch_shapes = [s.name for s in shapes_for(cfg)]
+        for sname in shapes:
+            if sname not in arch_shapes:
+                continue
+            for multi_pod in pods:
+                yield arch, ALL_SHAPES[sname], multi_pod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--accum", type=int, default=0)
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    ap.add_argument("--profile", default=None, choices=[None, "tp", "fsdp"])
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="MoE dispatch groups (0 = config default; set to "
+                         "the dp degree for local dispatch — SPerf)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8-quantized decode KV cache (SPerf)")
+    ap.add_argument("--remat", default="full", choices=["full", "dots"])
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="skip the loop-unrolled roofline compile")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [_canon(args.arch)]
+    shapes = list(ALL_SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+
+    REMAT_POLICY["value"] = args.remat
+    os.makedirs(args.out_dir, exist_ok=True)
+    ok = fail = 0
+    for arch, shape, multi_pod in iter_cells(archs, shapes, pods):
+        mesh_tag = "2x16x16" if multi_pod else "16x16"
+        name = f"{arch}__{shape.name}__{mesh_tag}"
+        if args.tag:
+            name += f"__{args.tag}"
+        out_path = os.path.join(args.out_dir, name + ".json")
+        t0 = time.perf_counter()
+        try:
+            # roofline analysis is a single-pod deliverable; multi-pod cells
+            # prove sharding + memory only
+            rec = build_cell(arch, shape, multi_pod,
+                             accum=args.accum or None,
+                             kv_chunk=args.kv_chunk, profile=args.profile,
+                             with_analysis=not args.no_analysis
+                             and not multi_pod,
+                             moe_groups=args.moe_groups,
+                             kv_int8=args.kv_int8)
+            rec["status"] = "ok"
+            ok += 1
+            extra = ""
+            if "bottleneck" in rec:
+                extra = (f" flops/dev={rec['flops_per_device']:.3e}"
+                         f" bottleneck={rec['bottleneck']}")
+            print(f"[OK]   {name}: compile={rec['compile_s']:.1f}s"
+                  f" peak_mem="
+                  f"{rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB"
+                  + extra, flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape.name, "mesh": mesh_tag,
+                   "status": "fail", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            fail += 1
+            print(f"[FAIL] {name}: {type(e).__name__}: {e}", flush=True)
+        rec["wall_s"] = time.perf_counter() - t0
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    print(f"dry-run complete: {ok} ok, {fail} failed", flush=True)
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

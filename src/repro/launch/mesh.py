@@ -1,0 +1,44 @@
+"""Production meshes. Target: TPU v5e pods, 256 chips each.
+
+single-pod: (16, 16) = ("data", "model")     — 256 chips
+multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips
+
+A FUNCTION (not module constant) so importing never touches device state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+# TPU v5e hardware constants (per chip) for the roofline analysis
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)}; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this automatically)")
+    # more devices than the mesh needs (e.g. 512 present, single-pod 256)
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape, axes):
+    """Small helper for tests (arbitrary meshes on few fake devices)."""
+    devs = jax.devices()
+    n = int(np.prod(shape))
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)

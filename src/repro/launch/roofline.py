@@ -1,0 +1,163 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds, from the PER-DEVICE
+partitioned module (XLA cost_analysis on an SPMD module reports per-device
+numbers — calibrated in EXPERIMENTS.md SDry-run):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_wire_bytes_per_device / ICI_bw
+
+collective bytes are parsed from the optimized HLO: for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute we take the
+tensor size and apply the standard ring-cost factor over the parsed replica
+group size k:
+
+    all-reduce: 2 * (k-1)/k * bytes     all-gather: (k-1)/k * out_bytes
+    reduce-scatter: (k-1)/k * in_bytes  all-to-all: (k-1)/k * bytes
+    collective-permute: bytes
+
+(Per the assignment we also report the raw operand-size sum.)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = TYPE[shape]{layout} op-name(...)` — possibly tuple-typed `(a, b)`
+_INSTR_RE = re.compile(
+    r"=\s*(?P<otype>\(?[a-z0-9\[\],{}:#\s()]+?\)?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+[0-9]*)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(?P<g>\d+),(?P<k>\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{(?P<first>[0-9,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group("k")))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group("first").split(",")))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-type totals: count, tensor bytes, estimated wire bytes."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m is None:
+            continue
+        # avoid double counting async -start/-done pairs: skip -done
+        if re.search(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)-done\(", line):
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("otype"))
+        k = _group_size(line)
+        if op == "all-reduce":
+            wire = 2.0 * (k - 1) / k * nbytes
+        elif op == "collective-permute":
+            wire = float(nbytes)
+        else:
+            wire = (k - 1) / k * nbytes
+        d = out[op]
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["wire_bytes"] += wire
+    return dict(out)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_wire_bytes: float) -> Dict[str, float]:
+    """Per-device three-term roofline, in seconds."""
+    compute = flops / PEAK_FLOPS_BF16
+    memory = bytes_accessed / HBM_BW
+    collective = collective_wire_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = max(bound, 1e-30)
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["roofline_fraction_compute"] = compute / total
+    return terms
+
+
+def analyze(compiled, lowered=None) -> Dict[str, object]:
+    """Full analysis dict for one compiled cell."""
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    tensor_bytes = sum(d["bytes"] for d in colls.values())
+    wire_bytes = sum(d["wire_bytes"] for d in colls.values())
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    out = {
+        "flops_per_device": flops,
+        "bytes_accessed_per_device": bytes_accessed,
+        "collective_tensor_bytes": tensor_bytes,
+        "collective_wire_bytes": wire_bytes,
+        "collectives": colls,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+    }
+    out.update(roofline_terms(flops, bytes_accessed, wire_bytes))
+    return out
+
+
+def model_flops(cfg, shape, mesh_devices: int) -> Dict[str, float]:
+    """Analytic MODEL_FLOPS per device: 6*N_active*tokens (train),
+    2*N_active*tokens (prefill/decode forward)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        total = 2.0 * n_active * tokens
+    return {"model_flops_total": total,
+            "model_flops_per_device": total / mesh_devices}

@@ -1,0 +1,322 @@
+"""Model building blocks, pure JAX (jax.lax control flow only).
+
+Numerics policy: parameters and activations are bf16; softmax, norms, and
+recurrences accumulate in f32. Attention is a chunked online-softmax
+(flash-style) implementation so 32k prefill never materializes (Sq, Sk)
+score matrices; RWKV6 uses the chunked linear-attention form with all decay
+exponents clamped ≤ 0 (provably safe — see tests/models/test_rwkv_ref.py).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MoeSpec
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return ((1.0 + w.astype(jnp.float32)) * out).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (w.astype(jnp.float32) * out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+         fraction: float = 1.0) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]    # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x_rot[..., :half].astype(jnp.float32), x_rot[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked online softmax; GQA; sliding window; softcap)
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_pos: jax.Array, kv_pos: jax.Array,
+              causal: bool = True, window: int = 0,
+              logit_softcap: Optional[float] = None,
+              kv_chunk: int = 1024, unroll: int = 1) -> jax.Array:
+    """Memory-bounded attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, K, hd) with H = K * G.
+    q_pos: (Sq,) absolute positions; kv_pos: (Sk,) absolute positions, -1
+    marks invalid cache slots. Never materializes more than (.., Sq, chunk)
+    scores.
+
+    GQA k/v are broadcast to H heads up front so the head axis — the TP
+    sharding axis — stays intact through every einsum (a (K, G) split of a
+    sharded H would force GSPMD to all-gather).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+
+    def block(kc, kp):
+        """Masked scores for one kv chunk: (B, H, Sq, C)."""
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, kc.astype(jnp.float32))
+        if logit_softcap is not None:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        m = kp[None, :] >= 0
+        if causal:
+            m = m & (kp[None, :] <= q_pos[:, None])
+        if window:
+            m = m & (kp[None, :] > q_pos[:, None] - window)
+        return jnp.where(m[None, None, :, :], s, _NEG_INF)
+
+    if Sk <= kv_chunk or Sk % kv_chunk != 0:
+        # direct path (also the fallback for non-divisible small shapes)
+        s = block(k, kv_pos)
+        mx = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - mx)
+        p = jnp.where(s > 0.5 * _NEG_INF, p, 0.0)   # fully-masked guard
+        denom = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqc,bchd->bqhd", p, v.astype(jnp.float32))
+        o = o / jnp.maximum(denom, 1e-20).transpose(0, 2, 1, 3)
+        return o.astype(q.dtype)
+
+    n = Sk // kv_chunk
+    ks = k.reshape(B, n, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kps = kv_pos.reshape(n, kv_chunk)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        kc, vc, kp = inp
+        s = block(kc, kp)                            # (B,H,Sq,C)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(s > 0.5 * _NEG_INF, p, 0.0)   # fully-masked guard
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), dtype=jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps),
+                                      unroll=unroll)
+    out = acc / jnp.maximum(l_f, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array
+           ) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
+             b2: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def gelu_ffn(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — capacity-based sort-free dispatch
+# ---------------------------------------------------------------------------
+
+def _positions_in_expert(flat_e: jax.Array, num_experts: int) -> jax.Array:
+    """Rank of each routed token within its expert, via one sort.
+
+    Avoids the (T*k, E) one-hot cumsum (O(T*E) memory); this is O(T log T)
+    and keeps peak memory at O(T).
+    """
+    tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(num_experts),
+                                 side="left")
+    pos_sorted = jnp.arange(tk) - seg_start[sorted_e]
+    return jnp.zeros(tk, dtype=jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+
+
+def moe_forward(x: jax.Array, router_w: jax.Array, w1: jax.Array,
+                w3: jax.Array, w2: jax.Array, moe: MoeSpec,
+                shared: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+                groups: int = 1, buf_pspec=None) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with capacity-factor dispatch (tokens over capacity drop).
+
+    x: (B, S, D); router_w: (D, E); experts w1/w3: (E, D, F), w2: (E, F, D).
+    Returns (out, aux_loss).
+
+    ``groups``: dispatch-group count. With groups == the data-parallel
+    degree, the token->capacity scatter becomes a *batched* scatter whose
+    leading dim aligns with the batch sharding, so GSPMD partitions it
+    locally — a global scatter forces full replication of the (E, cap, D)
+    buffer + giant all-reduces (measured in EXPERIMENTS.md SPerf: 19
+    all-reduces / 90 GB per layer -> gone).
+    """
+    B, S, D = x.shape
+    E, k = moe.num_experts, moe.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt @ router_w).astype(jnp.float32)          # (T, E)
+    top_logits, top_idx = jax.lax.top_k(logits, k)        # (T, k)
+    if k == 1:
+        weights = jax.nn.sigmoid(top_logits)              # llama4-style
+    else:
+        weights = jax.nn.softmax(top_logits, axis=-1)     # mixtral-style
+
+    # load-balancing aux loss (Switch/Mixtral form)
+    probs = jax.nn.softmax(logits, axis=-1)
+    density = jnp.mean(probs, axis=0)                     # (E,)
+    usage = jnp.mean(
+        (jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32)), axis=0)
+    aux = E * jnp.sum(density * usage)
+
+    G = groups if T % groups == 0 else 1
+    Tg = T // G
+    cap = int(math.ceil(moe.capacity_factor * Tg * k / E))
+    cap = max(8, (cap + 7) // 8 * 8)
+
+    flat_e = top_idx.reshape(G, Tg * k)
+    pos = jax.vmap(lambda fe: _positions_in_expert(fe, E))(flat_e)
+    keep = (pos < cap)
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    xg = jnp.repeat(xt.reshape(G, Tg, D), k, axis=1)       # (G, Tg*k, D)
+    contrib = jnp.where(keep[..., None], xg, 0)
+    buf = jax.vmap(
+        lambda fe, pc, c: jnp.zeros((E, cap, D), dtype=x.dtype)
+        .at[fe, pc].add(c))(flat_e, pos_c, contrib)        # (G, E, cap, D)
+
+    def pin(t):
+        """Keep the group dim data-sharded (GSPMD otherwise replicates it
+        to feed the expert contraction — 20 GB/layer all-reduces, SPerf)."""
+        if buf_pspec is None:
+            return t
+        return jax.lax.with_sharding_constraint(t, buf_pspec)
+
+    buf = pin(buf)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, w1)) * \
+        jnp.einsum("gecd,edf->gecf", buf, w3)
+    y = pin(jnp.einsum("gecf,efd->gecd", h, w2))           # (G, E, cap, D)
+
+    gathered = jax.vmap(lambda yg, fe, pc: yg[fe, pc])(y, flat_e, pos_c)
+    wk = (weights.reshape(G, Tg * k, 1) * keep[..., None]).astype(x.dtype)
+    out = (gathered * wk).reshape(G, Tg, k, D).sum(axis=2)
+
+    out = out.reshape(T, D)
+    if shared is not None:
+        s1, s3, s2 = shared
+        out = out + swiglu(xt, s1, s3, s2)
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def _rglru_gates(v: jax.Array, p: dict) -> Tuple[jax.Array, jax.Array]:
+    """log_a (decay, in log space, <= 0) and gated input, both f32."""
+    vf = v.astype(jnp.float32)
+    r = jax.nn.sigmoid(vf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(vf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_RGLRU_C * r * jax.nn.softplus(p["lam"])      # (.., R) <= 0
+    gated = i * vf
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * gated
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal temporal conv. x: (B,S,R); w: (width,R).
+
+    Returns (y, new_state) where state carries the trailing (width-1) inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), dtype=x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y, new_state
+
+
+def rglru_scan(log_a: jax.Array, b: jax.Array,
+               h0: Optional[jax.Array] = None) -> jax.Array:
+    """Diagonal linear recurrence h_t = exp(log_a_t) h_{t-1} + b_t.
+
+    Uses an associative scan (log-depth on TPU). log_a, b: (B, S, R) f32.
+    """
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b2 + jnp.exp(a2) * b1
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_step(log_a: jax.Array, b: jax.Array, h: jax.Array) -> jax.Array:
+    """One decode step: (B, R) each."""
+    return jnp.exp(log_a) * h + b

@@ -1,0 +1,116 @@
+"""RWKV-6 "Finch" time-mix and channel-mix (data-dependent decay).
+
+Recurrence per head (key-dim i, value-dim j):
+
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+    y_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+
+Sequence processing uses the chunked linear-attention form: within a chunk
+of length C the intra-chunk part is an O(C^2 hd) masked product, the
+inter-chunk part applies the carried state; every decay exponent that
+appears is a difference lw_a - lw_b with a >= b along time, hence <= 0 and
+safe to exponentiate (we additionally clamp at 0). The pure O(S) step
+recurrence lives in ``wkv_step`` (decode) and doubles as the test oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_step(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """One token. r,k,v,w: (B,H,hd); u: (H,hd); state: (B,H,hd,hd).
+
+    Returns (y (B,H,hd), new_state). All f32.
+    """
+    kv = k[..., :, None] * v[..., None, :]                 # (B,H,hd,hd)
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return y, new_state
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, lw: jax.Array,
+                u: jax.Array, state: Optional[jax.Array] = None,
+                chunk: int = 64, unroll: int = 1
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Sequence form. r,k,v: (B,S,H,hd) f32; lw: (B,S,H,hd) log-decay (<=0);
+    u: (H,hd). Returns (y (B,S,H,hd), final_state (B,H,hd,hd)).
+    """
+    B, S, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), dtype=jnp.float32)
+    assert S % chunk == 0, f"S={S} must divide chunk={chunk}"
+    n = S // chunk
+
+    def reshape(x):
+        return x.reshape(B, n, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    rs, ks, vs, lws = map(reshape, (r, k, v, lw))
+
+    tri_lt = jnp.tril(jnp.ones((chunk, chunk), dtype=bool), k=-1)  # s < t
+
+    def body(S_prev, inp):
+        rc, kc, vc, lwc = inp                              # (B,C,H,hd)
+        cum = jnp.cumsum(lwc, axis=1)                      # lw_1..t inclusive
+        cum_prev = cum - lwc                               # lw up to t-1
+        # inter-chunk: y_t += (r_t * exp(cum_prev_t)) @ S_prev
+        r_dec = rc * jnp.exp(cum_prev)
+        y_inter = jnp.einsum("bthi,bhij->bthj", r_dec, S_prev)
+        # intra-chunk: A[t,s] = sum_i r[t,i] k[s,i] exp(cum_prev[t]-cum[s]), s<t
+        expo = cum_prev[:, :, None] - cum[:, None, :, :, :]   # (B,t,s,H,hd)
+        expo = jnp.minimum(expo, 0.0)
+        a = jnp.einsum("bthi,bshi,btshi->btsh", rc, kc, jnp.exp(expo))
+        a = jnp.where(tri_lt[None, :, :, None], a, 0.0)
+        # current-token bonus term: A[t,t] = sum_i r[t,i] u[i] k[t,i]
+        diag = jnp.einsum("bthi,hi,bthi->bth", rc, u, kc)
+        y_intra = jnp.einsum("btsh,bshj->bthj", a, vc) + \
+            diag[..., None] * vc
+        # state update: S = diag(exp(cum_C)) S_prev + sum_s (k_s exp(cum_C-cum_s)) v_s
+        cum_end = cum[:, -1:, :, :]                        # (B,1,H,hd)
+        k_dec = kc * jnp.exp(jnp.minimum(cum_end - cum, 0.0))
+        S_new = jnp.exp(cum_end[:, 0])[..., None] * S_prev + \
+            jnp.einsum("bshi,bshj->bhij", k_dec, vc)
+        return S_new, y_inter + y_intra
+
+    final_state, ys = jax.lax.scan(body, state, (rs, ks, vs, lws),
+                                   unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return y, final_state
+
+
+def wkv_ref(r, k, v, lw, u, state=None):
+    """O(S) serial oracle (python loop — tests on tiny shapes only)."""
+    B, S, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), dtype=jnp.float32)
+    ys = []
+    for t in range(S):
+        y, state = wkv_step(r[:, t], k[:, t], v[:, t],
+                            jnp.exp(lw[:, t]), u, state)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state
+
+
+def token_shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """Previous-token features: shift right by one along S. x: (B,S,D)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :]
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def ddlerp(x: jax.Array, xprev: jax.Array, mu: jax.Array,
+           a: jax.Array, b: jax.Array) -> jax.Array:
+    """RWKV6 data-dependent lerp for one channel group.
+
+    x, xprev: (B,S,D); mu: (D,); a: (D,L); b: (L,D).
+    mix = x + (mu + tanh((xprev-x) @ a) @ b) * (xprev - x)
+    """
+    dx = xprev - x
+    dyn = jnp.tanh(dx @ a) @ b
+    return x + (mu + dyn) * dx

@@ -1,0 +1,844 @@
+"""The model zoo's single backbone: pattern-scanned transformer/hybrid LM.
+
+One implementation covers all 10 assigned architectures through
+:class:`~repro.models.config.ModelConfig`:
+
+* layers are grouped into complete pattern repetitions executed with
+  ``jax.lax.scan`` over stacked parameters (HLO size independent of depth,
+  which keeps 512-device GSPMD compiles fast), plus an unrolled tail for
+  depths not divisible by the pattern period (recurrentgemma: 38 = 12*3+2);
+* every scanned superblock is wrapped in ``jax.checkpoint`` (full remat) so
+  train-step activation memory is O(sqrt-ish) instead of O(depth);
+* decode caches mirror the parameter grouping so the same scan drives
+  single-token serving steps.
+
+Functions are pure; ``Model`` only holds the config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import rwkv6 as rk
+from .components import (attention, causal_conv1d, gelu_mlp, layer_norm,
+                         moe_forward, rglru_scan, rglru_step, rms_norm, rope,
+                         softcap, swiglu, _rglru_gates)
+from .config import (ATTN_FULL, ATTN_LOCAL, ATTN_NONCAUSAL, FFN_DENSE,
+                     FFN_MOE, MIX_RGLRU, MIX_RWKV6, LayerSpec, ModelConfig)
+
+PyTree = Any
+_MOE_AUX_COEF = 0.01
+
+
+# ===========================================================================
+# Parameter initialization
+# ===========================================================================
+
+def _norm_params(cfg: ModelConfig, key) -> PyTree:
+    if cfg.norm == "ln":
+        return {"w": jnp.ones(cfg.d_model, jnp.bfloat16),
+                "b": jnp.zeros(cfg.d_model, jnp.bfloat16)}
+    return {"w": jnp.zeros(cfg.d_model, jnp.bfloat16)}
+
+
+def _dense(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(
+        jnp.bfloat16)
+
+
+def _attn_params(cfg: ModelConfig, key, cross: bool = False) -> PyTree:
+    D = cfg.d_model
+    qk = cfg.n_heads * cfg.head_dim
+    kv = cfg.n_kv * cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": _dense(ks[0], (D, qk)),
+        "wk": _dense(ks[1], (D, kv)),
+        "wv": _dense(ks[2], (D, kv)),
+        "wo": _dense(ks[3], (qk, D), scale=1.0 / math.sqrt(qk)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros(qk, jnp.bfloat16)
+        p["bk"] = jnp.zeros(kv, jnp.bfloat16)
+        p["bv"] = jnp.zeros(kv, jnp.bfloat16)
+    if cross:
+        p["gate"] = jnp.zeros((), jnp.bfloat16)   # llama3.2-vision gating
+    return p
+
+
+def _ffn_params(cfg: ModelConfig, key, spec: LayerSpec) -> PyTree:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    if spec.mix == MIX_RWKV6:
+        # rwkv channel-mix
+        return {"mu_r": jnp.zeros(D, jnp.bfloat16),
+                "mu_k": jnp.zeros(D, jnp.bfloat16),
+                "wr": _dense(ks[0], (D, D)),
+                "wk": _dense(ks[1], (D, F)),
+                "wv": _dense(ks[2], (F, D))}
+    if spec.ffn == FFN_MOE:
+        assert cfg.moe is not None
+        E = cfg.moe.num_experts
+        p = {"router": _dense(ks[0], (D, E), scale=0.02),
+             "w1": _dense(ks[1], (E, D, F), scale=1.0 / math.sqrt(D)),
+             "w3": _dense(ks[2], (E, D, F), scale=1.0 / math.sqrt(D)),
+             "w2": _dense(ks[3], (E, F, D), scale=1.0 / math.sqrt(F))}
+        if cfg.moe.shared_expert:
+            p["s1"] = _dense(ks[4], (D, F))
+            p["s3"] = _dense(ks[5], (D, F))
+            p["s2"] = _dense(ks[6], (F, D))
+        return p
+    if cfg.ffn_act == "gelu":
+        return {"w1": _dense(ks[0], (D, F)), "b1": jnp.zeros(F, jnp.bfloat16),
+                "w2": _dense(ks[1], (F, D)), "b2": jnp.zeros(D, jnp.bfloat16)}
+    return {"w1": _dense(ks[0], (D, F)), "w3": _dense(ks[1], (D, F)),
+            "w2": _dense(ks[2], (F, D))}
+
+
+def _rglru_params(cfg: ModelConfig, key) -> PyTree:
+    D, R = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": _dense(ks[0], (D, R)),
+        "w_in": _dense(ks[1], (D, R)),
+        "conv_w": _dense(ks[2], (cfg.conv_width, R), scale=0.3),
+        "w_a": _dense(ks[3], (R, R)),
+        "b_a": jnp.zeros(R, jnp.float32),
+        "w_x": _dense(ks[4], (R, R)),
+        "b_x": jnp.zeros(R, jnp.float32),
+        "lam": jnp.full((R,), -4.35, jnp.float32),   # a ~ 0.95 at r=0.5
+        "w_out": _dense(ks[5], (R, D)),
+    }
+
+
+def _rwkv_params(cfg: ModelConfig, key) -> PyTree:
+    D = cfg.d_model
+    H, hd = cfg.n_heads, cfg.head_dim
+    L, L2 = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": jnp.zeros((5, D), jnp.bfloat16),           # r,k,v,g,w lerp base
+        "maa_a": _dense(ks[0], (D, 5 * L), scale=0.01),
+        "maa_b": (jax.random.normal(ks[1], (5, L, D)) * 0.01).astype(jnp.bfloat16),
+        "wr": _dense(ks[2], (D, D)),
+        "wk": _dense(ks[3], (D, D)),
+        "wv": _dense(ks[4], (D, D)),
+        "wg": _dense(ks[5], (D, D)),
+        "w0": jnp.full((D,), -3.9, jnp.float32),         # base decay ~0.98
+        "wd_a": _dense(ks[6], (D, L2), scale=0.01),
+        "wd_b": (jax.random.normal(ks[7], (L2, D)) * 0.01).astype(jnp.bfloat16),
+        "u": (jax.random.normal(ks[8], (H, hd)) * 0.02).astype(jnp.float32),
+        "gn_w": jnp.ones(D, jnp.bfloat16),
+        "wo": _dense(ks[9], (D, D)),
+    }
+
+
+def _layer_params(cfg: ModelConfig, spec: LayerSpec, key) -> PyTree:
+    ks = jax.random.split(key, 5)
+    p: Dict[str, PyTree] = {"ln1": _norm_params(cfg, ks[0]),
+                            "ln2": _norm_params(cfg, ks[1])}
+    if cfg.post_norms:
+        p["ln1p"] = _norm_params(cfg, ks[0])
+        p["ln2p"] = _norm_params(cfg, ks[1])
+    if spec.mix in (ATTN_FULL, ATTN_LOCAL, ATTN_NONCAUSAL):
+        p["attn"] = _attn_params(cfg, ks[2])
+    elif spec.mix == MIX_RGLRU:
+        p["rglru"] = _rglru_params(cfg, ks[2])
+    elif spec.mix == MIX_RWKV6:
+        p["rwkv"] = _rwkv_params(cfg, ks[2])
+    if spec.cross_attn:
+        p["lnx"] = _norm_params(cfg, ks[3])
+        p["xattn"] = _attn_params(cfg, ks[3], cross=True)
+    p["ffn"] = _ffn_params(cfg, ks[4], spec)
+    return p
+
+
+# ===========================================================================
+# Layer application (sequence mode and step mode share sublayer helpers)
+# ===========================================================================
+
+def _norm(cfg: ModelConfig, p: PyTree, x: jax.Array) -> jax.Array:
+    if cfg.norm == "ln":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+def _qkv(cfg: ModelConfig, p: PyTree, x: jax.Array, n_q: int, n_kv: int
+         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, n_q, hd), k.reshape(B, S, n_kv, hd),
+            v.reshape(B, S, n_kv, hd))
+
+
+def _self_attn_seq(cfg: ModelConfig, spec: LayerSpec, p: PyTree,
+                   x: jax.Array, positions: jax.Array,
+                   kv_chunk: int, unroll: int = 1
+                   ) -> Tuple[jax.Array, PyTree]:
+    """Full-sequence self attention; returns (out, kv-for-cache)."""
+    q, k, v = _qkv(cfg, p, x, cfg.n_heads, cfg.n_kv)
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    causal = spec.mix != ATTN_NONCAUSAL
+    window = cfg.window if spec.mix == ATTN_LOCAL else 0
+    out = attention(q, k, v, q_pos=positions, kv_pos=positions,
+                    causal=causal, window=window,
+                    logit_softcap=cfg.attn_softcap, kv_chunk=kv_chunk,
+                    unroll=unroll)
+    B, S, _, _ = out.shape
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def _cross_attn(cfg: ModelConfig, p: PyTree, x: jax.Array,
+                xk: jax.Array, xv: jax.Array, kv_chunk: int) -> jax.Array:
+    """Cross attention to precomputed source K/V (no positions, no mask)."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    src_len = xk.shape[1]
+    kv_pos = jnp.arange(src_len)
+    q_pos = jnp.full((S,), src_len, dtype=jnp.int32)  # attend to everything
+    out = attention(q, xk, xv, q_pos=q_pos, kv_pos=kv_pos, causal=False,
+                    kv_chunk=kv_chunk)
+    out = out.reshape(B, S, -1) @ p["wo"]
+    if "gate" in p:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out
+
+
+def _source_kv(cfg: ModelConfig, p: PyTree, src: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    B, T, _ = src.shape
+    xk = (src @ p["wk"]).reshape(B, T, cfg.n_kv, cfg.head_dim)
+    xv = (src @ p["wv"]).reshape(B, T, cfg.n_kv, cfg.head_dim)
+    return xk, xv
+
+
+def _ffn_apply(cfg: ModelConfig, spec: LayerSpec, p: PyTree, x: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out, moe_aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if spec.mix == MIX_RWKV6:
+        xprev = rk.token_shift(x)
+        mr = x + p["mu_r"] * (xprev - x)
+        mk = x + p["mu_k"] * (xprev - x)
+        kk = jnp.square(jax.nn.relu(mk @ p["wk"]))
+        return jax.nn.sigmoid(mr @ p["wr"]) * (kk @ p["wv"]), zero
+    if spec.ffn == FFN_MOE:
+        shared = (p["s1"], p["s3"], p["s2"]) if "s1" in p else None
+        out, aux = moe_forward(x, p["router"], p["w1"], p["w3"], p["w2"],
+                               cfg.moe, shared, groups=cfg.moe_groups,
+                               buf_pspec=cfg.moe_pspec)
+        return out, aux
+    if cfg.ffn_act == "gelu":
+        return gelu_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"]), zero
+    return swiglu(x, p["w1"], p["w3"], p["w2"]), zero
+
+
+def _rwkv_timemix_prep(cfg: ModelConfig, p: PyTree, x: jax.Array,
+                       xprev: jax.Array):
+    """Shared r,k,v,g,lw computation for seq and step modes (f32 outputs)."""
+    B = x.shape[0]
+    S = x.shape[1]
+    H, hd = cfg.n_heads, cfg.head_dim
+    L = cfg.rwkv_lora_mix
+    dx = xprev - x
+    dyn = jnp.tanh(dx @ p["maa_a"])                     # (B,S,5L)
+    dyn = dyn.reshape(B, S, 5, L)
+    mixes = []
+    for i in range(5):
+        m = x + (p["mu"][i] + jnp.einsum("bsl,ld->bsd", dyn[:, :, i],
+                                         p["maa_b"][i])) * dx
+        mixes.append(m)
+    mr, mk, mv, mg, mw = mixes
+    r = (mr @ p["wr"]).astype(jnp.float32).reshape(B, S, H, hd)
+    k = (mk @ p["wk"]).astype(jnp.float32).reshape(B, S, H, hd)
+    v = (mv @ p["wv"]).astype(jnp.float32).reshape(B, S, H, hd)
+    g = mg @ p["wg"]
+    dd = jnp.tanh(mw @ p["wd_a"]) @ p["wd_b"]           # (B,S,D)
+    lw = -jnp.exp(p["w0"] + dd.astype(jnp.float32))      # log decay <= 0
+    lw = lw.reshape(B, S, H, hd)
+    return r, k, v, g, lw
+
+
+def _rwkv_out(cfg: ModelConfig, p: PyTree, y: jax.Array, g: jax.Array,
+              B: int, S: int) -> jax.Array:
+    """Per-head group-norm + silu gate + output proj."""
+    D = cfg.d_model
+    yf = y.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 1e-5)
+    yf = yf.reshape(B, S, D) * p["gn_w"].astype(jnp.float32)
+    out = (yf.astype(g.dtype) * jax.nn.silu(g)) @ p["wo"]
+    return out
+
+
+def apply_layer_seq(cfg: ModelConfig, spec: LayerSpec, p: PyTree,
+                    x: jax.Array, positions: jax.Array,
+                    extras: Optional[dict] = None, kv_chunk: int = 1024,
+                    want_cache: bool = False, unroll: int = 1
+                    ) -> Tuple[jax.Array, jax.Array, PyTree]:
+    """One layer over a full sequence. Returns (x, aux_loss, cache_blob)."""
+    B, S, D = x.shape
+    blob: Dict[str, jax.Array] = {}
+    h = _norm(cfg, p["ln1"], x)
+
+    if spec.mix in (ATTN_FULL, ATTN_LOCAL, ATTN_NONCAUSAL):
+        out, (k, v) = _self_attn_seq(cfg, spec, p["attn"], h, positions,
+                                     kv_chunk, unroll)
+        if want_cache:
+            blob["k"], blob["v"] = k, v
+    elif spec.mix == MIX_RGLRU:
+        rp = p["rglru"]
+        gate = jax.nn.gelu(h @ rp["w_gate"])
+        vin = h @ rp["w_in"]
+        vin, conv_state = causal_conv1d(vin, rp["conv_w"])
+        log_a, b = _rglru_gates(vin, rp)
+        hseq = rglru_scan(log_a, b)                      # (B,S,R) f32
+        out = (gate * hseq.astype(gate.dtype)) @ rp["w_out"]
+        if want_cache:
+            blob["h"] = hseq[:, -1, :]
+            blob["conv"] = conv_state
+    elif spec.mix == MIX_RWKV6:
+        rp = p["rwkv"]
+        xprev = rk.token_shift(h)
+        r, k, v, g, lw = _rwkv_timemix_prep(cfg, rp, h, xprev)
+        chunk = 64 if S % 64 == 0 else (math.gcd(S, 64) or S)
+        y, st = rk.wkv_chunked(r, k, v, lw, rp["u"], chunk=chunk,
+                               unroll=unroll)
+        out = _rwkv_out(cfg, rp, y, g, B, S)
+        if want_cache:
+            blob["s"] = st
+            blob["shift_t"] = h[:, -1, :]
+    else:
+        raise ValueError(spec.mix)
+
+    if cfg.post_norms:
+        out = _norm(cfg, p["ln1p"], out)
+    x = x + out
+
+    if spec.cross_attn:
+        assert extras is not None and "src" in extras, \
+            "cross-attn layer needs extras['src']"
+        hx = _norm(cfg, p["lnx"], x)
+        xk, xv = _source_kv(cfg, p["xattn"], extras["src"])
+        x = x + _cross_attn(cfg, p["xattn"], hx, xk, xv, kv_chunk)
+        if want_cache:
+            blob["xk"], blob["xv"] = xk, xv
+
+    h2 = _norm(cfg, p["ln2"], x)
+    if spec.mix == MIX_RWKV6 and want_cache:
+        blob["shift_c"] = h2[:, -1, :]
+    out2, aux = _ffn_apply(cfg, spec, p["ffn"], h2)
+    if cfg.post_norms:
+        out2 = _norm(cfg, p["ln2p"], out2)
+    x = x + out2
+    return x, aux, blob
+
+
+# ---------------------------------------------------------------------------
+# Decode step (x: (B, 1, D))
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     cache_len: int, abstract: bool = False) -> PyTree:
+    """Cache blob for one layer. cache_len caps local windows."""
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda s, d: jnp.zeros(s, d)))
+    hd = cfg.head_dim
+    quant = cfg.kv_cache_dtype == "int8"
+    kv_dt = jnp.int8 if quant else jnp.bfloat16
+    blob: Dict[str, Any] = {}
+    if spec.mix in (ATTN_FULL, ATTN_NONCAUSAL):
+        blob["k"] = mk((batch, cache_len, cfg.n_kv, hd), kv_dt)
+        blob["v"] = mk((batch, cache_len, cfg.n_kv, hd), kv_dt)
+        if quant:
+            blob["kscale"] = mk((batch, cache_len, cfg.n_kv, 1), jnp.float32)
+            blob["vscale"] = mk((batch, cache_len, cfg.n_kv, 1), jnp.float32)
+    elif spec.mix == ATTN_LOCAL:
+        assert not quant, "int8 KV supports full caches only (no rings yet)"
+        L = min(cache_len, cfg.window)
+        blob["k"] = mk((batch, L, cfg.n_kv, hd), jnp.bfloat16)
+        blob["v"] = mk((batch, L, cfg.n_kv, hd), jnp.bfloat16)
+    elif spec.mix == MIX_RGLRU:
+        blob["h"] = mk((batch, cfg.rnn_width), jnp.float32)
+        blob["conv"] = mk((batch, cfg.conv_width - 1, cfg.rnn_width),
+                          jnp.bfloat16)
+    elif spec.mix == MIX_RWKV6:
+        blob["s"] = mk((batch, cfg.n_heads, hd, hd), jnp.float32)
+        blob["shift_t"] = mk((batch, cfg.d_model), jnp.bfloat16)
+        blob["shift_c"] = mk((batch, cfg.d_model), jnp.bfloat16)
+    if spec.cross_attn:
+        src_len = cfg.n_img_tokens or (cfg.encoder.n_frames if cfg.encoder
+                                       else 0)
+        blob["xk"] = mk((batch, src_len, cfg.n_kv, hd), jnp.bfloat16)
+        blob["xv"] = mk((batch, src_len, cfg.n_kv, hd), jnp.bfloat16)
+    return blob
+
+
+def _quantize_kv(t: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric int8 quantization. t: (B, S, K, hd)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127,
+                 127).astype(jnp.int8)
+    return q, scale
+
+
+def apply_layer_step(cfg: ModelConfig, spec: LayerSpec, p: PyTree,
+                     cache: PyTree, x: jax.Array, pos: jax.Array,
+                     unroll: int = 1) -> Tuple[jax.Array, PyTree]:
+    """One decode token. x: (B,1,D); pos: scalar int32 (current position)."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    new_cache = dict(cache)
+    h = _norm(cfg, p["ln1"], x)
+
+    if spec.mix in (ATTN_FULL, ATTN_LOCAL, ATTN_NONCAUSAL):
+        ap = p["attn"]
+        q, k, v = _qkv(cfg, ap, h, cfg.n_heads, cfg.n_kv)
+        posv = pos[None] if pos.ndim == 0 else pos
+        q = rope(q, posv, cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, posv, cfg.rope_theta, cfg.rope_fraction)
+        L = cache["k"].shape[1]
+        slot = jnp.mod(pos, L) if spec.mix == ATTN_LOCAL else \
+            jnp.minimum(pos, L - 1)
+        if "kscale" in cache:      # int8 quantized cache
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            upd = lambda c, u: jax.lax.dynamic_update_slice_in_dim(
+                c, u, slot, axis=1)
+            new_cache["k"] = upd(cache["k"], kq)
+            new_cache["v"] = upd(cache["v"], vq)
+            new_cache["kscale"] = upd(cache["kscale"], ks)
+            new_cache["vscale"] = upd(cache["vscale"], vs)
+            ck = (new_cache["k"].astype(jnp.bfloat16)
+                  * new_cache["kscale"].astype(jnp.bfloat16))
+            cv = (new_cache["v"].astype(jnp.bfloat16)
+                  * new_cache["vscale"].astype(jnp.bfloat16))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                     axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                     axis=1)
+            new_cache["k"], new_cache["v"] = ck, cv
+        idx = jnp.arange(L)
+        if spec.mix == ATTN_LOCAL:
+            kv_pos = pos - jnp.mod(pos - idx, L)
+            kv_pos = jnp.where(kv_pos >= 0, kv_pos, -1)
+        else:
+            kv_pos = jnp.where(idx <= pos, idx, -1)
+        window = cfg.window if spec.mix == ATTN_LOCAL else 0
+        out = attention(q, ck, cv, q_pos=posv, kv_pos=kv_pos, causal=True,
+                        window=window, logit_softcap=cfg.attn_softcap,
+                        kv_chunk=1024 if L % 1024 == 0 else L,
+                        unroll=unroll)
+        out = out.reshape(B, 1, -1) @ ap["wo"]
+    elif spec.mix == MIX_RGLRU:
+        rp = p["rglru"]
+        gate = jax.nn.gelu(h @ rp["w_gate"])
+        vin = h @ rp["w_in"]
+        vin2, conv_state = causal_conv1d(vin, rp["conv_w"],
+                                         state=cache["conv"])
+        log_a, b = _rglru_gates(vin2[:, 0, :], rp)
+        h_new = rglru_step(log_a, b, cache["h"])
+        new_cache["h"], new_cache["conv"] = h_new, conv_state
+        out = (gate[:, 0] * h_new.astype(gate.dtype)) @ rp["w_out"]
+        out = out[:, None, :]
+    elif spec.mix == MIX_RWKV6:
+        rp = p["rwkv"]
+        xprev = cache["shift_t"][:, None, :].astype(h.dtype)
+        r, k, v, g, lw = _rwkv_timemix_prep(cfg, rp, h, xprev)
+        y, s_new = rk.wkv_step(r[:, 0], k[:, 0], v[:, 0],
+                               jnp.exp(lw[:, 0]), rp["u"], cache["s"])
+        new_cache["s"] = s_new
+        new_cache["shift_t"] = h[:, 0, :]
+        out = _rwkv_out(cfg, rp, y[:, None], g, B, 1)
+    else:
+        raise ValueError(spec.mix)
+
+    if cfg.post_norms:
+        out = _norm(cfg, p["ln1p"], out)
+    x = x + out
+
+    if spec.cross_attn:
+        hx = _norm(cfg, p["lnx"], x)
+        x = x + _cross_attn(cfg, p["xattn"], hx, cache["xk"], cache["xv"],
+                            kv_chunk=1 << 16)
+
+    h2 = _norm(cfg, p["ln2"], x)
+    if spec.mix == MIX_RWKV6:
+        xprev_c = cache["shift_c"][:, None, :].astype(h2.dtype)
+        fp = p["ffn"]
+        mr = h2 + fp["mu_r"] * (xprev_c - h2)
+        mk2 = h2 + fp["mu_k"] * (xprev_c - h2)
+        kk = jnp.square(jax.nn.relu(mk2 @ fp["wk"]))
+        out2 = jax.nn.sigmoid(mr @ fp["wr"]) * (kk @ fp["wv"])
+        new_cache["shift_c"] = h2[:, 0, :]
+    else:
+        out2, _ = _ffn_apply(cfg, spec, p["ffn"], h2)
+    if cfg.post_norms:
+        out2 = _norm(cfg, p["ln2p"], out2)
+    return x + out2, new_cache
+
+
+# ===========================================================================
+# Whisper-style encoder
+# ===========================================================================
+
+def _encoder_params(cfg: ModelConfig, key) -> PyTree:
+    enc = cfg.encoder
+    ks = jax.random.split(key, enc.n_layers + 2)
+    spec = LayerSpec(mix=ATTN_NONCAUSAL, ffn=FFN_DENSE)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_layer_params(cfg, spec, ks[i]) for i in range(enc.n_layers)])
+    return {"pos": (jax.random.normal(ks[-2], (enc.n_frames, cfg.d_model))
+                    * 0.01).astype(jnp.bfloat16),
+            "layers": stacked,
+            "final": _norm_params(cfg, ks[-1])}
+
+
+def encode(cfg: ModelConfig, p: PyTree, frames: jax.Array,
+           kv_chunk: int = 1024, unroll_layers: bool = False,
+           inner_unroll: int = 1) -> jax.Array:
+    """frames: (B, n_frames, D) stubbed conv-frontend output."""
+    spec = LayerSpec(mix=ATTN_NONCAUSAL, ffn=FFN_DENSE)
+    x = frames + p["pos"][None]
+    positions = jnp.arange(frames.shape[1])
+
+    @jax.checkpoint
+    def body(x, lp):
+        x, _, _ = apply_layer_seq(cfg, spec, lp, x, positions,
+                                  kv_chunk=kv_chunk, unroll=inner_unroll)
+        return x, None
+
+    if unroll_layers:
+        n = cfg.encoder.n_layers
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], p["layers"]))
+    else:
+        x, _ = jax.lax.scan(body, x, p["layers"])
+    return _norm(cfg, p["final"], x)
+
+
+# ===========================================================================
+# Model facade
+# ===========================================================================
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    kv_chunk: int = 1024
+    # analysis knobs (see launch/dryrun.py): unroll all loops so XLA
+    # cost_analysis counts every iteration (while bodies are counted once)
+    unroll_layers: bool = False
+    inner_unroll: int = 1
+    # activation rematerialization: "full" (recompute everything in bwd)
+    # or "dots" (save matmul outputs, recompute only elementwise — SPerf)
+    remat_policy: str = "full"
+    # optional PartitionSpec for the (B, S, V) logits (avoids a replicated
+    # vocab-sized buffer for tied-embedding archs)
+    logits_pspec: Any = None
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key: jax.Array) -> PyTree:
+        cfg = self.cfg
+        n_keys = 4 + cfg.n_super + len(cfg.tail_specs)
+        ks = jax.random.split(key, n_keys)
+        params: Dict[str, PyTree] = {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model))
+                      * 0.02).astype(jnp.bfloat16),
+            "final": _norm_params(cfg, ks[1]),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _dense(ks[2], (cfg.d_model, cfg.vocab),
+                                       scale=0.02)
+        period = len(cfg.pattern)
+        if cfg.n_super > 0:
+            stacks = []
+            for j, spec in enumerate(cfg.pattern):
+                per_rep = [
+                    _layer_params(cfg, spec,
+                                  jax.random.fold_in(ks[3], i * period + j))
+                    for i in range(cfg.n_super)]
+                stacks.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *per_rep))
+            params["scan"] = tuple(stacks)
+        for t, spec in enumerate(cfg.tail_specs):
+            params[f"tail{t}"] = _layer_params(cfg, spec, ks[4 + t])
+        if cfg.encoder is not None:
+            params["encoder"] = _encoder_params(cfg, ks[-1])
+        if cfg.max_position and cfg.norm == "ln":   # whisper: learned pos
+            params["pos_embed"] = (jax.random.normal(
+                ks[-1], (min(cfg.max_position, 1 << 16), cfg.d_model))
+                * 0.01).astype(jnp.bfloat16)
+        return params
+
+    def param_specs(self) -> PyTree:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -- forward ----------------------------------------------------------------
+    def _embed(self, params: PyTree, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.embed_scale:
+            x = (x.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(x.dtype)
+        return x
+
+    def _extras(self, params: PyTree, extras: Optional[dict],
+                batch: int) -> Optional[dict]:
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            assert extras is not None and "frames" in extras
+            enc_out = encode(cfg, params["encoder"], extras["frames"],
+                             self.kv_chunk, self.unroll_layers,
+                             self.inner_unroll)
+            return {"src": enc_out}
+        if cfg.n_img_tokens:
+            assert extras is not None and "img" in extras
+            return {"src": extras["img"]}
+        return None
+
+    def _logits(self, params: PyTree, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = _norm(cfg, params["final"], x)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ head).astype(jnp.float32)
+        if self.logits_pspec is not None:
+            spec = self.logits_pspec
+            if len(spec) > logits.ndim:      # (B,1,V) decode vs (B,S,V)
+                spec = type(spec)(*spec[-logits.ndim:])
+            logits = jax.lax.with_sharding_constraint(logits, spec)
+        return softcap(logits, cfg.final_softcap)
+
+    def forward(self, params: PyTree, tokens: jax.Array,
+                extras: Optional[dict] = None, positions=None,
+                want_cache: bool = False) -> Tuple[jax.Array, jax.Array, PyTree]:
+        """Full-sequence forward. Returns (logits, aux_loss, caches)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        if "pos_embed" in params:
+            pe = params["pos_embed"]
+            x = x + jax.lax.dynamic_slice_in_dim(pe, 0, S, axis=0)[None]
+        positions = jnp.arange(S) if positions is None else positions
+        src = self._extras(params, extras, B)
+        aux_total = jnp.zeros((), jnp.float32)
+        caches: Dict[str, PyTree] = {}
+
+        if cfg.n_super > 0:
+            def superblock(x, slices):
+                aux_acc = jnp.zeros((), jnp.float32)
+                blobs = []
+                for spec, lp in zip(cfg.pattern, slices):
+                    x, aux, blob = apply_layer_seq(
+                        cfg, spec, lp, x, positions, src, self.kv_chunk,
+                        want_cache, self.inner_unroll)
+                    aux_acc += aux
+                    blobs.append(blob)
+                return x, (aux_acc, tuple(blobs))
+
+            if self.remat_policy == "dots":
+                body = jax.checkpoint(
+                    superblock,
+                    policy=jax.checkpoint_policies
+                    .dots_with_no_batch_dims_saveable)
+            else:
+                body = jax.checkpoint(superblock)
+
+            if self.unroll_layers:
+                blob_list = []
+                for i in range(cfg.n_super):
+                    slices = jax.tree.map(lambda a: a[i], params["scan"])
+                    x, (aux_step, blobs) = body(x, slices)
+                    aux_total += aux_step
+                    blob_list.append(blobs)
+                if want_cache:
+                    caches["scan"] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *blob_list)
+                else:
+                    caches["scan"] = blob_list[-1]
+            else:
+                def scan_body(carry, slices):
+                    x, aux = carry
+                    x, (aux_step, blobs) = body(x, slices)
+                    return (x, aux + aux_step), blobs
+
+                (x, aux_total), blob_stacks = jax.lax.scan(
+                    scan_body, (x, aux_total), params["scan"])
+                caches["scan"] = blob_stacks
+
+        for t, spec in enumerate(cfg.tail_specs):
+            fn = jax.checkpoint(
+                lambda lp, xx, spec=spec: apply_layer_seq(
+                    cfg, spec, lp, xx, positions, src, self.kv_chunk,
+                    want_cache, self.inner_unroll))
+            x, aux, blob = fn(params[f"tail{t}"], x)
+            aux_total += aux
+            caches[f"tail{t}"] = blob
+
+        return self._logits(params, x), aux_total, caches
+
+    # -- loss ---------------------------------------------------------------------
+    def loss(self, params: PyTree, batch: dict) -> Tuple[jax.Array, dict]:
+        """batch: tokens (B,S), labels (B,S) with -100 = ignore, extras."""
+        logits, aux, _ = self.forward(params, batch["tokens"],
+                                      batch.get("extras"))
+        labels = batch["labels"]
+        valid = labels >= 0
+        safe = jnp.maximum(labels, 0)
+        # mask-sum CE (no gather): stays fully shardable over a vocab-sharded
+        # logits tensor — take_along_axis would force an all-gather of logits
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+        label_logit = jnp.sum(
+            jnp.where(viota == safe[..., None], logits, 0.0), axis=-1)
+        nll = lse - label_logit
+        denom = jnp.maximum(valid.sum(), 1)
+        ce = jnp.where(valid, nll, 0.0).sum() / denom
+        total = ce + _MOE_AUX_COEF * aux
+        return total, {"ce": ce, "aux": aux,
+                       "tokens": denom.astype(jnp.float32)}
+
+    # -- decode ----------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int,
+                   abstract: bool = False) -> PyTree:
+        cfg = self.cfg
+        cache: Dict[str, PyTree] = {}
+        if cfg.n_super > 0:
+            stacks = []
+            for spec in cfg.pattern:
+                one = init_layer_cache(cfg, spec, batch, cache_len, abstract)
+                if abstract:
+                    stacked = jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(
+                            (cfg.n_super,) + s.shape, s.dtype), one)
+                else:
+                    stacked = jax.tree.map(
+                        lambda a: jnp.broadcast_to(
+                            a[None], (cfg.n_super,) + a.shape).copy(), one)
+                stacks.append(stacked)
+            cache["scan"] = tuple(stacks)
+        for t, spec in enumerate(cfg.tail_specs):
+            cache[f"tail{t}"] = init_layer_cache(cfg, spec, batch, cache_len,
+                                                 abstract)
+        return cache
+
+    def decode_step(self, params: PyTree, cache: PyTree, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, PyTree]:
+        """One token for every sequence. tokens: (B, 1); pos: scalar."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if "pos_embed" in params:
+            pe = params["pos_embed"]
+            L = pe.shape[0]
+            x = x + jax.lax.dynamic_slice_in_dim(
+                pe, jnp.minimum(pos, L - 1), 1, axis=0)[None]
+        new_cache: Dict[str, PyTree] = {}
+
+        if cfg.n_super > 0:
+            def scan_body(x, inp):
+                slices, cache_slices = inp
+                new_blobs = []
+                for spec, lp, cb in zip(cfg.pattern, slices, cache_slices):
+                    x, nb = apply_layer_step(cfg, spec, lp, cb, x, pos,
+                                             self.inner_unroll)
+                    new_blobs.append(nb)
+                return x, tuple(new_blobs)
+
+            if self.unroll_layers:
+                blob_list = []
+                for i in range(cfg.n_super):
+                    inp = jax.tree.map(lambda a: a[i],
+                                       (params["scan"], cache["scan"]))
+                    x, blobs = scan_body(x, inp)
+                    blob_list.append(blobs)
+                new_cache["scan"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *blob_list)
+            else:
+                x, new_scan = jax.lax.scan(scan_body, x,
+                                           (params["scan"], cache["scan"]))
+                new_cache["scan"] = new_scan
+
+        for t, spec in enumerate(cfg.tail_specs):
+            x, nb = apply_layer_step(cfg, spec, params[f"tail{t}"],
+                                     cache[f"tail{t}"], x, pos,
+                                     self.inner_unroll)
+            new_cache[f"tail{t}"] = nb
+
+        return self._logits(params, x), new_cache
+
+    def prefill(self, params: PyTree, tokens: jax.Array, cache_len: int,
+                extras: Optional[dict] = None
+                ) -> Tuple[jax.Array, PyTree]:
+        """Process a prompt, building a decode cache. Returns (logits, cache).
+
+        Attention K/V computed for the prompt are written into the cache
+        (ring-placed for local windows).
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        logits, _, blobs = self.forward(params, tokens, extras,
+                                        want_cache=True)
+        cache = self.init_cache(B, cache_len)
+
+        def place(spec: LayerSpec, blob: PyTree, slot: PyTree) -> PyTree:
+            out = dict(slot)
+            if spec.mix in (ATTN_FULL, ATTN_NONCAUSAL):
+                L = slot["k"].shape[-3]
+                take = min(S, L)
+                for key in ("k", "v"):
+                    seq = blob[key][..., S - take:, :, :] if blob[key].ndim == 5 \
+                        else blob[key][:, S - take:, :, :]
+                    axis = blob[key].ndim - 3
+                    if "kscale" in slot:              # int8 cache
+                        q, sc = _quantize_kv(seq)
+                        out[key] = jax.lax.dynamic_update_slice_in_dim(
+                            slot[key], q, 0, axis=axis)
+                        out[key + "scale"] = \
+                            jax.lax.dynamic_update_slice_in_dim(
+                                slot[key + "scale"], sc, 0, axis=axis)
+                        continue
+                    upd = jax.lax.dynamic_update_slice_in_dim(
+                        slot[key], seq.astype(slot[key].dtype), 0,
+                        axis=axis)
+                    out[key] = upd
+            elif spec.mix == ATTN_LOCAL:
+                L = slot["k"].shape[-3]
+                take = min(S, L)
+                positions = jnp.arange(S - take, S)
+                slots = jnp.mod(positions, L)
+                for key in ("k", "v"):
+                    seq = blob[key][..., S - take:, :, :]
+                    axis = blob[key].ndim - 3
+                    moved = jnp.moveaxis(slot[key], axis, 0)
+                    seqm = jnp.moveaxis(seq.astype(slot[key].dtype), axis, 0)
+                    out[key] = jnp.moveaxis(moved.at[slots].set(seqm), 0, axis)
+            for key in ("h", "conv", "s", "shift_t", "shift_c", "xk", "xv"):
+                if key in blob:
+                    out[key] = blob[key].astype(slot[key].dtype)
+            return out
+
+        new_cache: Dict[str, PyTree] = {}
+        if cfg.n_super > 0:
+            new_cache["scan"] = tuple(
+                place(spec, blobs["scan"][j], cache["scan"][j])
+                for j, spec in enumerate(cfg.pattern))
+        for t, spec in enumerate(cfg.tail_specs):
+            new_cache[f"tail{t}"] = place(spec, blobs[f"tail{t}"],
+                                          cache[f"tail{t}"])
+        return logits, new_cache

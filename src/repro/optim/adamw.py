@@ -1,0 +1,74 @@
+"""AdamW with configurable moment dtype (bf16 moments halve optimizer HBM
+for the 400B llama4 single-pod fit — see EXPERIMENTS.md SDry-run)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+OptState = Dict[str, PyTree]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Union[float, Callable[[jax.Array], jax.Array]] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+    grad_clip: float = 1.0
+
+    def init(self, params: PyTree) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def _lr(self, count: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(count)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads: PyTree, state: OptState, params: PyTree
+               ) -> Tuple[PyTree, OptState]:
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        lr = self._lr(count)
+        # global-norm clip (f32 accumulation)
+        gsq = jax.tree.reduce(
+            lambda a, b: a + b,
+            jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                         grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+            if self.grad_clip else 1.0
+
+        bc1 = 1.0 - self.b1 ** cf
+        bc2 = 1.0 - self.b2 ** cf
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * gf
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * gf * gf
+            step = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + self.eps)
+            if self.weight_decay and p.ndim >= 2:
+                step = step + lr * self.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - step).astype(p.dtype)
+            return p_new, m_new.astype(self.moment_dtype), \
+                v_new.astype(self.moment_dtype)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = {"m": treedef.unflatten([o[1] for o in out]),
+                     "v": treedef.unflatten([o[2] for o in out]),
+                     "count": count}
+        return new_params, new_state

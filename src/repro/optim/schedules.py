@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(1, warmup_steps)
+        prog = jnp.clip((c - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return sched

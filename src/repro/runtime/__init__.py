@@ -1,0 +1,8 @@
+from .sharding import MeshAxes, ShardingRules, profile_for
+from .checkpoint import ArtifactStore, CheckpointManager
+from .fault import HeartbeatMonitor, SimulatedFailure, run_with_restarts
+from .elastic import reshard_state
+
+__all__ = ["MeshAxes", "ShardingRules", "profile_for", "ArtifactStore",
+           "CheckpointManager", "HeartbeatMonitor", "SimulatedFailure",
+           "run_with_restarts", "reshard_state"]

@@ -1,0 +1,38 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints store *logical* arrays (runtime/checkpoint.py), so changing the
+device count between runs is a restore-time resharding: build the new mesh,
+derive PartitionSpecs from the same ShardingRules, and device_put each
+leaf. Scale-down after a pod loss and scale-up both reduce to this.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import ShardingRules
+
+PyTree = Any
+
+
+def state_shardings(cfg, mesh: Mesh, state_specs: PyTree,
+                    profile: Optional[str] = None) -> PyTree:
+    """NamedSharding tree for a train state on an arbitrary mesh."""
+    from jax.sharding import PartitionSpec as P
+    rules = ShardingRules(cfg, mesh, profile or "tp")
+    pspecs = {
+        "params": rules.param_pspecs(state_specs["params"]),
+        "opt": {"m": rules.opt_state_pspecs(state_specs["params"]),
+                "v": rules.opt_state_pspecs(state_specs["params"]),
+                "count": P()},
+        "step": P(),
+    }
+    return rules.to_shardings(pspecs)
+
+
+def reshard_state(state: PyTree, shardings: PyTree) -> PyTree:
+    """Reshard a (restored) logical state onto new shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings)

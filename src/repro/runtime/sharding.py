@@ -1,0 +1,256 @@
+"""Sharding rules: parameter/cache/batch PartitionSpecs per architecture.
+
+Profiles:
+
+* ``tp`` (default): tensor parallel over "model" (heads / d_ff / vocab
+  columns), data parallel over ("pod",)+"data"; optimizer states are
+  additionally sharded over "data" (ZeRO-1).
+* ``fsdp``: like ``tp`` but parameters themselves are also sharded over
+  "data" at rest (all-gathered per layer inside the scan) — required for
+  mixtral-8x22b / llama4-400b whose TP-only shards exceed HBM.
+
+Dims that do not divide the mesh axis are left unsharded (GSPMD padding is
+legal but wasteful; we prefer explicit replication and note the cost — see
+DESIGN.md SS5: deepseek 56 heads, whisper vocab 51866).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...] = ("data",)     # ("pod","data") on multi-pod
+    tp: str = "model"
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        dp = tuple(n for n in names if n in ("pod", "data"))
+        return cls(dp=dp, tp="model" if "model" in names else names[-1])
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+class ShardingRules:
+    """Derives PartitionSpecs for a model's params/caches/batches."""
+
+    def __init__(self, cfg, mesh: Mesh, profile: str = "tp") -> None:
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axes = MeshAxes.from_mesh(mesh)
+        self.tp_size = _axis_size(mesh, self.axes.tp)
+        self.dp_size = _axis_size(mesh, self.axes.dp)
+        self.profile = profile
+
+    # -- helpers ---------------------------------------------------------------
+    def _col(self, dim: int) -> Optional[str]:
+        """Shard a dim over tp if it divides evenly."""
+        return self.axes.tp if dim % self.tp_size == 0 else None
+
+    def _param_rule(self, name: str, shape: Tuple[int, ...]) -> P:
+        cfg = self.cfg
+        tp = self.axes.tp
+        c = self._col
+        if name == "embed" and getattr(cfg, "tie_embeddings", False):
+            # tied: vocab-sharded so the head matmul emits vocab-sharded
+            # logits with no collective (lookup is a cheap masked psum)
+            return P(c(shape[0]), None)
+        if name in ("embed", "pos_embed", "pos"):
+            return P(None, c(shape[-1]))
+        if name == "lm_head":
+            return P(None, c(shape[-1]))
+        if name in ("wq", "wk", "wv", "w1", "w3", "s1", "s3", "w_gate",
+                    "w_in", "w_a", "w_x", "wr", "wg", "maa_a", "wd_a"):
+            return P(*([None] * (len(shape) - 1) + [c(shape[-1])]))
+        if name in ("wo", "w2", "s2", "w_out"):
+            # row-parallel: contraction dim sharded
+            return P(*([None] * (len(shape) - 2) + [c(shape[-2]), None]))
+        if name == "router":
+            return P(None, None)
+        if name in ("bq", "bk", "bv", "b1", "b_a", "b_x", "lam", "w0",
+                    "gn_w"):
+            return P(c(shape[-1]))
+        if name == "conv_w":
+            return P(None, c(shape[-1]))
+        if name == "mu":
+            return P(None, c(shape[-1]))
+        if name in ("maa_b", "wd_b"):
+            return P(*([None] * (len(shape) - 1) + [c(shape[-1])]))
+        if name == "u":
+            return P(c(shape[0]), None) if len(shape) == 2 else P(None)
+        # rwkv wk/wv in channel-mix reuse wk/wv names (handled above);
+        # norms, biases, gates, scalars: replicate
+        return P(*([None] * len(shape)))
+
+    def _moe_rule(self, name: str, shape: Tuple[int, ...]) -> Optional[P]:
+        """Expert tensors (E, D, F) / (E, F, D): EP if E divides tp, else TP."""
+        if name not in ("w1", "w3", "w2") or len(shape) < 3:
+            return None
+        E = self.cfg.moe.num_experts if self.cfg.moe else 0
+        if shape[-3] != E or E == 0:
+            return None
+        lead = [None] * (len(shape) - 3)
+        if E % self.tp_size == 0:
+            return P(*lead, self.axes.tp, None, None)        # EP
+        if name == "w2":
+            return P(*lead, None, self._col(shape[-2]), None)  # TP rows
+        return P(*lead, None, None, self._col(shape[-1]))      # TP cols
+
+    def _fsdpify(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Also shard the largest unsharded dim over data (params at rest)."""
+        if len(shape) < 2 or int(jax_prod(shape)) < (1 << 20):
+            return spec
+        dp = self.axes.dp
+        dims = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_size = -1, 0
+        for i, (d, s) in enumerate(zip(dims, shape)):
+            if d is None and s % self.dp_size == 0 and s > best_size:
+                best, best_size = i, s
+        if best >= 0:
+            dims[best] = dp if len(dp) > 1 else dp[0]
+        return P(*dims)
+
+    # -- public API -----------------------------------------------------------
+    def param_pspecs(self, param_specs: PyTree) -> PyTree:
+        """PartitionSpec tree matching the model parameter tree."""
+
+        def rule(path, leaf):
+            name = _leaf_name(path)
+            stacked = any(_key_str(k) in ("scan", "layers")
+                          for k in path)
+            shape = tuple(leaf.shape)
+            base_shape = shape[1:] if stacked else shape
+            spec = self._moe_rule(name, base_shape)
+            if spec is None:
+                spec = self._param_rule(name, base_shape)
+            if self.profile == "fsdp":
+                spec = self._fsdpify(spec, base_shape)
+            if stacked:
+                spec = P(*((None,) + tuple(spec)))
+            return spec
+
+        return jax.tree_util.tree_map_with_path(rule, param_specs)
+
+    def opt_state_pspecs(self, param_specs: PyTree) -> PyTree:
+        """ZeRO-1: moments sharded over data on top of the param sharding."""
+
+        def rule(path, leaf):
+            name = _leaf_name(path)
+            stacked = any(_key_str(k) in ("scan", "layers")
+                          for k in path)
+            shape = tuple(leaf.shape)
+            base_shape = shape[1:] if stacked else shape
+            spec = self._moe_rule(name, base_shape)
+            if spec is None:
+                spec = self._param_rule(name, base_shape)
+            spec = self._fsdpify(spec, base_shape)   # always ZeRO-1
+            if stacked:
+                spec = P(*((None,) + tuple(spec)))
+            return spec
+
+        return jax.tree_util.tree_map_with_path(rule, param_specs)
+
+    def cache_pspecs(self, cache_specs: PyTree) -> PyTree:
+        """Decode-cache sharding: batch over dp; heads (or head_dim) over tp."""
+
+        def rule(path, leaf):
+            name = _leaf_name(path)
+            nd = leaf.ndim
+            if name in ("k", "v", "xk", "xv"):
+                # (..., B, L, K, hd)
+                lead = [None] * (nd - 4)
+                dp = self._dp_if(leaf.shape[-4])
+                kspec = self._col(leaf.shape[-2])
+                hspec = None if kspec else self._col(leaf.shape[-1])
+                return P(*lead, dp, None, kspec, hspec)
+            if name in ("kscale", "vscale"):     # (..., B, L, K, 1)
+                lead = [None] * (nd - 4)
+                return P(*lead, self._dp_if(leaf.shape[-4]), None,
+                         self._col(leaf.shape[-2]), None)
+            if name == "h":                     # (..., B, R)
+                return P(*([None] * (nd - 2)), self._dp_if(leaf.shape[-2]),
+                         self._col(leaf.shape[-1]))
+            if name == "conv":                  # (..., B, w-1, R)
+                return P(*([None] * (nd - 3)), self._dp_if(leaf.shape[-3]),
+                         None, self._col(leaf.shape[-1]))
+            if name == "s":                     # (..., B, H, hd, hd)
+                return P(*([None] * (nd - 4)), self._dp_if(leaf.shape[-4]),
+                         self._col(leaf.shape[-3]), None, None)
+            if name in ("shift_t", "shift_c"):  # (..., B, D)
+                return P(*([None] * (nd - 2)), self._dp_if(leaf.shape[-2]),
+                         self._col(leaf.shape[-1]))
+            return P(*([None] * nd))
+
+        return jax.tree_util.tree_map_with_path(rule, cache_specs)
+
+    def _dp_if(self, dim: int):
+        """dp axis spec if the dim divides the dp size (B=1 long-context)."""
+        if dim % self.dp_size != 0:
+            return None
+        return self.axes.dp if len(self.axes.dp) > 1 else self.axes.dp[0]
+
+    def batch_pspecs(self, batch_specs: PyTree) -> PyTree:
+        """Batch dim over dp. Supports leading grad-accum dim via name."""
+
+        def rule(path, leaf):
+            name = _leaf_name(path)
+            nd = leaf.ndim
+            if name in ("tokens", "labels"):
+                return P(*([None] * (nd - 2)), self._dp_if(leaf.shape[-2]),
+                         None)
+            if name in ("frames", "img"):
+                return P(*([None] * (nd - 3)), self._dp_if(leaf.shape[-3]),
+                         None, self._col(leaf.shape[-1]))
+            if name == "pos":
+                return P()
+            return P(*([None] * nd))
+
+        return jax.tree_util.tree_map_with_path(rule, batch_specs)
+
+    # -- NamedSharding wrappers ---------------------------------------------------
+    def to_shardings(self, pspec_tree: PyTree) -> PyTree:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), pspec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        s = _key_str(k)
+        if not s.isdigit():
+            return s
+    return ""
+
+
+def jax_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def profile_for(cfg) -> str:
+    """fsdp for >=100B-param models, tp otherwise."""
+    return "fsdp" if cfg.param_count() > 100e9 else "tp"

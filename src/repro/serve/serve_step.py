@@ -1,0 +1,30 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token/step)."""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def make_serve_step(model):
+    """serve_step(params, cache, tokens (B,1), pos) -> (next (B,1), cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = model.decode_step(params, cache, tokens, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], new_cache
+
+    return serve_step
+
+
+def make_prefill(model, cache_len: int):
+    """prefill(params, tokens, extras) -> (last-token logits, cache)."""
+
+    def prefill(params, tokens, extras=None):
+        logits, cache = model.prefill(params, tokens, cache_len, extras)
+        return logits[:, -1, :], cache
+
+    return prefill

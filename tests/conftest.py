@@ -1,0 +1,36 @@
+"""Test fixtures. NOTE: device count stays 1 here — only launch/dryrun.py
+forces 512 fake devices; multi-device tests spawn subprocesses."""
+import os
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(SRC))
+
+
+@pytest.fixture
+def fake_clock():
+    class Clock:
+        def __init__(self):
+            self.t = 1_000_000.0
+
+        def __call__(self):
+            return self.t
+
+        def advance(self, dt):
+            self.t += dt
+    return Clock()
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 300) -> str:
+    """Run python code in a subprocess with N fake XLA devices."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout

@@ -1,0 +1,68 @@
+import numpy as np
+import pytest
+
+from repro.core import Catalog, Entry, FsType, HsmState
+
+
+def _entry(fid, **kw):
+    defaults = dict(parent_fid=1, name=f"f{fid}", path=f"/a/f{fid}",
+                    type=FsType.FILE, size=fid * 100, blocks=fid * 100,
+                    owner="foo", atime=1.0, mtime=1.0, ctime=1.0)
+    defaults.update(kw)
+    return Entry(fid=fid, **defaults)
+
+
+def test_upsert_get_roundtrip():
+    cat = Catalog(n_shards=3)
+    e = _entry(42, owner="bar", pool="ssd", hsm_state=HsmState.ARCHIVED,
+               xattrs={"k": "v"}, stripe_osts=(1, 2))
+    cat.upsert(e)
+    out = cat.get(42)
+    assert out.owner == "bar" and out.pool == "ssd"
+    assert out.hsm_state == HsmState.ARCHIVED
+    assert out.xattrs == {"k": "v"} and out.stripe_osts == (1, 2)
+    assert len(cat) == 1
+
+
+def test_update_fields_and_remove():
+    cat = Catalog(n_shards=2)
+    cat.upsert(_entry(7))
+    assert cat.update_fields(7, size=999, owner="baz")
+    assert cat.get(7).size == 999 and cat.get(7).owner == "baz"
+    assert cat.remove(7)
+    assert cat.get(7) is None
+    assert not cat.remove(7)
+
+
+def test_vector_query():
+    cat = Catalog(n_shards=4)
+    for i in range(1, 101):
+        cat.upsert(_entry(i, owner="foo" if i % 2 else "bar"))
+    fids = cat.query_fids(lambda c: c["size"] > 5000)
+    assert sorted(fids.tolist()) == list(range(51, 101))
+    cols = cat.arrays()
+    assert len(cols["_paths"]) == 100
+
+
+def test_sqlite_persistence_roundtrip(tmp_path):
+    db = str(tmp_path / "cat.db")
+    cat = Catalog(n_shards=2, db_path=db)
+    for i in range(1, 21):
+        cat.upsert(_entry(i))
+    cat.remove(5)
+    # crash: new catalog from same file
+    cat2 = Catalog(n_shards=2, db_path=db)
+    n = cat2.load_from_db()
+    assert n == 19
+    assert cat2.get(5) is None and cat2.get(6).size == 600
+
+
+def test_delta_hooks_fire():
+    cat = Catalog(n_shards=1)
+    deltas = []
+    cat.add_delta_hook(lambda old, new: deltas.append((old, new)))
+    cat.upsert(_entry(1))
+    cat.update_fields(1, size=5)
+    cat.remove(1)
+    assert len(deltas) == 3
+    assert deltas[0][0] is None and deltas[2][1] is None

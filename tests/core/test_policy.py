@@ -1,0 +1,103 @@
+"""Policy language: parser + three-evaluator equivalence (hypothesis)."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Catalog, Entry, FsType, parse_expr, PolicyError
+from repro.core.policy import (KERNEL_COLUMNS, compile_program)
+from repro.core.types import parse_size
+
+NOW = 2_000_000.0
+
+
+def test_paper_example_parses():
+    e = parse_expr("(size > 1GB or owner == 'foo') "
+                   "and path == '/my/fs/*.tar'")
+    ent = dict(size=2 << 30, owner="bar", path="/my/fs/x.tar")
+    assert e.evaluate(ent, NOW)
+    ent2 = dict(size=10, owner="foo", path="/my/fs/y.tar")
+    assert e.evaluate(ent2, NOW)
+    ent3 = dict(size=10, owner="baz", path="/my/fs/y.tar")
+    assert not e.evaluate(ent3, NOW)
+
+
+def test_units_and_ages():
+    assert parse_size("1GB") == 1 << 30
+    assert parse_size("512k") == 512 << 10
+    e = parse_expr("last_access > 1d")
+    assert e.evaluate(dict(atime=NOW - 90000), NOW)
+    assert not e.evaluate(dict(atime=NOW - 100), NOW)
+
+
+def test_type_and_hsm_literals():
+    e = parse_expr("type == dir and hsm_state == released")
+    from repro.core import HsmState
+    assert e.evaluate(dict(type=FsType.DIR, hsm_state=HsmState.RELEASED), NOW)
+
+
+def test_parse_errors():
+    for bad in ("size >", "and size > 1", "size >> 3", "(size > 1"):
+        with pytest.raises(PolicyError):
+            parse_expr(bad)
+
+
+# -- hypothesis: random expressions agree across all evaluators --------------
+
+_num_attr = st.sampled_from(["size", "blocks", "nlink"])
+_cat_attr = st.sampled_from(["owner", "group"])
+_op = st.sampled_from(["==", "!=", ">", ">=", "<", "<="])
+_names = ["foo", "bar", "baz"]
+
+
+def _leaf():
+    num = st.builds(lambda a, o, v: f"{a} {o} {v}", _num_attr, _op,
+                    st.integers(0, 10000))
+    cat = st.builds(lambda a, o, v: f"{a} {o} '{v}'", _cat_attr,
+                    st.sampled_from(["==", "!="]), st.sampled_from(_names))
+    return st.one_of(num, cat)
+
+
+def _expr(depth=2):
+    if depth == 0:
+        return _leaf()
+    sub = _expr(depth - 1)
+    return st.one_of(
+        _leaf(),
+        st.builds(lambda a, b: f"({a} and {b})", sub, sub),
+        st.builds(lambda a, b: f"({a} or {b})", sub, sub),
+        st.builds(lambda a: f"not ({a})", sub),
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(text=_expr(), seed=st.integers(0, 99))
+def test_evaluator_equivalence(text, seed):
+    rng = np.random.default_rng(seed)
+    cat = Catalog(n_shards=2)
+    for fid in range(1, 41):
+        cat.upsert(Entry(
+            fid=fid, name=f"f{fid}", path=f"/x/f{fid}", type=FsType.FILE,
+            size=int(rng.integers(0, 12000)),
+            blocks=int(rng.integers(0, 12000)),
+            nlink=int(rng.integers(1, 5)),
+            owner=_names[rng.integers(0, 3)],
+            group=_names[rng.integers(0, 3)],
+            atime=NOW - 10, mtime=NOW - 10, ctime=NOW - 10))
+    expr = parse_expr(text)
+    cols = cat.arrays()
+    vec = expr.mask(cols, cat.strings, NOW)
+    # per-entry evaluation
+    by_fid = {int(f): m for f, m in zip(cols["fid"], vec)}
+    for e in cat.entries():
+        assert expr.evaluate(e, NOW) == bool(by_fid[e.fid]), text
+    # kernel program (pure-jnp oracle path)
+    from repro.kernels.policy_scan.ref import eval_program
+    import jax.numpy as jnp
+    ops, ci, opr = compile_program(expr, cat.strings, NOW)
+    kcols = jnp.stack([jnp.asarray(cols[c], jnp.float32)
+                       for c in KERNEL_COLUMNS])
+    kmask = np.asarray(eval_program(kcols, jnp.asarray(ops),
+                                    jnp.asarray(ci), jnp.asarray(opr)))
+    np.testing.assert_array_equal(kmask > 0.5, vec, err_msg=text)

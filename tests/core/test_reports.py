@@ -1,0 +1,103 @@
+"""rbh-report / rbh-find / rbh-du clones + alerts + plugins (C5/C9/C10)."""
+import time
+
+from repro.core import (AlertManager, AlertRule, Catalog, PolicyDefinition,
+                        PolicyEngine, Reports, Scanner, StatsAggregator,
+                        PLUGIN_REGISTRY)
+from repro.fs import LustreSim
+
+
+def _fs():
+    fs = LustreSim(n_osts=4)
+    fs.define_pool("ssd", (0, 1))
+    fs.define_pool("hdd", (2, 3))
+    proj = fs.mkdir(fs.root_fid(), "proj")
+    logs = fs.mkdir(proj, "logs")
+    for i in range(10):
+        f = fs.create(proj, f"data{i}.tar", owner="foo", pool="ssd")
+        fs.write(f, (i + 1) * 1000)
+    for i in range(5):
+        f = fs.create(logs, f"log{i}.txt", owner="bar", pool="hdd")
+        fs.write(f, 10)
+    return fs, proj, logs
+
+
+def test_find_and_du():
+    fs, proj, logs = _fs()
+    cat = Catalog()
+    stats = StatsAggregator(cat.strings)
+    cat.add_delta_hook(stats.on_delta)
+    Scanner(fs, cat).scan()
+    rep = Reports(cat, stats)
+    assert len(rep.find("path == '/proj/*.tar' and size > 5000")) == 5
+    assert len(rep.find("owner == 'bar'")) == 5
+    du = rep.du("/proj/logs")
+    assert du["files"] == 5 and du["volume"] == 50
+    du_all = rep.du("/proj")
+    assert du_all["files"] == 15
+    top = rep.top_files(k=3)
+    assert top[0]["size"] == 10000.0
+    assert rep.top_dirs_by_count(1)[0]["children"] >= 10
+
+
+def test_report_user_o1_matches_scan():
+    fs, proj, logs = _fs()
+    cat = Catalog()
+    stats = StatsAggregator(cat.strings)
+    cat.add_delta_hook(stats.on_delta)
+    Scanner(fs, cat).scan()
+    rep = Reports(cat, stats)
+    rows = rep.report_user("foo")
+    files = [r for r in rows if r["type"] == "file"][0]
+    assert files["count"] == 10
+    assert files["volume"] == sum((i + 1) * 1000 for i in range(10))
+    txt = rep.format_user_report("foo")
+    assert "foo" in txt and "file" in txt
+
+
+def test_alerts_fire_on_ingest():
+    fs, proj, logs = _fs()
+    cat = Catalog()
+    am = AlertManager()
+    am.add_rule(AlertRule("big_tar", "size > 8000 and name == '*.tar'"))
+    cat.add_entry_hook(am.on_entry)
+    Scanner(fs, cat).scan()
+    assert {a["path"] for a in am.fired} == {"/proj/data8.tar",
+                                             "/proj/data9.tar"}
+
+
+def test_generic_policy_plugins():
+    fs, proj, logs = _fs()
+    cat = Catalog()
+    Scanner(fs, cat).scan()
+    eng = PolicyEngine(cat)
+    # v3 generic policy from the plugin registry: tag then purge logs
+    eng.register(PolicyDefinition.from_config(
+        name="tag_logs", action=PLUGIN_REGISTRY["tag_status"](fs, cat),
+        scope="type == file",
+        rules=[("logs", "path == '/proj/logs/*'", {"status": "expired"})]))
+    r = eng.run("tag_logs")
+    assert r.succeeded == 5
+    eng.register(PolicyDefinition.from_config(
+        name="purge_expired", action=PLUGIN_REGISTRY["purge"](fs, cat),
+        scope="status == 'expired'"))
+    r2 = eng.run("purge_expired")
+    assert r2.succeeded == 5
+    assert fs.count() == 3 + 10   # root, proj, logs + tars
+
+
+def test_pool_migration_plugin():
+    fs, proj, logs = _fs()
+    cat = Catalog()
+    Scanner(fs, cat).scan()
+    eng = PolicyEngine(cat)
+    eng.register(PolicyDefinition.from_config(
+        name="ssd_to_hdd", action=PLUGIN_REGISTRY["migrate_pool"](fs, cat),
+        scope="pool == 'ssd' and size > 7000",
+        rules=[("all", "true", {"pool": "hdd"})]))
+    r = eng.run("ssd_to_hdd")
+    assert r.succeeded == 3       # files of 8000, 9000, 10000 bytes
+    moved = [e for e in cat.entries() if e.pool == "hdd" and e.size > 7000]
+    assert len(moved) == 3
+    for e in moved:
+        assert all(o in (2, 3) for o in e.stripe_osts)

@@ -1,0 +1,70 @@
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Catalog, Scanner, multi_client_scan, prune_missing
+from repro.fs import LustreSim
+
+
+def build_tree(fs, seed: int, n_dirs: int, files_per_dir: int) -> int:
+    rng = random.Random(seed)
+    dirs = [fs.root_fid()]
+    total = 1
+    for i in range(n_dirs):
+        parent = rng.choice(dirs)
+        d = fs.mkdir(parent, f"d{i}")
+        dirs.append(d)
+        total += 1
+        for j in range(rng.randint(0, files_per_dir)):
+            f = fs.create(d, f"f{j}", owner=rng.choice(["a", "b"]))
+            fs.write(f, rng.randint(0, 10000))
+            total += 1
+    return total
+
+
+@pytest.mark.parametrize("threads", [1, 4])
+def test_scan_finds_everything(threads):
+    fs = LustreSim()
+    total = build_tree(fs, seed=1, n_dirs=20, files_per_dir=5)
+    cat = Catalog()
+    st_ = Scanner(fs, cat, n_threads=threads).scan()
+    assert len(cat) == total == fs.count()
+    assert st_.errors == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), threads=st.integers(1, 6))
+def test_scan_thread_count_invariant(seed, threads):
+    """Property: scan result is independent of parallelism (Fig. 3)."""
+    fs = LustreSim()
+    build_tree(fs, seed=seed, n_dirs=10, files_per_dir=3)
+    cat1 = Catalog()
+    Scanner(fs, cat1, n_threads=1).scan()
+    cat2 = Catalog()
+    Scanner(fs, cat2, n_threads=threads).scan()
+    fids1 = sorted(f for s in cat1.shards for f in s.fids())
+    fids2 = sorted(f for s in cat2.shards for f in s.fids())
+    assert fids1 == fids2
+
+
+def test_multi_client_scan_equivalent():
+    fs = LustreSim()
+    total = build_tree(fs, seed=7, n_dirs=30, files_per_dir=4)
+    cat = Catalog()
+    multi_client_scan(fs, cat, n_clients=3, threads_per_client=2)
+    assert len(cat) == total
+
+
+def test_prune_missing_after_deletes():
+    fs = LustreSim()
+    build_tree(fs, seed=3, n_dirs=5, files_per_dir=4)
+    cat = Catalog()
+    Scanner(fs, cat).scan()
+    # delete some files behind the catalog's back
+    victims = [e.fid for e in cat.entries() if e.type == 0][:3]
+    for fid in victims:
+        fs.unlink(fid)
+    removed = prune_missing(fs, cat)
+    assert removed == len(victims)
+    assert len(cat) == fs.count()

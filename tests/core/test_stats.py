@@ -1,0 +1,112 @@
+"""O(1) pre-aggregated stats == recomputation from scratch (paper C6)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Catalog, ChangelogCounters, DirUsage, Entry, FsType,
+                        StatsAggregator)
+from repro.core.types import ChangelogRecord, ChangelogType
+
+
+def _rand_ops(seed, n):
+    rng = np.random.default_rng(seed)
+    ops = []
+    live = set()
+    for i in range(n):
+        kind = rng.choice(["ins", "upd", "del"])
+        if kind == "ins" or not live:
+            fid = 1000 + i
+            live.add(fid)
+            ops.append(("ins", fid, int(rng.integers(0, 10000)),
+                        ["a", "b", "c"][rng.integers(0, 3)]))
+        elif kind == "upd":
+            fid = int(rng.choice(sorted(live)))
+            ops.append(("upd", fid, int(rng.integers(0, 10000)), None))
+        else:
+            fid = int(rng.choice(sorted(live)))
+            live.discard(fid)
+            ops.append(("del", fid, 0, None))
+    return ops
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 500), n=st.integers(1, 120))
+def test_incremental_equals_recompute(seed, n):
+    cat = Catalog(n_shards=2)
+    stats = StatsAggregator(cat.strings)
+    cat.add_delta_hook(stats.on_delta)
+    for kind, fid, size, owner in _rand_ops(seed, n):
+        if kind == "ins":
+            cat.upsert(Entry(fid=fid, name=f"f{fid}", path=f"/f{fid}",
+                             type=FsType.FILE, size=size, blocks=size,
+                             owner=owner))
+        elif kind == "upd":
+            cat.update_fields(fid, size=size, blocks=size)
+        else:
+            cat.remove(fid)
+    # recompute ground truth by full scan of the catalog
+    for owner in ("a", "b", "c"):
+        truth_n = truth_vol = 0
+        for e in cat.entries():
+            if e.owner == owner:
+                truth_n += 1
+                truth_vol += e.size
+        rep = stats.report_user(owner)
+        got_n = sum(r["count"] for r in rep)
+        got_vol = sum(r["volume"] for r in rep)
+        assert (got_n, got_vol) == (truth_n, truth_vol)
+    # totals
+    assert stats.total.count == len(cat)
+
+
+def test_async_mode_converges():
+    cat = Catalog(n_shards=2)
+    stats = StatsAggregator(cat.strings, async_mode=True)
+    cat.add_delta_hook(stats.on_delta)
+    for fid in range(1, 201):
+        cat.upsert(Entry(fid=fid, name=f"f{fid}", path=f"/f{fid}",
+                         type=FsType.FILE, size=10, blocks=10, owner="u"))
+    stats.flush()
+    rep = stats.report_user("u")
+    assert rep[0]["count"] == 200 and rep[0]["volume"] == 2000
+    stats.close()
+
+
+def test_size_profile_and_top_users():
+    cat = Catalog()
+    stats = StatsAggregator(cat.strings)
+    cat.add_delta_hook(stats.on_delta)
+    sizes = [0, 10, 100, 2048, 50 << 10, 2 << 20, 2 << 30]
+    for i, s in enumerate(sizes):
+        cat.upsert(Entry(fid=i + 1, name=f"f{i}", path=f"/f{i}",
+                         type=FsType.FILE, size=s, blocks=s, owner="foo"))
+    prof = stats.user_size_profile("foo")
+    assert prof["0"] == 1 and prof["1~31"] == 1 and prof["32~1K"] == 1
+    assert prof["1K~31K"] == 1 and prof["32K~1M"] == 1
+    assert prof["1M~31M"] == 1 and prof["1G~31G"] == 1
+    top = stats.top_users(by="volume", k=1)
+    assert top[0]["user"] == "foo"
+
+
+def test_changelog_counters_per_job():
+    c = ChangelogCounters()
+    for i in range(5):
+        c.on_record(ChangelogRecord(seq=i, type=ChangelogType.CREAT, fid=i,
+                                    uid="alice", jobid="job1"))
+    c.on_record(ChangelogRecord(seq=9, type=ChangelogType.UNLNK, fid=1,
+                                uid="bob", jobid="job2"))
+    snap = c.snapshot()
+    assert snap["per_job"]["job1"][int(ChangelogType.CREAT)] == 5
+    assert snap["per_user"]["bob"][int(ChangelogType.UNLNK)] == 1
+    assert snap["total"] == 6
+
+
+def test_dir_usage_counters():
+    du = DirUsage(max_depth=2)
+    du.on_file(+1, "/a/b/c/f1", 100, 100)
+    du.on_file(+1, "/a/b/f2", 50, 50)
+    du.on_file(+1, "/a/f3", 25, 25)
+    assert du.du("/a")["volume"] == 175
+    assert du.du("/a/b")["volume"] == 150
+    assert du.du("/")["count"] == 3
+    du.on_file(-1, "/a/b/f2", 50, 50)
+    assert du.du("/a/b")["volume"] == 100

@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.catalog import StringTable
+from repro.core.policy import KERNEL_COLUMNS, compile_program, parse_expr
+
+# ---------------------------------------------------------------------------
+# policy_scan
+# ---------------------------------------------------------------------------
+
+
+def _random_cols(rng, n):
+    cols = np.zeros((len(KERNEL_COLUMNS), n), np.float32)
+    cols[KERNEL_COLUMNS.index("size")] = rng.integers(0, 1 << 32, n)
+    cols[KERNEL_COLUMNS.index("blocks")] = rng.integers(0, 1 << 32, n)
+    cols[KERNEL_COLUMNS.index("owner")] = rng.integers(0, 4, n)
+    cols[KERNEL_COLUMNS.index("type")] = rng.integers(0, 2, n)
+    cols[KERNEL_COLUMNS.index("atime")] = 1e6 - rng.integers(0, 1e5, n)
+    return cols
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), n=st.sampled_from([17, 100, 1024, 3000]))
+def test_policy_scan_kernel_vs_ref(seed, n):
+    from repro.kernels.policy_scan.ops import policy_scan
+    from repro.kernels.policy_scan.ref import policy_scan_ref
+    rng = np.random.default_rng(seed)
+    st_ = StringTable()
+    st_.intern("u0"), st_.intern("u1"), st_.intern("u2")
+    cols = _random_cols(rng, n)
+    expr = parse_expr("(size > 1GB or owner == 'u1') and type == file")
+    ops, ci, opr = compile_program(expr, st_, now=1e6)
+    args = (jnp.asarray(cols), jnp.asarray(ops), jnp.asarray(ci),
+            jnp.asarray(opr))
+    kw = dict(size_col=KERNEL_COLUMNS.index("size"),
+              blocks_col=KERNEL_COLUMNS.index("blocks"))
+    mask_k, agg_k = policy_scan(*args, **kw)
+    mask_r, agg_r = policy_scan_ref(*args, **kw)
+    np.testing.assert_allclose(np.asarray(mask_k), np.asarray(mask_r))
+    np.testing.assert_allclose(np.asarray(agg_k), np.asarray(agg_r),
+                               rtol=1e-5, atol=1)
+
+
+def test_policy_scan_end_to_end_catalog():
+    from repro.core import Catalog, Entry, FsType
+    from repro.kernels.policy_scan.ops import scan_catalog
+    cat = Catalog()
+    for i in range(1, 300):
+        cat.upsert(Entry(fid=i, name=f"f{i}", path=f"/f{i}",
+                         type=FsType.FILE, size=i * 1000, blocks=i * 1000,
+                         owner="foo" if i % 3 else "bar"))
+    expr = parse_expr("size > 100000 and owner == 'foo'")
+    fids, agg = scan_catalog(cat, expr, now=time.time())
+    truth = [e.fid for e in cat.entries()
+             if e.size > 100000 and e.owner == "foo"]
+    assert sorted(fids.tolist()) == sorted(truth)
+    assert agg["count"] == len(truth)
+    assert agg["volume"] == sum(e.size for e in cat.entries()
+                                if e.fid in set(truth))
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hkp", [(8, 4, 16), (4, 4, 8), (8, 1, 32)])
+def test_paged_attention_sweep(dtype, hkp):
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    H, K, P = hkp
+    rng = np.random.default_rng(hash(hkp) % 2**31)
+    B, hd, n_pages, max_pages = 2, 32, 16, 4
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), dtype)
+    kp = jnp.asarray(rng.standard_normal((n_pages, P, K, hd)), dtype)
+    vp = jnp.asarray(rng.standard_normal((n_pages, P, K, hd)), dtype)
+    pt = np.full((B, max_pages), -1, np.int32)
+    lens = np.zeros(B, np.int32)
+    for b in range(B):
+        n = rng.integers(1, max_pages + 1)
+        pt[b, :n] = rng.choice(n_pages, n, replace=False)
+        lens[b] = rng.integers((n - 1) * P + 1, n * P + 1)
+    out_k = paged_attention(q, kp, vp, jnp.asarray(pt), jnp.asarray(lens))
+    out_r = paged_attention_ref(q, kp, vp, jnp.asarray(pt),
+                                jnp.asarray(lens))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=tol,
+                               rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 16, 128), (2, 64, 256), (3, 128, 128)])
+def test_rglru_kernel_sweep(shape):
+    from repro.kernels.rglru_scan.ops import rglru_scan
+    from repro.kernels.rglru_scan.ref import rglru_ref
+    B, S, R = shape
+    rng = np.random.default_rng(S)
+    la = jnp.asarray(-np.abs(rng.standard_normal((B, S, R))) * 0.2,
+                     jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, R)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, R)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(rglru_scan(la, b, h0)),
+                               np.asarray(rglru_ref(la, b, h0)),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 2, 16), (2, 4, 64), (4, 8, 32)])
+def test_rwkv6_step_sweep(shape):
+    from repro.kernels.rwkv6_step.ops import rwkv6_step
+    from repro.kernels.rwkv6_step.ref import rwkv6_step_ref
+    B, H, hd = shape
+    rng = np.random.default_rng(hd)
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    r, k, v = mk(B, H, hd), mk(B, H, hd), mk(B, H, hd)
+    w = jnp.asarray(rng.uniform(0.3, 1.0, (B, H, hd)), jnp.float32)
+    u, s0 = mk(H, hd), mk(B, H, hd, hd)
+    yk, sk = rwkv6_step(r, k, v, w, u, s0)
+    yr, sr = rwkv6_step_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), atol=1e-5)

@@ -1,0 +1,115 @@
+"""Chunked online-softmax attention vs naive reference (hypothesis sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.components import attention
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, causal, window, softcap):
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    k = np.repeat(np.asarray(k, np.float32), G, axis=2)
+    v = np.repeat(np.asarray(v, np.float32), G, axis=2)
+    qf = np.asarray(q, np.float32) / np.sqrt(hd)
+    s = np.einsum("bqhd,bkhd->bhqk", qf, k)
+    if softcap:
+        s = softcap * np.tanh(s / softcap)
+    mask = np.asarray(kv_pos)[None, :] >= 0
+    if causal:
+        mask = mask & (np.asarray(kv_pos)[None, :]
+                       <= np.asarray(q_pos)[:, None])
+    if window:
+        mask = mask & (np.asarray(kv_pos)[None, :]
+                       > np.asarray(q_pos)[:, None] - window)
+    s = np.where(mask[None, None], s, -np.inf)
+    mx = np.max(s, axis=-1, keepdims=True)
+    mx = np.where(np.isfinite(mx), mx, 0.0)
+    p = np.exp(s - mx)
+    p = np.where(np.isfinite(s), p, 0.0)
+    denom = np.maximum(p.sum(-1, keepdims=True), 1e-20)
+    return np.einsum("bhqk,bkhd->bqhd", p / denom, v)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 99),
+    sk=st.sampled_from([8, 16, 32, 64]),
+    heads=st.sampled_from([(4, 4), (4, 2), (8, 1)]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 8]),
+    softcap=st.sampled_from([None, 20.0]),
+    chunk=st.sampled_from([4, 8, 16, 1024]),
+)
+def test_attention_matches_naive(seed, sk, heads, causal, window, softcap,
+                                 chunk):
+    H, K = heads
+    rng = np.random.default_rng(seed)
+    B, hd = 2, 8
+    sq = sk
+    q = jnp.asarray(rng.standard_normal((B, sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, sk, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, sk, K, hd)), jnp.float32)
+    q_pos = jnp.arange(sq)
+    kv_pos = jnp.arange(sk)
+    out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                    window=window, logit_softcap=softcap, kv_chunk=chunk)
+    ref = naive_attention(q, k, v, q_pos, kv_pos, causal, window, softcap)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-3, rtol=2e-3)
+
+
+def test_invalid_slots_are_masked():
+    """Cache slots with kv_pos == -1 must not contribute."""
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 1, 8, 2, 4
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    kv_pos_full = jnp.arange(S)
+    out_full = attention(q, k, v, q_pos=jnp.array([S - 1]),
+                         kv_pos=kv_pos_full, causal=True)
+    # poison the masked half; mark invalid
+    k2 = k.at[:, 4:].set(99.0)
+    v2 = v.at[:, 4:].set(99.0)
+    kv_pos_half = jnp.where(jnp.arange(S) < 4, jnp.arange(S), -1)
+    out_half = attention(q, k2, v2, q_pos=jnp.array([S - 1]),
+                         kv_pos=kv_pos_half, causal=True)
+    ref_half = attention(q, k[:, :4], v[:, :4], q_pos=jnp.array([S - 1]),
+                         kv_pos=jnp.arange(4), causal=True)
+    np.testing.assert_allclose(np.asarray(out_half), np.asarray(ref_half),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(out_full), np.asarray(out_half))
+
+
+def test_rwkv_chunked_vs_serial():
+    from repro.models.rwkv6 import wkv_chunked, wkv_ref
+    rng = np.random.default_rng(5)
+    B, S, H, hd = 2, 32, 2, 8
+    mk = lambda s=0.5: jnp.asarray(rng.standard_normal((B, S, H, hd)) * s,
+                                   jnp.float32)
+    r, k, v = mk(), mk(), mk()
+    lw = -jnp.abs(mk(1.0))
+    u = jnp.asarray(rng.standard_normal((H, hd)) * 0.5, jnp.float32)
+    for chunk in (4, 8, 16, 32):
+        y, s_fin = wkv_chunked(r, k, v, lw, u, chunk=chunk)
+        y_ref, s_ref = wkv_ref(r, k, v, lw, u)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s_ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_rglru_assoc_scan_vs_serial():
+    from repro.models.components import rglru_scan
+    from repro.kernels.rglru_scan.ref import rglru_ref
+    rng = np.random.default_rng(6)
+    B, S, R = 2, 33, 8
+    la = jnp.asarray(-np.abs(rng.standard_normal((B, S, R))) * 0.3,
+                     jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, R)), jnp.float32)
+    h = rglru_scan(la, b)
+    h_ref = rglru_ref(la, b, jnp.zeros((B, R)))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)

@@ -1,0 +1,77 @@
+"""Failure detection, checkpoint/restart, straggler mitigation."""
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.fault import (HeartbeatMonitor, RedundantShardRouter,
+                                 SimulatedFailure, run_with_restarts)
+
+
+def test_heartbeat_detects_dead_hosts(fake_clock):
+    hb = HeartbeatMonitor(n_hosts=4, timeout=5.0, clock=fake_clock)
+    assert hb.healthy()
+    fake_clock.advance(3)
+    for h in (0, 1, 2):
+        hb.beat(h)
+    fake_clock.advance(3)
+    assert hb.dead_hosts() == [3]
+    hb.revive(3)
+    assert hb.healthy()
+    hb.mark_dead(1)
+    assert 1 in hb.dead_hosts()
+
+
+def test_run_with_restarts_completes(tmp_path):
+    """Inject failures at fixed steps; training must still finish exactly."""
+    import jax.numpy as jnp
+    cm = CheckpointManager(str(tmp_path / "ck"), keep_last=3)
+    failures = {7, 23}
+    seen = []
+
+    def init_state():
+        return {"acc": jnp.zeros(()), "hist": jnp.zeros(40)}
+
+    def step_fn(state, step):
+        if step in failures:
+            failures.discard(step)
+            raise SimulatedFailure(host=step % 4, step=step)
+        seen.append(step)
+        return {"acc": state["acc"] + step,
+                "hist": state["hist"].at[step].set(1.0)}
+
+    final, restarts, replayed = run_with_restarts(
+        train_steps=30, step_fn=step_fn, init_state=init_state, ckpt=cm,
+        ckpt_interval=5)
+    assert restarts == 2 and replayed > 0
+    # the final accumulator must equal an exact, single-pass run
+    assert float(final["acc"]) == sum(range(30))
+    assert float(final["hist"].sum()) == 30
+
+
+def test_restart_budget_enforced(tmp_path):
+    cm = CheckpointManager(str(tmp_path / "ck"))
+
+    def step_fn(state, step):
+        raise SimulatedFailure(host=0, step=step)
+
+    with pytest.raises(RuntimeError, match="restart budget"):
+        run_with_restarts(5, step_fn, lambda: {"x": np.zeros(1)}, cm,
+                          max_restarts=2)
+
+
+def test_redundant_shards_cover_failures():
+    r = RedundantShardRouter(n_shards=16, n_hosts=8, replication=2)
+    assert r.coverage_without([]) == 1.0
+    assert r.coverage_without([3]) == 1.0          # any single host loss
+    # replication=2 with adjacent assignment: losing 2 adjacent hosts
+    # may drop shards; coverage reports it honestly
+    cov = r.coverage_without([0, 1])
+    assert 0.8 <= cov <= 1.0
+
+
+def test_straggler_picks_fast_replica():
+    r = RedundantShardRouter(n_shards=4, n_hosts=4, replication=2)
+    latency = {0: 10.0, 1: 0.1, 2: 10.0, 3: 0.1}
+    for s in range(4):
+        picked = r.pick(s, lambda h: latency[h])
+        assert latency[picked] <= min(latency[h] for h in r.hosts_for(s))
