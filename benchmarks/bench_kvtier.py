@@ -10,14 +10,14 @@ from repro.kvcache import PagePool, TieredKvCache
 from repro.serve.engine import PagedLMConfig, Request, ServingEngine
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
     # raw append throughput, ample pool (no pressure)
     pool = PagePool(n_pages=512, page_size=16, n_kv=4, head_dim=32)
     tc = TieredKvCache(pool)
     tc.admit(1)
     k = np.ones((4, 32), np.float32)
-    n = 4000
+    n = 1000 if smoke else 4000
     t0 = time.perf_counter()
     for t in range(n):
         tc.append_token(1, k, k)

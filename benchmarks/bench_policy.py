@@ -5,6 +5,11 @@ Four evaluators of the same expression over N entries: per-entry python
 and the Pallas ``policy_scan`` kernel in interpret mode (the TPU path;
 interpret mode measures correctness not speed — on-TPU it fuses the scan
 with aggregation in one HBM pass).
+
+Plus the end-to-end engine comparison: ``engine_scalar`` (legacy per-entry
+execution: O(n) dequeues, per-entry catalog.get, Python rule re-evaluation)
+vs ``engine_batched`` (columnar match, vectorized attribution, chunked
+get_batch execution) on a 1M-entry catalog.
 """
 from __future__ import annotations
 
@@ -13,29 +18,75 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Catalog, Entry, FsType, parse_expr
+from repro.core import (Catalog, Entry, FsType, PolicyDefinition,
+                        PolicyEngine, parse_expr)
 from repro.core.policy import KERNEL_COLUMNS, compile_program
 from repro.kernels.policy_scan.ops import policy_scan
 
 EXPR = "(size > 1GB or owner == 'user3') and not last_access > 30d"
 N = 120_000
+N_ENGINE = 1_000_000
 
 
 def _catalog(n):
     rng = np.random.default_rng(1)
     now = time.time()
     cat = Catalog(n_shards=4)
-    entries = [Entry(fid=i + 1, name=f"f{i}", path=f"/p/f{i}",
-                     type=FsType.FILE, size=int(rng.integers(0, 2 << 30)),
-                     blocks=100, owner=f"user{int(rng.integers(0, 8))}",
-                     atime=now - float(rng.integers(0, 90 * 86400)))
-               for i in range(n)]
-    cat.upsert_batch(entries)
+    for lo in range(0, n, 100_000):      # chunked build bounds peak memory
+        hi = min(lo + 100_000, n)
+        entries = [Entry(fid=i + 1, name=f"f{i}", path=f"/p/f{i}",
+                         type=FsType.FILE, size=int(rng.integers(0, 2 << 30)),
+                         blocks=100, owner=f"user{int(rng.integers(0, 8))}",
+                         atime=now - float(rng.integers(0, 90 * 86400)))
+                   for i in range(lo, hi)]
+        cat.upsert_batch(entries)
     return cat
 
 
-def run() -> list:
-    cat = _catalog(N)
+def _bench_engine(n: int) -> list:
+    """engine_scalar vs engine_batched on the same catalog + policy."""
+    cat = _catalog(n)
+
+    def act(e, params):
+        return True
+
+    eng = PolicyEngine(cat)
+    # ~17% of entries match: large enough that the legacy path's O(n)
+    # work.pop(0) dequeues dominate, which is exactly the per-entry-scan
+    # degeneration (SII-B1) the batched pipeline removes
+    eng.register(PolicyDefinition.from_config(
+        name="sweep", action=act, scope="type == file",
+        rules=[("big_cold", "size > 1700MB", {})],
+        sort_by="atime", n_threads=4, batch_size=1024))
+
+    rows = []
+    t0 = time.perf_counter()
+    r_s = eng.run("sweep", execution="scalar")
+    dt_s = time.perf_counter() - t0
+    rows.append(("policy_engine_scalar", 1e6 * dt_s / n,
+                 f"{n/dt_s:.0f}_entries_per_s_actions_{r_s.succeeded}"))
+
+    t0 = time.perf_counter()
+    r_b = eng.run("sweep", execution="batched")
+    dt_b = time.perf_counter() - t0
+    assert r_b.succeeded == r_s.succeeded and r_b.matched == r_s.matched
+    rows.append(("policy_engine_batched", 1e6 * dt_b / n,
+                 f"{n/dt_b:.0f}_entries_per_s_speedup_{dt_s/dt_b:.1f}x"))
+
+    t0 = time.perf_counter()
+    r_k = eng.run("sweep", evaluator="policy_scan", execution="batched")
+    dt_k = time.perf_counter() - t0
+    # f32 kernel columns: sizes within one ulp (~256 B at 2 GB) of the
+    # cutoff may flip vs the int64 numpy path
+    assert abs(r_k.succeeded - r_b.succeeded) <= 8
+    rows.append(("policy_engine_batched_scan", 1e6 * dt_k / n,
+                 f"{n/dt_k:.0f}_entries_per_s_backend_{r_k.evaluator}"))
+    return rows
+
+
+def run(smoke: bool = False) -> list:
+    n = 24_000 if smoke else N
+    cat = _catalog(n)
     now = time.time()
     expr = parse_expr(EXPR)
     rows = []
@@ -43,16 +94,16 @@ def run() -> list:
     t0 = time.perf_counter()
     n_match = sum(1 for e in cat.entries() if expr.evaluate(e, now))
     dt_py = time.perf_counter() - t0
-    rows.append(("policy_per_entry_python", 1e6 * dt_py / N,
-                 f"{N/dt_py:.0f}_entries_per_s_match_{n_match}"))
+    rows.append(("policy_per_entry_python", 1e6 * dt_py / n,
+                 f"{n/dt_py:.0f}_entries_per_s_match_{n_match}"))
 
     cols = cat.arrays()
     t0 = time.perf_counter()
     for _ in range(5):
         mask = expr.mask(cols, cat.strings, now)
     dt_np = (time.perf_counter() - t0) / 5
-    rows.append(("policy_numpy_mask", 1e6 * dt_np / N,
-                 f"{N/dt_np:.0f}_entries_per_s_speedup_{dt_py/dt_np:.0f}x"))
+    rows.append(("policy_numpy_mask", 1e6 * dt_np / n,
+                 f"{n/dt_np:.0f}_entries_per_s_speedup_{dt_py/dt_np:.0f}x"))
 
     ops, ci, opr = compile_program(expr, cat.strings, now)
     kcols = jnp.stack([jnp.asarray(cols[c], jnp.float32)
@@ -69,8 +120,8 @@ def run() -> list:
         m, agg = policy_scan(*args, use_kernel=False, **kw)
         m.block_until_ready()
     dt_jnp = (time.perf_counter() - t0) / 5
-    rows.append(("policy_jnp_oracle_fused_agg", 1e6 * dt_jnp / N,
-                 f"{N/dt_jnp:.0f}_entries_per_s"))
+    rows.append(("policy_jnp_oracle_fused_agg", 1e6 * dt_jnp / n,
+                 f"{n/dt_jnp:.0f}_entries_per_s"))
 
     m, agg = policy_scan(*args, use_kernel=True, **kw)
     assert abs(int(agg[0]) - n_match) <= 8, (int(agg[0]), n_match)
@@ -78,6 +129,8 @@ def run() -> list:
     m, agg = policy_scan(*args, use_kernel=True, **kw)
     m.block_until_ready()
     dt_k = time.perf_counter() - t0
-    rows.append(("policy_pallas_interpret", 1e6 * dt_k / N,
+    rows.append(("policy_pallas_interpret", 1e6 * dt_k / n,
                  "correctness_path_TPU_target"))
+
+    rows += _bench_engine(60_000 if smoke else N_ENGINE)
     return rows

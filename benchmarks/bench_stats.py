@@ -23,9 +23,9 @@ def _fill(cat, stats, n):
     cat.upsert_batch(entries)
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
-    for n in (10_000, 40_000, 160_000):
+    for n in ((10_000, 40_000) if smoke else (10_000, 40_000, 160_000)):
         cat = Catalog(n_shards=4)
         stats = StatsAggregator(cat.strings)
         cat.add_delta_hook(stats.on_delta)

@@ -1,43 +1,79 @@
 """Benchmark harness: one module per paper table/claim.
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract). Run:
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
+                                            [--json OUT]
+
+``--smoke`` shrinks problem sizes (CI budget: whole suite < 2 min);
+``--json OUT`` additionally writes a BENCH_*.json-shaped dict so runs can
+be tracked as a perf trajectory over PRs.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
+import time
 import traceback
 
 MODULES = [
     "bench_scan",        # Fig. 3: parallel DFS + multi-client scan
     "bench_changelog",   # SII-C2/SIII-A2: changelog rates, async dirty-tag
     "bench_stats",       # SII-B3: O(1) pre-aggregated reports
-    "bench_policy",      # SII-B1: policy matching (4 evaluators)
+    "bench_policy",      # SII-B1: policy matching (4 evaluators + engine)
     "bench_find_du",     # SII-B4: find/du clones vs POSIX walk
     "bench_kvtier",      # adapted C7/C8: KV-page tiering + paged serving
     "roofline_report",   # SRoofline summary rows from the dry-run artifacts
 ]
 
 
+def _call_run(mod, smoke: bool) -> list:
+    """Pass smoke= only to modules that accept it (older ones don't)."""
+    sig = inspect.signature(mod.run)
+    if "smoke" in sig.parameters:
+        return mod.run(smoke=smoke)
+    return mod.run()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink sizes for a <2 min CI run")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
+                    help="also write a BENCH_*.json-shaped result dict")
     args = ap.parse_args()
+    if args.only and args.only not in MODULES:
+        ap.error(f"unknown module {args.only!r} (choose from {MODULES})")
     print("name,us_per_call,derived")
     failed = 0
+    results = []
+    t_start = time.time()
     for name in MODULES:
         if args.only and args.only != name:
             continue
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for row in mod.run():
+            for row in _call_run(mod, args.smoke):
                 n, us, derived = row
                 print(f"{n},{us:.2f},{derived}", flush=True)
+                results.append({"name": n, "us_per_call": float(us),
+                                "derived": str(derived), "module": name})
         except Exception as e:
             failed += 1
             print(f"{name},NaN,ERROR_{type(e).__name__}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json_out:
+        payload = {
+            "suite": "benchmarks.run",
+            "smoke": bool(args.smoke),
+            "elapsed_s": round(time.time() - t_start, 3),
+            "failed_modules": failed,
+            "rows": results,
+        }
+        with open(args.json_out, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2)
     if failed:
         raise SystemExit(1)
 

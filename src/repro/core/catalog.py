@@ -56,6 +56,53 @@ _NUMERIC_COLUMNS: Tuple[Tuple[str, np.dtype], ...] = (
 )
 _STRING_FIELDS = ("owner", "group", "pool", "status")
 
+# Enum instance caches: Enum.__call__ is surprisingly hot when a batch fetch
+# rebuilds tens of thousands of entries.
+_FSTYPE = {int(t): t for t in FsType}
+_HSMSTATE = {int(s): s for s in HsmState}
+
+
+class _StringSnapshot:
+    """Frozen view of one shard's name/path lists + its valid row indices."""
+
+    __slots__ = ("idx", "names", "paths")
+
+    def __init__(self, idx: np.ndarray, names: List[str],
+                 paths: List[str]) -> None:
+        self.idx = idx
+        self.names = names
+        self.paths = paths
+
+    def gather(self, attr: str) -> List[str]:
+        src = self.paths if attr == "_paths" else self.names
+        return [src[i] for i in self.idx]
+
+
+class LazyColumns(dict):
+    """Column dict whose expensive keys materialize on first access.
+
+    ``Catalog.arrays()`` returns numeric columns eagerly (cheap vectorized
+    copies) but defers the per-row ``_paths``/``_names`` python lists —
+    only host-side glob predicates and path reports consume them, and
+    building them dominates columnar matching cost on large catalogs.
+    """
+
+    def __init__(self, data: Dict[str, np.ndarray],
+                 loaders: Dict[str, Callable[[], list]]) -> None:
+        super().__init__(data)
+        self._loaders = loaders
+
+    def __missing__(self, key):
+        fn = self._loaders.get(key)
+        if fn is None:
+            raise KeyError(key)
+        val = fn()
+        self[key] = val
+        return val
+
+    def __contains__(self, key) -> bool:
+        return super().__contains__(key) or key in self._loaders
+
 
 class StringTable:
     """Bidirectional string<->int32 interning table (thread-safe)."""
@@ -244,17 +291,97 @@ class CatalogShard:
             dirty=bool(c["dirty"][row]),
         )
 
+    def get_batch(self, fids: Sequence[int]) -> List[Optional[Entry]]:
+        """Fetch many entries under a single lock acquisition.
+
+        Columns are gathered vectorized (one fancy-index + tolist per
+        column) instead of one scalar read per field per row — the policy
+        engine's execution hot path.
+        """
+        with self.lock:
+            rows = [self._rows.get(f) for f in fids]
+            hit = [r for r in rows if r is not None]
+            if not hit:
+                return [None] * len(fids)
+            idx = np.asarray(hit, dtype=np.int64)
+            c = {name: self._cols[name][idx].tolist() for name in self._cols}
+            lookup = self.strings.lookup
+            new = Entry.__new__
+            entries = []
+            for i, row in enumerate(hit):
+                # bulk construction bypasses dataclass __init__ (hot path)
+                e = new(Entry)
+                e.__dict__ = {
+                    "fid": c["fid"][i], "parent_fid": c["parent_fid"][i],
+                    "name": self._names[row], "path": self._paths[row],
+                    "type": _FSTYPE[c["type"][i]], "size": c["size"][i],
+                    "blocks": c["blocks"][i], "owner": lookup(c["owner"][i]),
+                    "group": lookup(c["group"][i]), "mode": c["mode"][i],
+                    "nlink": c["nlink"][i], "atime": c["atime"][i],
+                    "mtime": c["mtime"][i], "ctime": c["ctime"][i],
+                    "ost_idx": c["ost_idx"][i],
+                    "stripe_osts": self._stripes[row],
+                    "pool": lookup(c["pool"][i]),
+                    "hsm_state": _HSMSTATE[c["hsm_state"][i]],
+                    "archive_id": c["archive_id"][i],
+                    "status": lookup(c["status"][i]),
+                    "xattrs": self._xattrs[row] or {},
+                    "dirty": bool(c["dirty"][i]),
+                }
+                entries.append(e)
+        out: List[Optional[Entry]] = []
+        it = iter(entries)
+        for r in rows:
+            out.append(next(it) if r is not None else None)
+        return out
+
+    def update_fields_batch(self, fids: Sequence[int], fields: dict
+                            ) -> List[Optional[Tuple[Delta, Delta]]]:
+        """Patch the same field subset on many entries under one lock."""
+        with self.lock:
+            return [self.update_fields(f, **fields) for f in fids]
+
     # -- vectorized access ----------------------------------------------------
-    def arrays(self) -> Dict[str, np.ndarray]:
-        """Columnar views (copies) limited to valid rows, for vector queries."""
+    def snapshot(self) -> Tuple[Dict[str, np.ndarray], "_StringSnapshot"]:
+        """Consistent columnar snapshot under one lock acquisition.
+
+        Numeric columns are copied; ``_paths``/``_names`` are captured as
+        shallow list copies (a C-level pointer copy — cheap) so the
+        expensive per-row gather can happen lazily later while staying
+        consistent with the numeric rows (in-place shard mutations after
+        the snapshot cannot be observed).
+        """
         with self.lock:
             valid = self._valid[: self._n]
-            out = {name: self._cols[name][: self._n][valid].copy()
-                   for name in self._cols}
-            idx = np.nonzero(valid)[0]
-            out["_paths"] = [self._paths[i] for i in idx]   # type: ignore
-            out["_names"] = [self._names[i] for i in idx]   # type: ignore
-            return out
+            cols = {name: self._cols[name][: self._n][valid].copy()
+                    for name in self._cols}
+            snap = _StringSnapshot(np.nonzero(valid)[0],
+                                   list(self._names), list(self._paths))
+            return cols, snap
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Columnar views (copies) limited to valid rows, for vector queries."""
+        out, snap = self.snapshot()
+        out["_paths"] = snap.gather("_paths")   # type: ignore
+        out["_names"] = snap.gather("_names")   # type: ignore
+        return out
+
+    def column_slice(self, fids: Sequence[int], names: Sequence[str]
+                     ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Gather columns for specific fids without building Entry objects.
+
+        Returns (cols, present): ``cols[name][i]`` is the value for
+        ``fids[i]`` (0 where absent) and ``present[i]`` says whether the fid
+        exists in this shard.
+        """
+        with self.lock:
+            idx = np.array([self._rows.get(f, -1) for f in fids],
+                           dtype=np.int64)
+            present = idx >= 0
+            safe = np.where(present, idx, 0)
+            cols = {name: np.where(present, self._cols[name][safe], 0)
+                    for name in names}
+            return cols, present
 
     def count(self) -> int:
         with self.lock:
@@ -348,8 +475,12 @@ class Catalog:
             fn(old, new)
 
     # -- routing ----------------------------------------------------------------
+    def _shard_id(self, fid: int) -> int:
+        """Single routing authority — every scalar and batch path uses it."""
+        return fid % self.n_shards
+
     def shard_of(self, fid: int) -> CatalogShard:
-        return self.shards[fid % self.n_shards]
+        return self.shards[self._shard_id(fid)]
 
     # -- operations ---------------------------------------------------------------
     def upsert(self, e: Entry, persist: bool = True) -> None:
@@ -392,6 +523,73 @@ class Catalog:
     def get(self, fid: int) -> Optional[Entry]:
         return self.shard_of(fid).get(fid)
 
+    def get_batch(self, fids: Sequence[int]) -> List[Optional[Entry]]:
+        """Fetch many entries, grouped by shard so each shard lock is taken
+        once per call instead of once per fid. Result aligns with ``fids``."""
+        out: List[Optional[Entry]] = [None] * len(fids)
+        by_shard: Dict[int, List[int]] = {}
+        for pos, fid in enumerate(fids):
+            by_shard.setdefault(self._shard_id(fid), []).append(pos)
+        for sid, positions in by_shard.items():
+            got = self.shards[sid].get_batch([fids[p] for p in positions])
+            for p, e in zip(positions, got):
+                out[p] = e
+        return out
+
+    def update_fields_batch(self, fids: Sequence[int], **fields) -> List[int]:
+        """Patch the same fields on many entries; one lock + one durable
+        commit per shard group. Fires delta hooks per entry. Returns the
+        fids actually updated (present in the catalog)."""
+        by_shard: Dict[int, List[int]] = {}
+        for fid in fids:
+            by_shard.setdefault(self._shard_id(fid), []).append(fid)
+        updated: List[int] = []
+        for sid, group in by_shard.items():
+            results = self.shards[sid].update_fields_batch(group, fields)
+            for fid, res in zip(group, results):
+                if res is not None:
+                    self._fire(res[0], res[1])
+                    updated.append(fid)
+        if self._db is not None and updated:
+            entries = [e for e in self.get_batch(updated) if e is not None]
+            self._persist(entries, [])
+        return updated
+
+    def remove_batch(self, fids: Sequence[int]) -> int:
+        """Remove many entries; one durable commit for the whole batch."""
+        removed: List[int] = []
+        for fid in fids:
+            old = self.shard_of(fid).remove(fid)
+            if old is not None:
+                self._fire(old, None)
+                removed.append(fid)
+        if removed:
+            self._persist([], removed)
+        return len(removed)
+
+    def column_slice(self, fids: Sequence[int], names: Sequence[str]
+                     ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Columnar gather for specific fids (no Entry materialization).
+
+        Returns (cols, present) aligned with ``fids``; absent fids have
+        value 0 and ``present[i] == False``.
+        """
+        n = len(fids)
+        out = {name: np.zeros(n, dtype=dict(_NUMERIC_COLUMNS)[name])
+               for name in names}
+        present = np.zeros(n, dtype=bool)
+        by_shard: Dict[int, List[int]] = {}
+        for pos, fid in enumerate(fids):
+            by_shard.setdefault(self._shard_id(fid), []).append(pos)
+        for sid, positions in by_shard.items():
+            cols, pres = self.shards[sid].column_slice(
+                [fids[p] for p in positions], names)
+            idx = np.array(positions, dtype=np.int64)
+            present[idx] = pres
+            for name in names:
+                out[name][idx] = cols[name]
+        return out, present
+
     def __len__(self) -> int:
         return sum(s.count() for s in self.shards)
 
@@ -404,15 +602,32 @@ class Catalog:
 
     # -- vectorized queries ----------------------------------------------------
     def arrays(self) -> Dict[str, np.ndarray]:
-        """Concatenate all shards' columns (the full 'table')."""
-        per_shard = [s.arrays() for s in self.shards]
+        """Concatenate all shards' columns (the full 'table').
+
+        ``_paths``/``_names`` are **lazy**: the per-row python-list gather
+        is only paid when a host-side glob predicate or path report
+        actually indexes them. The snapshot is still consistent — each
+        shard's string lists are pointer-copied under the same lock as its
+        numeric columns.
+        """
+        cols_and_snaps = [s.snapshot() for s in self.shards]
         out: Dict[str, np.ndarray] = {}
         for name, _ in _NUMERIC_COLUMNS:
-            out[name] = np.concatenate([p[name] for p in per_shard]) \
-                if per_shard else np.zeros(0)
-        out["_paths"] = sum((p["_paths"] for p in per_shard), [])  # type: ignore
-        out["_names"] = sum((p["_names"] for p in per_shard), [])  # type: ignore
-        return out
+            out[name] = np.concatenate([c[name] for c, _s in cols_and_snaps]) \
+                if cols_and_snaps else np.zeros(0)
+        # keep only the string snapshots alive, not the per-shard numerics
+        snaps = [s for _c, s in cols_and_snaps]
+
+        def _loader(attr: str) -> Callable[[], list]:
+            def load() -> list:
+                parts: list = []
+                for snap in snaps:
+                    parts.extend(snap.gather(attr))
+                return parts
+            return load
+
+        return LazyColumns(out, {"_paths": _loader("_paths"),
+                                 "_names": _loader("_names")})
 
     def query_fids(self, mask_fn: Callable[[Dict[str, np.ndarray]], np.ndarray]) -> np.ndarray:
         """Vectorized query: mask_fn(columns)->bool mask; returns matching fids."""

@@ -125,6 +125,12 @@ class ChangelogStream:
                 self._read_cursor = out[-1].seq
             return out
 
+    @property
+    def acked(self) -> int:
+        """Highest acknowledged sequence number (consumer progress)."""
+        with self._lock:
+            return self._acked
+
     def ack(self, seq: int) -> None:
         """Acknowledge every record up to ``seq``; they are then purged."""
         with self._lock:

@@ -37,11 +37,27 @@ class HsmCoordinator:
 
         # -- archive policy: new/dirty files, old enough, not released
         def do_archive(e: Entry, params: dict) -> bool:
-            self.fs.hsm_archive(e.fid, archive_id=params.get(
-                "archive_id", self.archive_id))
+            aid = params.get("archive_id", self.archive_id)
+            self.fs.hsm_archive(e.fid, archive_id=aid)
             self.catalog.update_fields(e.fid, hsm_state=HsmState.ARCHIVED,
-                                       archive_id=self.archive_id)
+                                       archive_id=aid)
             return True
+
+        def do_archive_batch(entries: List[Entry], params: dict) -> List[bool]:
+            aid = params.get("archive_id", self.archive_id)
+            oks = []
+            for e in entries:
+                try:
+                    self.fs.hsm_archive(e.fid, archive_id=aid)
+                    oks.append(True)
+                except Exception:
+                    oks.append(False)
+            self.catalog.update_fields_batch(
+                [e.fid for e, ok in zip(entries, oks) if ok],
+                hsm_state=HsmState.ARCHIVED, archive_id=aid)
+            return oks
+
+        do_archive.action_batch = do_archive_batch
 
         self.engine.register(PolicyDefinition.from_config(
             name="hsm_archive", action=do_archive,
@@ -58,6 +74,21 @@ class HsmCoordinator:
             self.catalog.update_fields(e.fid, hsm_state=HsmState.RELEASED,
                                        blocks=0)
             return True
+
+        def do_release_batch(entries: List[Entry], params: dict) -> List[bool]:
+            oks = []
+            for e in entries:
+                try:
+                    self.fs.hsm_release(e.fid)
+                    oks.append(True)
+                except Exception:
+                    oks.append(False)
+            self.catalog.update_fields_batch(
+                [e.fid for e, ok in zip(entries, oks) if ok],
+                hsm_state=HsmState.RELEASED, blocks=0)
+            return oks
+
+        do_release.action_batch = do_release_batch
 
         self.engine.register(PolicyDefinition.from_config(
             name="hsm_release", action=do_release,

@@ -50,7 +50,7 @@ class _AckTracker:
         self.stream = stream
         self._lock = threading.Lock()
         self._done: List[int] = []     # min-heap of completed seqs
-        self._acked = stream._acked
+        self._acked = stream.acked
 
     def complete(self, seqs: List[int]) -> None:
         with self._lock:

@@ -4,12 +4,17 @@ Each plugin is an action factory: given runtime handles it returns an
 ``Action`` callable usable in a :class:`PolicyDefinition`. Administrators
 compose policies from these "with a few lines of configuration"; custom
 plugins are just new callables registered in :data:`PLUGIN_REGISTRY`.
+
+Actions may additionally expose a **batch interface** by attaching an
+``action_batch(entries, params) -> list[bool]`` attribute to the callable:
+the batched policy engine then applies whole chunks at once (one catalog
+commit per chunk instead of one per entry).
 """
 from __future__ import annotations
 
 import os
 import shutil
-from typing import Callable, Dict
+from typing import Callable, Dict, List
 
 from .catalog import Catalog
 from .types import Entry, HsmState
@@ -34,6 +39,18 @@ def purge_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
         catalog.remove(e.fid)
         return True
 
+    def action_batch(entries: List[Entry], params: dict) -> List[bool]:
+        oks = []
+        for e in entries:
+            try:
+                fs.unlink(e.fid)
+                oks.append(True)
+            except Exception:
+                oks.append(False)
+        catalog.remove_batch([e.fid for e, ok in zip(entries, oks) if ok])
+        return oks
+
+    action.action_batch = action_batch
     return action
 
 
@@ -58,6 +75,21 @@ def archive_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
         catalog.update_fields(e.fid, hsm_state=HsmState.ARCHIVED)
         return True
 
+    def action_batch(entries: List[Entry], params: dict) -> List[bool]:
+        archive_id = params.get("archive_id", 1)
+        oks = []
+        for e in entries:
+            try:
+                fs.hsm_archive(e.fid, archive_id=archive_id)
+                oks.append(True)
+            except Exception:
+                oks.append(False)
+        catalog.update_fields_batch(
+            [e.fid for e, ok in zip(entries, oks) if ok],
+            hsm_state=HsmState.ARCHIVED)
+        return oks
+
+    action.action_batch = action_batch
     return action
 
 
@@ -68,6 +100,20 @@ def release_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
         catalog.update_fields(e.fid, hsm_state=HsmState.RELEASED, blocks=0)
         return True
 
+    def action_batch(entries: List[Entry], params: dict) -> List[bool]:
+        oks = []
+        for e in entries:
+            try:
+                fs.hsm_release(e.fid)
+                oks.append(True)
+            except Exception:
+                oks.append(False)
+        catalog.update_fields_batch(
+            [e.fid for e, ok in zip(entries, oks) if ok],
+            hsm_state=HsmState.RELEASED, blocks=0)
+        return oks
+
+    action.action_batch = action_batch
     return action
 
 
@@ -134,4 +180,10 @@ def tag_status_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
     def action(e: Entry, params: dict) -> bool:
         return catalog.update_fields(e.fid, status=params.get("status", "seen"))
 
+    def action_batch(entries: List[Entry], params: dict) -> List[bool]:
+        updated = set(catalog.update_fields_batch(
+            [e.fid for e in entries], status=params.get("status", "seen")))
+        return [e.fid in updated for e in entries]
+
+    action.action_batch = action_batch
     return action

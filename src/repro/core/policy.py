@@ -51,6 +51,7 @@ _OPS = ("==", "!=", ">=", "<=", ">", "<")
 # Postfix program opcodes (shared with kernels/policy_scan).
 OP_CMP_EQ, OP_CMP_NE, OP_CMP_GT, OP_CMP_GE, OP_CMP_LT, OP_CMP_LE = range(6)
 OP_AND, OP_OR, OP_NOT = 6, 7, 8
+OP_NOP = -1     # padding opcode: leaves the evaluation stack untouched
 _CMP_CODE = {"==": OP_CMP_EQ, "!=": OP_CMP_NE, ">": OP_CMP_GT,
              ">=": OP_CMP_GE, "<": OP_CMP_LT, "<=": OP_CMP_LE}
 
@@ -368,4 +369,44 @@ def compile_program(expr: Expr, strings, now: float
     ops = np.array([p[0] for p in prog], dtype=np.int32)
     cols = np.array([p[1] for p in prog], dtype=np.int32)
     operands = np.array([p[2] for p in prog], dtype=np.float32)
+    return ops, cols, operands
+
+
+def any_of(exprs: Sequence[Expr]) -> Expr:
+    """OR-fold a list of criteria (empty list -> ALWAYS)."""
+    if not exprs:
+        return ALWAYS
+    out = exprs[0]
+    for e in exprs[1:]:
+        out = Or(out, e)
+    return out
+
+
+def all_of(exprs: Sequence[Expr]) -> Expr:
+    """AND-fold a list of criteria (empty list -> ALWAYS)."""
+    if not exprs:
+        return ALWAYS
+    out = exprs[0]
+    for e in exprs[1:]:
+        out = And(out, e)
+    return out
+
+
+def compile_programs(exprs: Sequence[Expr], strings, now: float
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Compile several criteria into one (R, P) instruction batch.
+
+    Programs are right-padded with OP_NOP so a single vmapped scan can
+    evaluate all of them over the same column stack in one pass.
+    """
+    progs = [e.to_postfix(strings, now) for e in exprs]
+    plen = max(len(p) for p in progs)
+    ops = np.full((len(progs), plen), OP_NOP, dtype=np.int32)
+    cols = np.zeros((len(progs), plen), dtype=np.int32)
+    operands = np.zeros((len(progs), plen), dtype=np.float32)
+    for r, prog in enumerate(progs):
+        for i, (op, col, val) in enumerate(prog):
+            ops[r, i] = op
+            cols[r, i] = col
+            operands[r, i] = val
     return ops, cols, operands

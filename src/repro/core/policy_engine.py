@@ -10,21 +10,50 @@ shipped plugin configurations; users register custom actions the same way
 (see ``plugins.py``). Watermark triggers reproduce the per-OST purge (C7):
 when an OST exceeds ``high_wm``, the engine runs the policy restricted to
 entries striped on that OST until usage is projected below ``low_wm``.
+
+Execution is **batched and shard-parallel** (paper SII-B1: policy runs over
+billions of entries must never degenerate into per-entry scans):
+
+* **matching** goes through a pluggable evaluator backend — ``"numpy"``
+  (vectorized column masks) or ``"policy_scan"`` (the Pallas TPU kernel,
+  falling back to its jitted oracle off-TPU) — and rule **attribution** is
+  vectorized too: one mask per rule, first-match-wins by rule order, no
+  per-entry Python re-evaluation;
+* **budgets** (target volume / max actions) are planned on batch
+  boundaries: the engine takes the minimal prefix of the sorted candidate
+  list whose projected volume meets the remaining target, executes it, and
+  only re-plans if failures left the target unmet. The actioned set is a
+  pure function of the catalog snapshot — deterministic across
+  ``n_threads``, with no overshoot races;
+* **execution** draws work in fid chunks from a deque; each chunk is
+  fetched with :meth:`Catalog.get_batch` (one lock acquisition per shard
+  group) and applied either through an action's optional batch interface
+  (``action.action_batch(entries, params) -> list[bool]``) or the scalar
+  callable.
+
+The pre-batching scalar path is kept as ``execution="scalar"`` so
+``benchmarks/bench_policy.py`` can report the speedup honestly.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
+from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .catalog import Catalog
-from .policy import ALWAYS, Expr, parse_expr
+from .policy import ALWAYS, Expr, PolicyError, all_of, any_of, parse_expr
 from .types import Entry, FsType
 
 Action = Callable[[Entry, dict], bool]   # returns True on success
+# Optional vectorized form, attached to the Action callable as the
+# ``action_batch`` attribute: (entries, shared params) -> per-entry success.
+BatchAction = Callable[[List[Entry], dict], List[bool]]
+
+EVALUATORS = ("numpy", "policy_scan")
 
 
 @dataclasses.dataclass
@@ -47,6 +76,8 @@ class PolicyDefinition:
     max_volume_per_run: int = 0     # 0 = unlimited (bytes)
     n_threads: int = 1
     dry_run: bool = False
+    batch_size: int = 512           # entries per execution chunk
+    evaluator: str = "numpy"        # default matching backend
 
     @classmethod
     def from_config(cls, name: str, action: Action, scope: str = "true",
@@ -68,6 +99,10 @@ class RunReport:
     volume: int = 0          # bytes touched (e.g. freed / archived)
     elapsed: float = 0.0
     trigger: str = "manual"
+    matched_volume: int = 0  # total bytes of all matched entries
+    skipped: int = 0         # matched but gone from the catalog by exec time
+    evaluator: str = "numpy"
+    rounds: int = 0          # budget re-planning rounds executed
 
 
 class UsageWatermarkTrigger:
@@ -98,6 +133,14 @@ class UsageWatermarkTrigger:
         return out
 
 
+@dataclasses.dataclass
+class _Plan:
+    """One execution round: parallel arrays of planned work, sorted order."""
+    fids: np.ndarray        # int64
+    sizes: np.ndarray       # int64 (match-time snapshot, used for budgets)
+    rule_idx: np.ndarray    # int32, -1 = no rule (empty params)
+
+
 class PolicyEngine:
     """Evaluates policies over the catalog and applies actions."""
 
@@ -119,17 +162,50 @@ class PolicyEngine:
 
     # -- matching -----------------------------------------------------------------
     def _match(self, policy: PolicyDefinition, extra: Optional[Expr],
-               now: float) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+               now: float, evaluator: str = "numpy"
+               ) -> Tuple[np.ndarray, np.ndarray, Dict[str, np.ndarray], str]:
+        """One columnar pass: final mask + vectorized rule attribution.
+
+        Returns (mask, rule_idx, cols, evaluator_used). ``rule_idx[i]`` is
+        the index of the first (highest-priority) rule matching row i, or -1
+        when the policy has no rules. The ``policy_scan`` backend silently
+        falls back to numpy for host-only (glob) predicates.
+        """
+        if evaluator not in EVALUATORS:
+            raise PolicyError(f"unknown evaluator {evaluator!r}")
         cols = self.catalog.arrays()
-        mask = policy.scope.mask(cols, self.catalog.strings, now)
-        if policy.rules:
-            rule_mask = np.zeros_like(mask)
-            for rule in policy.rules:
-                rule_mask |= rule.condition.mask(cols, self.catalog.strings, now)
-            mask &= rule_mask
+        rule_exprs = [r.condition for r in policy.rules]
+        if evaluator == "policy_scan":
+            try:
+                from ..kernels.policy_scan.ops import match_programs
+                full = all_of([policy.scope]
+                              + ([any_of(rule_exprs)] if rule_exprs else [])
+                              + ([extra] if extra else []))
+                masks, _agg = match_programs(cols, [full] + rule_exprs,
+                                             self.catalog.strings, now)
+                return (masks[0], self._attribute(masks[0], masks[1:]),
+                        cols, "policy_scan")
+            except PolicyError:
+                pass          # glob predicates run on the host
+        strings = self.catalog.strings
+        mask = policy.scope.mask(cols, strings, now)
+        rule_masks = [r.mask(cols, strings, now) for r in rule_exprs]
+        if rule_masks:
+            mask &= np.logical_or.reduce(rule_masks)
         if extra is not None:
-            mask &= extra.mask(cols, self.catalog.strings, now)
-        return mask, cols
+            mask &= extra.mask(cols, strings, now)
+        return mask, self._attribute(mask, rule_masks), cols, "numpy"
+
+    @staticmethod
+    def _attribute(mask: np.ndarray, rule_masks: List[np.ndarray]
+                   ) -> np.ndarray:
+        """First-match-wins rule index per row (np.select-style priority)."""
+        if not rule_masks:
+            return np.full(mask.shape, -1, dtype=np.int32)
+        stacked = np.stack(rule_masks)
+        idx = np.argmax(stacked, axis=0).astype(np.int32)   # first True wins
+        idx[~stacked.any(axis=0)] = -1
+        return idx
 
     def _rule_params(self, policy: PolicyDefinition, e: Entry, now: float) -> dict:
         for rule in policy.rules:
@@ -139,27 +215,152 @@ class PolicyEngine:
 
     # -- execution -----------------------------------------------------------------
     def run(self, policy_name: str, extra_criteria: Optional[Expr] = None,
-            target_volume: int = 0, trigger: str = "manual") -> RunReport:
-        """One policy run: match -> sort -> apply until targets met."""
+            target_volume: int = 0, trigger: str = "manual",
+            evaluator: Optional[str] = None,
+            execution: str = "batched") -> RunReport:
+        """One policy run: match -> sort -> apply until targets met.
+
+        ``evaluator`` overrides the policy's matching backend for this run;
+        ``execution="scalar"`` keeps the legacy per-entry path (benchmarks /
+        bisection only).
+        """
         policy = self.policies[policy_name]
         now = self.clock()
         t0 = time.perf_counter()
-        mask, cols = self._match(policy, extra_criteria, now)
+        mask, rule_idx, cols, used_eval = self._match(
+            policy, extra_criteria, now, evaluator or policy.evaluator)
         fids = cols["fid"][mask]
+        sizes = cols["size"][mask]
         report = RunReport(policy=policy_name, matched=int(fids.size),
-                           trigger=trigger)
+                           trigger=trigger, evaluator=used_eval,
+                           matched_volume=int(sizes.sum()) if fids.size else 0)
 
         if fids.size:
-            sort_col = cols[policy.sort_by][mask]
-            order = np.argsort(sort_col)
+            order = np.argsort(cols[policy.sort_by][mask], kind="stable")
             if policy.sort_desc:
                 order = order[::-1]
-            fids = fids[order]
+            plan = _Plan(fids=fids[order], sizes=sizes[order],
+                         rule_idx=rule_idx[mask][order])
+            budget_volume = target_volume or policy.max_volume_per_run
+            budget_count = policy.max_actions_per_run
+            if execution == "scalar":
+                self._run_scalar(policy, plan, now, report,
+                                 budget_volume, budget_count)
+            else:
+                self._run_batched(policy, plan, now, report,
+                                  budget_volume, budget_count)
 
-        budget_volume = target_volume or policy.max_volume_per_run
-        budget_count = policy.max_actions_per_run
+        report.elapsed = time.perf_counter() - t0
+        self.history.append(report)
+        return report
 
-        work = list(fids.tolist())
+    # -- batched execution --------------------------------------------------------
+    def _run_batched(self, policy: PolicyDefinition, plan: _Plan, now: float,
+                     report: RunReport, budget_volume: int,
+                     budget_count: int) -> None:
+        """Budgeted rounds of chunk-parallel execution.
+
+        Each round takes the minimal prefix of the remaining sorted work
+        whose projected (match-time) volume/count meets the remaining
+        budget, so the stop decision happens on batch boundaries and the
+        actioned set never depends on thread timing. A follow-up round only
+        happens when failures/skips left a budget unmet.
+        """
+        n = len(plan.fids)
+        pos = 0
+        while pos < n:
+            take = n - pos
+            if budget_volume:
+                remaining = budget_volume - report.volume
+                if remaining <= 0:
+                    break
+                csum = np.cumsum(plan.sizes[pos:])
+                take = min(take, int(np.searchsorted(csum, remaining)) + 1)
+            if budget_count:
+                remaining_n = budget_count - report.succeeded
+                if remaining_n <= 0:
+                    break
+                take = min(take, remaining_n)
+            self._execute_round(policy, plan, pos, pos + take, now, report)
+            report.rounds += 1
+            pos += take
+            if not budget_volume and not budget_count:
+                break                      # single round covers everything
+
+    def _execute_round(self, policy: PolicyDefinition, plan: _Plan,
+                       lo: int, hi: int, now: float,
+                       report: RunReport) -> None:
+        """Execute plan[lo:hi] in chunks drawn from a deque by N workers."""
+        chunk = max(1, policy.batch_size)
+        work: "deque[slice]" = deque(slice(i, min(i + chunk, hi))
+                                     for i in range(lo, hi, chunk))
+
+        def worker() -> None:
+            while True:
+                try:
+                    sl = work.popleft()    # atomic; IndexError ends worker
+                except IndexError:
+                    return
+                self._apply_chunk(policy, plan, sl, now, report)
+
+        n_threads = min(max(1, policy.n_threads), len(work))
+        if n_threads <= 1:
+            worker()
+            return
+        threads = [threading.Thread(target=worker, daemon=True)
+                   for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    def _apply_chunk(self, policy: PolicyDefinition, plan: _Plan,
+                     sl: slice, now: float, report: RunReport) -> None:
+        fids = plan.fids[sl]
+        sizes = plan.sizes[sl]
+        ridx = plan.rule_idx[sl]
+        if policy.dry_run:
+            with self._lock:
+                report.succeeded += len(fids)
+                report.volume += int(sizes.sum())
+            return
+        entries = self.catalog.get_batch(fids.tolist())
+        ok = np.zeros(len(fids), dtype=bool)
+        skipped = np.array([e is None for e in entries])
+        batch_fn: Optional[BatchAction] = getattr(policy.action,
+                                                  "action_batch", None)
+        for ri in np.unique(ridx):
+            group = np.nonzero((ridx == ri) & ~skipped)[0]
+            if not group.size:
+                continue
+            params = policy.rules[ri].params if ri >= 0 else {}
+            group_entries = [entries[i] for i in group]
+            if batch_fn is not None:
+                try:
+                    results = batch_fn(group_entries, params)
+                except Exception:
+                    results = [False] * len(group_entries)
+                ok[group] = results
+            else:
+                for i, e in zip(group, group_entries):
+                    try:
+                        ok[i] = policy.action(e, params)
+                    except Exception:
+                        ok[i] = False
+        done = ok & ~skipped
+        with self._lock:
+            report.succeeded += int(done.sum())
+            report.failed += int((~ok & ~skipped).sum())
+            report.skipped += int(skipped.sum())
+            report.volume += int(sizes[done].sum())
+
+    # -- legacy scalar execution (benchmark baseline) ------------------------------
+    def _run_scalar(self, policy: PolicyDefinition, plan: _Plan, now: float,
+                    report: RunReport, budget_volume: int,
+                    budget_count: int) -> None:
+        """Pre-batching hot path: O(n) dequeues, per-entry catalog.get and
+        Python rule re-evaluation, racy post-hoc budget checks."""
+        work = list(plan.fids.tolist())
         work_lock = threading.Lock()
         stop = threading.Event()
 
@@ -198,10 +399,6 @@ class PolicyEngine:
             t.start()
         for t in threads:
             t.join()
-
-        report.elapsed = time.perf_counter() - t0
-        self.history.append(report)
-        return report
 
     def check_triggers(self) -> List[RunReport]:
         """Fire any watermark triggers whose threshold is exceeded (C7)."""

@@ -2,14 +2,14 @@
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .kernel import LANE, policy_scan_pallas
-from .ref import N_AGG, policy_scan_ref
+from .ref import N_AGG, policy_scan_multi_ref, policy_scan_ref
 
 
 def _on_tpu() -> bool:
@@ -46,6 +46,77 @@ def policy_scan(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
         operands.astype(jnp.float32), size_col=size_col,
         blocks_col=blocks_col, valid_col=valid_col)
     return mask[:n], agg
+
+
+@partial(jax.jit, static_argnames=("size_col", "blocks_col"))
+def policy_scan_multi(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
+                      operands: jax.Array, size_col: int = 0,
+                      blocks_col: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """Evaluate R padded predicate programs over one column stack.
+
+    cols: (n_cols, N) f32; ops/colidx/operands: (R, P), OP_NOP padded.
+    Returns (masks (R, N) f32, agg (N_AGG,) f32 for program 0). One
+    columnar pass: matching and size/blocks aggregation fuse in one scan.
+    """
+    return policy_scan_multi_ref(cols, ops.astype(jnp.int32),
+                                 colidx.astype(jnp.int32),
+                                 operands.astype(jnp.float32),
+                                 size_col=size_col, blocks_col=blocks_col)
+
+
+def column_stack(arrays) -> jax.Array:
+    """Stack a Catalog.arrays() dict into the (n_cols, N) f32 kernel layout."""
+    from ...core.policy import KERNEL_COLUMNS
+    return jnp.stack([jnp.asarray(arrays[c], jnp.float32)
+                      for c in KERNEL_COLUMNS], axis=0)
+
+
+def match_programs(arrays, exprs, strings, now: float,
+                   use_kernel: Optional[bool] = None
+                   ) -> Tuple[List[np.ndarray], dict]:
+    """Evaluate several core.policy Exprs over catalog columns at once.
+
+    ``exprs[0]`` is the combined match criteria (its fused aggregates are
+    returned); further exprs are typically per-rule conditions for
+    vectorized attribution. ``use_kernel=None`` selects the Pallas kernel
+    on TPU and the jitted oracle everywhere else. Raises PolicyError if any
+    expr contains host-only (glob) predicates — callers fall back to the
+    numpy mask path.
+    """
+    from ...core.policy import KERNEL_COLUMNS, compile_programs
+    ops, colidx, operands = compile_programs(exprs, strings, now)
+    kcols = column_stack(arrays)
+    size_col = KERNEL_COLUMNS.index("size")
+    blocks_col = KERNEL_COLUMNS.index("blocks")
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        # The Pallas kernel evaluates one program per launch; the combined
+        # criteria (program 0) fuses mask + aggregation in a single HBM pass,
+        # rule programs reuse the resident column stack.
+        masks, agg = [], None
+        for r in range(ops.shape[0]):
+            m, a = policy_scan(kcols, jnp.asarray(ops[r]),
+                               jnp.asarray(colidx[r]),
+                               jnp.asarray(operands[r]), size_col=size_col,
+                               blocks_col=blocks_col, use_kernel=True)
+            if r == 0:
+                agg = a
+            masks.append(np.asarray(m) > 0.5)
+    else:
+        m, agg = policy_scan_multi(kcols, jnp.asarray(ops),
+                                   jnp.asarray(colidx),
+                                   jnp.asarray(operands), size_col=size_col,
+                                   blocks_col=blocks_col)
+        m = np.asarray(m) > 0.5
+        masks = [m[r] for r in range(m.shape[0])]
+    agg_np = np.asarray(agg)
+    return masks, {
+        "count": float(agg_np[0]), "volume": float(agg_np[1]),
+        "spc_used": float(agg_np[2]),
+        "size_profile": agg_np[3:13].tolist(),
+        "any_match": bool(agg_np[13] > 0.5),
+    }
 
 
 def scan_catalog(catalog, expr, now: float, use_kernel: bool = True

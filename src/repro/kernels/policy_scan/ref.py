@@ -64,6 +64,24 @@ def eval_program(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
     return jnp.take(stack, jnp.maximum(sp - 1, 0), axis=0)
 
 
+def aggregate(mask: jax.Array, size: jax.Array, spc: jax.Array) -> jax.Array:
+    """Fused aggregates for a match mask: (N_AGG,) f32.
+
+    [count, volume, spc_used, hist0..hist9, any_match].
+    """
+    count = jnp.sum(mask)
+    volume = jnp.sum(mask * size)
+    spc_used = jnp.sum(mask * spc)
+    # size-profile histogram of matched rows
+    bucket = jnp.sum((size[None, :] >= _EDGES[:, None]).astype(jnp.int32),
+                     axis=0) - 1
+    bucket = jnp.clip(bucket, 0, 9)
+    hist = jnp.zeros((10,), jnp.float32).at[bucket].add(mask)
+    any_match = jnp.max(mask)
+    return jnp.concatenate([jnp.stack([count, volume, spc_used]), hist,
+                            any_match[None]])
+
+
 def policy_scan_ref(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
                     operands: jax.Array, size_col: int = 0,
                     blocks_col: int = 1, valid_col: int = -1
@@ -76,17 +94,21 @@ def policy_scan_ref(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
     mask = eval_program(cols, ops, colidx, operands)
     if valid_col >= 0:
         mask = mask * cols[valid_col]
-    size = cols[size_col]
-    spc = cols[blocks_col]
-    count = jnp.sum(mask)
-    volume = jnp.sum(mask * size)
-    spc_used = jnp.sum(mask * spc)
-    # size-profile histogram of matched rows
-    bucket = jnp.sum((size[None, :] >= _EDGES[:, None]).astype(jnp.int32),
-                     axis=0) - 1
-    bucket = jnp.clip(bucket, 0, 9)
-    hist = jnp.zeros((10,), jnp.float32).at[bucket].add(mask)
-    any_match = jnp.max(mask)
-    agg = jnp.concatenate([jnp.stack([count, volume, spc_used]), hist,
-                           any_match[None]])
-    return mask, agg
+    return mask, aggregate(mask, cols[size_col], cols[blocks_col])
+
+
+def policy_scan_multi_ref(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
+                          operands: jax.Array, size_col: int = 0,
+                          blocks_col: int = 1
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Evaluate R padded programs in one columnar pass (vmapped oracle).
+
+    ops/colidx/operands: (R, P) with OP_NOP padding. Returns
+    (masks (R, N) f32, agg (N_AGG,) f32 for program 0) — program 0 is, by
+    convention, the policy's combined scope∧rules∧extra criteria; the
+    remaining rows are per-rule masks used for vectorized attribution.
+    """
+    masks = jax.vmap(
+        lambda o, c, v: eval_program(cols, o, c, v))(ops, colidx, operands)
+    agg = aggregate(masks[0], cols[size_col], cols[blocks_col])
+    return masks, agg

@@ -66,3 +66,74 @@ def test_delta_hooks_fire():
     cat.remove(1)
     assert len(deltas) == 3
     assert deltas[0][0] is None and deltas[2][1] is None
+
+
+def test_get_batch_roundtrip_and_missing():
+    cat = Catalog(n_shards=3)
+    for i in range(1, 41):
+        cat.upsert(_entry(i, owner=f"u{i % 4}"))
+    fids = [5, 999, 17, 2, 1000, 40]
+    got = cat.get_batch(fids)
+    assert got[1] is None and got[4] is None
+    for fid, e in zip(fids, got):
+        if e is not None:
+            assert e.fid == fid
+            # batch-built entries must equal scalar-built ones exactly
+            assert e == cat.get(fid)
+
+
+def test_get_batch_matches_get_for_all_fields():
+    cat = Catalog(n_shards=2)
+    cat.upsert(_entry(9, owner="bar", pool="ssd", hsm_state=HsmState.RELEASED,
+                      xattrs={"k": "v"}, stripe_osts=(3, 1), dirty=True))
+    (batch,) = cat.get_batch([9])
+    assert batch == cat.get(9)
+    assert batch.hsm_state is HsmState.RELEASED
+    assert batch.type is FsType.FILE
+
+
+def test_update_fields_batch_fires_hooks_and_returns_updated():
+    cat = Catalog(n_shards=4)
+    fired = []
+    cat.add_delta_hook(lambda old, new: fired.append((old, new)))
+    for i in range(1, 11):
+        cat.upsert(_entry(i))
+    fired.clear()
+    updated = cat.update_fields_batch([3, 7, 999, 4], status="expired")
+    assert sorted(updated) == [3, 4, 7]
+    assert len(fired) == 3                       # one delta per updated entry
+    for fid in (3, 4, 7):
+        assert cat.get(fid).status == "expired"
+
+
+def test_remove_batch():
+    cat = Catalog(n_shards=2)
+    for i in range(1, 11):
+        cat.upsert(_entry(i))
+    assert cat.remove_batch([2, 4, 999, 6]) == 3
+    assert len(cat) == 7
+    assert cat.get(4) is None
+
+
+def test_column_slice_alignment():
+    cat = Catalog(n_shards=4)
+    for i in range(1, 21):
+        cat.upsert(_entry(i))
+    fids = [7, 300, 14, 1]
+    cols, present = cat.column_slice(fids, ["size", "blocks"])
+    assert present.tolist() == [True, False, True, True]
+    assert cols["size"].tolist() == [700, 0, 1400, 100]
+    assert cols["size"].dtype == np.int64
+
+
+def test_arrays_lazy_paths_still_correct():
+    cat = Catalog(n_shards=3)
+    for i in range(1, 16):
+        cat.upsert(_entry(i))
+    cols = cat.arrays()
+    # _paths/_names materialize lazily but align with the numeric columns
+    assert "_paths" in cols
+    paths = cols["_paths"]
+    assert len(paths) == len(cols["fid"])
+    for fid, p in zip(cols["fid"].tolist(), paths):
+        assert p == f"/a/f{fid}"

@@ -3,6 +3,8 @@ import time
 
 import numpy as np
 import pytest
+import pytest as _pytest
+_pytest.importorskip("hypothesis")  # optional dep: skip, never hard-error collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Catalog, Entry, FsType, parse_expr, PolicyError

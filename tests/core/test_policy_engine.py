@@ -1,0 +1,256 @@
+"""Batched policy engine: evaluator backends, vectorized attribution,
+batch-boundary budget semantics (deterministic across n_threads), and the
+batch action interface."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Catalog, Entry, FsType, PolicyDefinition,
+                        PolicyEngine, parse_expr)
+from repro.core.policy import PolicyError
+
+NOW = 1_000_000.0          # f32-exact; keeps kernel/numpy paths bit-for-bit
+
+
+def _catalog(n=2000, n_shards=4):
+    cat = Catalog(n_shards=n_shards)
+    entries = [Entry(fid=i + 1, name=f"f{i}", path=f"/p/d{i % 7}/f{i}",
+                     type=FsType.FILE,
+                     size=(i % 50 + 1) * 1000,          # f32-exact sizes
+                     blocks=(i % 50 + 1),
+                     owner=f"user{i % 5}",
+                     atime=NOW - float(i + 1))          # unique LRU order
+               for i in range(n)]
+    cat.upsert_batch(entries)
+    return cat
+
+
+class Recorder:
+    """Thread-safe action that records (fid, params) and can fail."""
+
+    def __init__(self, fail_fids=()):
+        self.lock = threading.Lock()
+        self.calls = []
+        self.fail_fids = set(fail_fids)
+
+    def __call__(self, e, params):
+        with self.lock:
+            self.calls.append((e.fid, params.get("tag")))
+        return e.fid not in self.fail_fids
+
+    def acted(self):
+        return sorted(self.calls)
+
+
+def _engine(cat, action, rules=None, **kw):
+    eng = PolicyEngine(cat, clock=lambda: NOW)
+    eng.register(PolicyDefinition.from_config(
+        name="p", action=action, scope="type == file",
+        rules=rules if rules is not None else [("all", "true", {})], **kw))
+    return eng
+
+
+# -- evaluator backends --------------------------------------------------------
+
+def test_policy_scan_evaluator_matches_numpy_bit_for_bit():
+    rules = [("big", "size > 30k", {"tag": "big"}),
+             ("old", "last_access > 500s", {"tag": "old"})]
+    results = {}
+    for ev in ("numpy", "policy_scan"):
+        cat = _catalog()
+        rec = Recorder()
+        eng = _engine(cat, rec, rules=rules, n_threads=3, batch_size=128)
+        r = eng.run("p", evaluator=ev)
+        assert r.evaluator == ev
+        results[ev] = (r.matched, r.succeeded, r.failed, r.volume,
+                       r.matched_volume, rec.acted())
+    assert results["numpy"] == results["policy_scan"]
+
+
+def test_policy_scan_falls_back_to_numpy_on_glob():
+    cat = _catalog()
+    rec = Recorder()
+    eng = _engine(cat, rec, rules=[("d3", "path == '/p/d3/*'", {"tag": "d3"})])
+    r = eng.run("p", evaluator="policy_scan")
+    assert r.evaluator == "numpy"           # glob predicates run on the host
+    assert r.matched == r.succeeded > 0
+
+
+def test_unknown_evaluator_rejected():
+    cat = _catalog(50)
+    eng = _engine(cat, Recorder())
+    with pytest.raises(PolicyError):
+        eng.run("p", evaluator="mysql")
+
+
+# -- vectorized rule attribution -----------------------------------------------
+
+def test_rule_attribution_first_match_wins():
+    cat = _catalog()
+    rec = Recorder()
+    # overlapping conditions: entries matching both must get rule 1's params
+    rules = [("big", "size > 25k", {"tag": "big"}),
+             ("all", "size > 0", {"tag": "any"})]
+    eng = _engine(cat, rec, rules=rules, n_threads=2, batch_size=64)
+    r = eng.run("p")
+    assert r.succeeded == r.matched == len(cat)
+    by_fid = dict(rec.calls)
+    cols = cat.arrays()
+    for fid, size in zip(cols["fid"].tolist(), cols["size"].tolist()):
+        assert by_fid[fid] == ("big" if size > 25_000 else "any")
+
+
+def test_attribution_agrees_with_scalar_oracle():
+    cat = _catalog(500)
+    rec = Recorder()
+    rules = [("r0", "size > 40k and last_access > 100s", {"tag": "r0"}),
+             ("r1", "owner == 'user2'", {"tag": "r1"}),
+             ("r2", "size <= 40k", {"tag": "r2"})]
+    eng = _engine(cat, rec, rules=rules)
+    eng.run("p")
+    pol = eng.policies["p"]
+    by_fid = dict(rec.calls)
+    for e in cat.entries():
+        expected = eng._rule_params(pol, e, NOW)
+        if expected:
+            assert by_fid[e.fid] == expected["tag"]
+        else:
+            assert e.fid not in by_fid         # matched no rule -> no action
+
+
+# -- budget semantics ----------------------------------------------------------
+
+def _expected_lru_prefix(cat, target_volume):
+    """Oracle: minimal LRU-ordered prefix whose volume meets the target."""
+    cols = cat.arrays()
+    order = np.argsort(cols["atime"], kind="stable")
+    fids = cols["fid"][order]
+    sizes = cols["size"][order]
+    csum = np.cumsum(sizes)
+    k = int(np.searchsorted(csum, target_volume)) + 1
+    k = min(k, len(fids))
+    return fids[:k].tolist(), int(csum[k - 1])
+
+
+@pytest.mark.parametrize("n_threads", [1, 3, 8])
+def test_target_volume_never_overshoots_and_is_deterministic(n_threads):
+    target = 137_000
+    cat = _catalog()
+    exp_fids, exp_volume = _expected_lru_prefix(cat, target)
+    rec = Recorder()
+    eng = _engine(cat, rec, n_threads=n_threads, batch_size=100)
+    r = eng.run("p", target_volume=target)
+    acted = [f for f, _ in rec.calls]
+    assert sorted(acted) == sorted(exp_fids)
+    assert r.succeeded == len(exp_fids)
+    assert r.volume == exp_volume
+    assert r.volume >= target                      # target reached...
+    max_size = max(e.size for e in cat.entries())
+    assert r.volume < target + max_size            # ...but never overshot
+    assert r.rounds == 1
+
+
+@pytest.mark.parametrize("n_threads", [1, 4])
+def test_max_actions_is_exact_and_deterministic(n_threads):
+    cat = _catalog()
+    rec = Recorder()
+    eng = _engine(cat, rec, n_threads=n_threads, batch_size=32,
+                  max_actions_per_run=77)
+    r = eng.run("p")
+    assert r.succeeded == 77
+    # deterministic: the 77 oldest (LRU) entries, not whichever thread won
+    exp = sorted(_expected_lru_prefix(cat, 10**18)[0][:77])
+    assert sorted(f for f, _ in rec.calls) == exp
+
+
+def test_failures_trigger_replanning_rounds_until_target_met():
+    cat = _catalog()
+    fail = {fid for fid in range(1, 2001) if fid % 2 == 0}
+    rec = Recorder(fail_fids=fail)
+    eng = _engine(cat, rec, n_threads=2, batch_size=100)
+    target = 100_000
+    r = eng.run("p", target_volume=target)
+    assert r.volume >= target                 # failed sizes don't count...
+    assert r.failed > 0
+    assert r.rounds > 1                       # ...so the engine re-planned
+    attempted = [f for f, _ in rec.calls]
+    assert len(attempted) == len(set(attempted))   # each entry tried once
+
+
+def test_watermark_trigger_budget_stop():
+    from repro.core import UsageWatermarkTrigger
+    cat = _catalog()
+    freed = [0]
+    lock = threading.Lock()
+
+    def act(e, params):
+        with lock:
+            freed[0] += e.size
+        return True
+
+    capacity = 1_000_000
+    used0 = 900_000
+    eng = _engine(cat, act, n_threads=4, batch_size=64)
+    eng.add_watermark_trigger("p", UsageWatermarkTrigger(
+        usage_fn=lambda: [("ost0", used0 - freed[0], capacity)],
+        high_pct=85.0, low_pct=60.0,
+        restrict_fn=lambda key: parse_expr("true")))
+    reports = eng.check_triggers()
+    assert len(reports) == 1
+    target = used0 - int(capacity * 0.60)
+    assert reports[0].trigger == "watermark:ost0"
+    assert reports[0].volume >= target
+    max_size = max(e.size for e in cat.entries())
+    assert reports[0].volume < target + max_size
+    assert used0 - freed[0] <= capacity * 0.60 + max_size
+    assert not eng.check_triggers()           # back under the high watermark
+
+
+# -- execution paths -----------------------------------------------------------
+
+def test_batch_action_interface_used_and_equivalent():
+    cat = _catalog()
+    batch_sizes = []
+    scalar_calls = []
+    lock = threading.Lock()
+
+    def action(e, params):
+        with lock:
+            scalar_calls.append(e.fid)
+        return True
+
+    def action_batch(entries, params):
+        with lock:
+            batch_sizes.append(len(entries))
+        return [e.fid % 10 != 0 for e in entries]
+
+    action.action_batch = action_batch
+    eng = _engine(cat, action, n_threads=2, batch_size=128)
+    r = eng.run("p")
+    assert not scalar_calls                    # batch interface preferred
+    assert sum(batch_sizes) == r.matched
+    assert max(batch_sizes) <= 128
+    assert r.failed == sum(1 for e in cat.entries() if e.fid % 10 == 0)
+    assert r.succeeded == r.matched - r.failed
+
+
+def test_scalar_execution_path_agrees_with_batched():
+    results = {}
+    for execution in ("batched", "scalar"):
+        cat = _catalog(800)
+        rec = Recorder()
+        eng = _engine(cat, rec, n_threads=1, batch_size=64)
+        r = eng.run("p", execution=execution)
+        results[execution] = (r.matched, r.succeeded, r.volume, rec.acted())
+    assert results["batched"] == results["scalar"]
+
+
+def test_dry_run_counts_without_calling_actions():
+    cat = _catalog()
+    rec = Recorder()
+    eng = _engine(cat, rec, dry_run=True)
+    r = eng.run("p")
+    assert rec.calls == []
+    assert r.succeeded == r.matched == len(cat)
+    assert r.volume == r.matched_volume == sum(e.size for e in cat.entries())

@@ -1,6 +1,8 @@
 import random
 
 import pytest
+import pytest as _pytest
+_pytest.importorskip("hypothesis")  # optional dep: skip, never hard-error collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Catalog, Scanner, multi_client_scan, prune_missing

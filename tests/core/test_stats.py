@@ -1,5 +1,7 @@
 """O(1) pre-aggregated stats == recomputation from scratch (paper C6)."""
 import numpy as np
+import pytest as _pytest
+_pytest.importorskip("hypothesis")  # optional dep: skip, never hard-error collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Catalog, ChangelogCounters, DirUsage, Entry, FsType,

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+import pytest as _pytest
+_pytest.importorskip("hypothesis")  # optional dep: skip, never hard-error collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.catalog import StringTable
