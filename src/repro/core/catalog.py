@@ -366,6 +366,18 @@ class CatalogShard:
         out["_names"] = snap.gather("_names")   # type: ignore
         return out
 
+    def _gather(self, fids: Sequence[int], names: Sequence[str]
+                ) -> Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]:
+        """Lock-held core of the fid-keyed gathers: (cols, safe_idx, present);
+        absent fids read row 0 masked to the column dtype's zero."""
+        idx = np.array([self._rows.get(f, -1) for f in fids], dtype=np.int64)
+        present = idx >= 0
+        safe = np.where(present, idx, 0)
+        cols = {name: np.where(present, self._cols[name][safe],
+                               self._cols[name].dtype.type(0))
+                for name in names}
+        return cols, safe, present
+
     def column_slice(self, fids: Sequence[int], names: Sequence[str]
                      ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         """Gather columns for specific fids without building Entry objects.
@@ -375,13 +387,29 @@ class CatalogShard:
         exists in this shard.
         """
         with self.lock:
-            idx = np.array([self._rows.get(f, -1) for f in fids],
-                           dtype=np.int64)
-            present = idx >= 0
-            safe = np.where(present, idx, 0)
-            cols = {name: np.where(present, self._cols[name][safe], 0)
-                    for name in names}
+            cols, _safe, present = self._gather(fids, names)
             return cols, present
+
+    def row_slice(self, fids: Sequence[int], with_strings: bool = True
+                  ) -> Tuple[Dict[str, np.ndarray], List[str], List[str],
+                             np.ndarray]:
+        """Full-row gather keyed by fid: every numeric column plus (when
+        ``with_strings``) the name/path strings, under one lock acquisition.
+
+        Returns (cols, names, paths, present) aligned with ``fids``; absent
+        fids read 0 / "". This is the incremental-match analogue of
+        :meth:`column_slice` — dirty rows are re-evaluated from it without
+        touching the other ~N rows of the shard.
+        """
+        with self.lock:
+            cols, safe, present = self._gather(fids, list(self._cols))
+            if not with_strings:
+                return cols, [], [], present
+            names = [self._names[i] if p else ""
+                     for i, p in zip(safe.tolist(), present.tolist())]
+            paths = [self._paths[i] if p else ""
+                     for i, p in zip(safe.tolist(), present.tolist())]
+            return cols, names, paths, present
 
     def count(self) -> int:
         with self.lock:
@@ -478,6 +506,10 @@ class Catalog:
     def _shard_id(self, fid: int) -> int:
         """Single routing authority — every scalar and batch path uses it."""
         return fid % self.n_shards
+
+    def _shard_ids(self, fids: np.ndarray) -> np.ndarray:
+        """Vectorized counterpart of :meth:`_shard_id` (same formula)."""
+        return fids % self.n_shards
 
     def shard_of(self, fid: int) -> CatalogShard:
         return self.shards[self._shard_id(fid)]
@@ -588,6 +620,45 @@ class Catalog:
             present[idx] = pres
             for name in names:
                 out[name][idx] = cols[name]
+        return out, present
+
+    def gather_rows(self, fids: Sequence[int], with_strings: bool = True
+                    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Full-row columnar gather for specific fids (policy re-evaluation
+        over dirty rows — no Entry materialization).
+
+        Returns (cols, present) aligned with ``fids``: every numeric column
+        plus (when ``with_strings``) ``_names``/``_paths`` string lists,
+        shaped like :meth:`arrays` output restricted to the requested fids,
+        so ``Expr.mask`` runs on it unchanged (glob predicates included).
+        Callers whose criteria hold no glob predicate pass
+        ``with_strings=False`` and skip the per-row string gather. Absent
+        fids read 0 / "" with ``present[i] == False``.
+        """
+        n = len(fids)
+        fid_arr = np.asarray(fids, dtype=np.int64)
+        out: Dict[str, np.ndarray] = {
+            name: np.zeros(n, dtype=dt) for name, dt in _NUMERIC_COLUMNS}
+        names: List[str] = [""] * n
+        paths: List[str] = [""] * n
+        present = np.zeros(n, dtype=bool)
+        sids = self._shard_ids(fid_arr)
+        for sid in range(self.n_shards):
+            idx = np.nonzero(sids == sid)[0]
+            if not idx.size:
+                continue
+            cols, snames, spaths, pres = self.shards[sid].row_slice(
+                fid_arr[idx].tolist(), with_strings=with_strings)
+            present[idx] = pres
+            for name, _ in _NUMERIC_COLUMNS:
+                out[name][idx] = cols[name]
+            if with_strings:
+                for p, nm, pth in zip(idx.tolist(), snames, spaths):
+                    names[p] = nm
+                    paths[p] = pth
+        if with_strings:
+            out["_names"] = names   # type: ignore[assignment]
+            out["_paths"] = paths   # type: ignore[assignment]
         return out, present
 
     def __len__(self) -> int:

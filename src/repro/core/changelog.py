@@ -10,8 +10,17 @@ Contract reproduced from the paper (SII-C2):
   consumer crashes mid-processing, unacked records are re-delivered on
   restart.
 
+A stream supports multiple named **subscribers**, each with its own read
+cursor and ack watermark (Lustre's ``changelog_register`` users analogue):
+the event pipeline mirrors records into the catalog under the default
+subscriber while e.g. the policy engine follows the same stream under its
+own cursor to maintain incremental match state. Records are purged only
+once *every* subscriber has acked them.
+
 Persistence is an append-only JSONL file per stream (fsync on append batch)
-plus a tiny ack cursor file. DNE is modelled by running one stream per MDT.
+plus a tiny ack cursor file (an int for the lone default subscriber, a JSON
+object once named subscribers exist). DNE is modelled by running one stream
+per MDT.
 """
 from __future__ import annotations
 
@@ -19,9 +28,25 @@ import json
 import os
 import threading
 from collections import deque
+from itertools import islice
 from typing import Deque, Dict, Iterable, List, Optional
 
 from .types import ChangelogRecord, ChangelogType
+
+DEFAULT_SUBSCRIBER = "main"
+
+
+class _Subscriber:
+    """Cursor/ack bookkeeping for one registered consumer."""
+
+    __slots__ = ("name", "read_cursor", "acked", "durable")
+
+    def __init__(self, name: str, read_cursor: int, acked: int,
+                 durable: bool = True) -> None:
+        self.name = name
+        self.read_cursor = read_cursor
+        self.acked = acked
+        self.durable = durable
 
 
 class ChangelogStream:
@@ -33,8 +58,10 @@ class ChangelogStream:
         self._lock = threading.Condition()
         self._records: Deque[ChangelogRecord] = deque()
         self._next_seq = 1
-        self._acked = 0                  # highest acked seq
-        self._read_cursor = 0            # highest seq handed to the consumer
+        self._subs: Dict[str, _Subscriber] = {
+            DEFAULT_SUBSCRIBER: _Subscriber(DEFAULT_SUBSCRIBER, 0, 0)
+        }
+        self._recovered_acks: Dict[str, int] = {}
         self._persist_dir = persist_dir
         self._fsync = fsync
         self._fh = None
@@ -49,12 +76,20 @@ class ChangelogStream:
     # -- persistence -----------------------------------------------------------
     def _recover(self) -> None:
         """Reload unacked records after a crash (paper: no event loss)."""
-        acked = 0
+        acks: Dict[str, int] = {}
         if os.path.exists(self._ack_path):
             with open(self._ack_path, "r", encoding="utf-8") as f:
                 txt = f.read().strip()
-                acked = int(txt) if txt else 0
-        self._acked = acked
+            if txt:
+                try:
+                    acks = {DEFAULT_SUBSCRIBER: int(txt)}
+                except ValueError:
+                    acks = {str(k): int(v) for k, v in json.loads(txt).items()}
+        self._recovered_acks = acks
+        acked = acks.get(DEFAULT_SUBSCRIBER, 0)
+        main = self._subs[DEFAULT_SUBSCRIBER]
+        main.acked = acked
+        floor = min(acks.values()) if acks else 0
         if os.path.exists(self._log_path):
             with open(self._log_path, "r", encoding="utf-8") as f:
                 for line in f:
@@ -68,11 +103,11 @@ class ChangelogStream:
                         name=d.get("name", ""), time=d.get("time", 0.0),
                         uid=d.get("uid", ""), jobid=d.get("jobid", ""),
                         mdt=self.mdt, attrs=d.get("attrs"))
-                    if rec.seq > acked:
+                    if rec.seq > floor:
                         self._records.append(rec)
                     self._next_seq = max(self._next_seq, rec.seq + 1)
-        # re-delivery: reader starts from the oldest unacked record
-        self._read_cursor = acked
+        # re-delivery: each reader restarts from its oldest unacked record
+        main.read_cursor = acked
 
     def _persist_records(self, recs: List[ChangelogRecord]) -> None:
         if self._fh is None:
@@ -85,6 +120,75 @@ class ChangelogStream:
         self._fh.flush()
         if self._fsync:
             os.fsync(self._fh.fileno())
+
+    def _persist_acks(self) -> None:
+        if not self._persist_dir:
+            return
+        tmp = self._ack_path + ".tmp"
+        acks = {name: ack for name, ack in self._recovered_acks.items()
+                if name not in self._subs}      # not yet re-registered
+        # ephemeral subscribers die with their process: persisting their ack
+        # would pin the purge floor forever after a restart renames them
+        acks.update({name: s.acked for name, s in self._subs.items()
+                     if s.durable})
+        with open(tmp, "w", encoding="utf-8") as f:
+            if len(acks) == 1:
+                f.write(str(acks[DEFAULT_SUBSCRIBER]))
+            else:
+                f.write(json.dumps(acks))
+        os.replace(tmp, self._ack_path)
+
+    # -- subscriber registry -----------------------------------------------------
+    def subscribe(self, name: str, from_start: bool = False,
+                  durable: bool = True) -> str:
+        """Register a named consumer with its own read/ack cursor.
+
+        A new subscriber starts at the stream head (future records only)
+        unless ``from_start`` is set, in which case it sees every retained
+        record. Re-subscribing an existing (or crash-recovered) name resumes
+        from its persisted ack watermark. ``durable=False`` keeps the
+        cursor out of the persisted ack file — for per-process consumers
+        that rebuild their own state after a restart anyway — so a dead
+        instance can never pin the purge floor. Returns the name.
+        """
+        if name == DEFAULT_SUBSCRIBER:
+            return name
+        with self._lock:
+            if name in self._subs:
+                return name
+            if name in self._recovered_acks:
+                start = self._recovered_acks.pop(name)   # resumed: consumed
+            elif from_start:
+                start = 0
+            else:
+                start = self._next_seq - 1
+            self._subs[name] = _Subscriber(name, start, start,
+                                           durable=durable)
+            self._persist_acks()
+            return name
+
+    def unsubscribe(self, name: str) -> None:
+        """Drop a named subscriber; records it held back become purgeable."""
+        if name == DEFAULT_SUBSCRIBER:
+            raise ValueError("cannot unsubscribe the default consumer")
+        with self._lock:
+            dropped = self._subs.pop(name, None) is not None
+            # a crash-recovered ack must go too, or it would resurrect in
+            # the ack file and pin the purge floor forever
+            dropped |= self._recovered_acks.pop(name, None) is not None
+            if dropped:
+                self._purge()
+                self._persist_acks()
+
+    def subscribers(self) -> List[str]:
+        with self._lock:
+            return list(self._subs)
+
+    def _sub(self, name: Optional[str]) -> _Subscriber:
+        sub = self._subs.get(name or DEFAULT_SUBSCRIBER)
+        if sub is None:
+            raise KeyError(f"unknown changelog subscriber {name!r}")
+        return sub
 
     # -- producer ----------------------------------------------------------------
     def emit(self, type: ChangelogType, fid: int, **kw) -> ChangelogRecord:
@@ -110,50 +214,79 @@ class ChangelogStream:
             self._lock.notify_all()
 
     # -- consumer -----------------------------------------------------------------
-    def read(self, max_records: int = 1024, timeout: Optional[float] = None
-             ) -> List[ChangelogRecord]:
-        """Read the next batch past the read cursor (does NOT ack)."""
+    def read(self, max_records: int = 1024, timeout: Optional[float] = None,
+             subscriber: Optional[str] = None) -> List[ChangelogRecord]:
+        """Read the next batch past the subscriber's cursor (does NOT ack).
+
+        Retained records are dense in seq and purged only from the front,
+        so the cursor position is an index: a read costs O(position +
+        batch), not O(backlog) — a lagging subscriber (e.g. an idle policy
+        engine) cannot degrade the main consumer's read loop.
+        """
         with self._lock:
+            sub = self._sub(subscriber)
             if timeout is not None:
                 self._lock.wait_for(
-                    lambda: self._closed or any(
-                        r.seq > self._read_cursor for r in self._records),
+                    lambda: self._closed or (
+                        self._records
+                        and self._records[-1].seq > sub.read_cursor),
                     timeout=timeout)
-            out = [r for r in self._records if r.seq > self._read_cursor]
-            out = out[:max_records]
+            if not self._records or self._records[-1].seq <= sub.read_cursor:
+                return []
+            start = max(0, sub.read_cursor - self._records[0].seq + 1)
+            out = list(islice(self._records, start, start + max_records))
             if out:
-                self._read_cursor = out[-1].seq
+                sub.read_cursor = out[-1].seq
             return out
 
     @property
     def acked(self) -> int:
-        """Highest acknowledged sequence number (consumer progress)."""
+        """Highest acknowledged sequence number (default consumer)."""
         with self._lock:
-            return self._acked
+            return self._subs[DEFAULT_SUBSCRIBER].acked
 
-    def ack(self, seq: int) -> None:
-        """Acknowledge every record up to ``seq``; they are then purged."""
+    def acked_of(self, subscriber: str) -> int:
         with self._lock:
-            self._acked = max(self._acked, seq)
-            while self._records and self._records[0].seq <= self._acked:
-                self._records.popleft()
-            if self._persist_dir:
-                tmp = self._ack_path + ".tmp"
-                with open(tmp, "w", encoding="utf-8") as f:
-                    f.write(str(self._acked))
-                os.replace(tmp, self._ack_path)
+            return self._sub(subscriber).acked
 
-    def reset_cursor(self) -> None:
+    def _purge(self) -> None:
+        floor = min(s.acked for s in self._subs.values())
+        for name, ack in self._recovered_acks.items():
+            if name not in self._subs:          # crashed subscriber, not back yet
+                floor = min(floor, ack)
+        while self._records and self._records[0].seq <= floor:
+            self._records.popleft()
+
+    def ack(self, seq: int, subscriber: Optional[str] = None) -> None:
+        """Acknowledge records up to ``seq`` for one subscriber; records are
+        purged once every subscriber has acked them."""
+        with self._lock:
+            sub = self._sub(subscriber)
+            # clamp to emitted seqs: acking past the head must not swallow
+            # records emitted later
+            sub.acked = min(max(sub.acked, seq), self._next_seq - 1)
+            sub.read_cursor = max(sub.read_cursor, sub.acked)
+            self._purge()
+            self._persist_acks()
+
+    def reset_cursor(self, subscriber: Optional[str] = None) -> None:
         """Simulate consumer restart: unacked records are re-delivered."""
         with self._lock:
-            self._read_cursor = self._acked
+            sub = self._sub(subscriber)
+            sub.read_cursor = sub.acked
 
-    def pending(self) -> int:
+    def pending(self, subscriber: Optional[str] = None) -> int:
+        """Unacked record count — O(1): seqs are dense and retention always
+        covers (purge floor, head] ⊇ (acked, head]."""
         with self._lock:
-            return sum(1 for r in self._records if r.seq > self._acked)
+            sub = self._sub(subscriber)
+            return self._next_seq - 1 - sub.acked
 
     def close(self) -> None:
+        """Close the stream (idempotent)."""
         with self._lock:
+            if self._closed:
+                return
             self._closed = True
             if self._fh is not None:
                 self._fh.close()
@@ -169,13 +302,24 @@ class ChangelogHub:
         self.streams: Dict[int, ChangelogStream] = {
             i: ChangelogStream(i, persist_dir, fsync) for i in range(n_mdts)
         }
+        self._closed = False
 
     def stream(self, mdt: int = 0) -> ChangelogStream:
         return self.streams[mdt]
+
+    def subscribe(self, name: str, from_start: bool = False) -> str:
+        """Register ``name`` on every MDT stream."""
+        for s in self.streams.values():
+            s.subscribe(name, from_start=from_start)
+        return name
 
     def total_pending(self) -> int:
         return sum(s.pending() for s in self.streams.values())
 
     def close(self) -> None:
+        """Close every stream (idempotent — safe to call more than once)."""
+        if self._closed:
+            return
+        self._closed = True
         for s in self.streams.values():
             s.close()

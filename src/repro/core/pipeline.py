@@ -16,6 +16,16 @@ Stages (synchronous mode):
 Acks are only issued once every record up to ``seq`` is committed (the
 catalog's sqlite commit happens inside ``upsert_batch``), preserving the
 transactional contract end-to-end.
+
+**Delta fan-out**: downstream consumers (the policy engine's incremental
+match state, cache invalidators, ...) can register a listener via
+:meth:`EventPipeline.add_delta_listener`; after each batch is committed to
+the catalog the listener receives ``(changed_fids, removed_fids)``.
+Listeners are notified *after* the catalog mutation, so re-reading the
+catalog for a notified fid always observes at least that change. Within one
+batch, records are folded per fid in record order (one refresh per fid; an
+``UNLNK`` arriving after a ``CREAT`` of the same fid in the same batch wins
+— the entry is removed, never materialized, and never reported dirty).
 """
 from __future__ import annotations
 
@@ -87,20 +97,44 @@ class EventPipeline:
         self._dirty: Set[int] = set()
         self._dirty_lock = threading.Lock()
         self.dedup_hits = 0
+        # delta fan-out (policy engine incremental match state, caches, ...)
+        self._delta_listeners: List[Callable[[List[int], List[int]], None]] = []
+
+    # -- delta fan-out ------------------------------------------------------------
+    def add_delta_listener(self, fn: Callable[[List[int], List[int]], None]
+                           ) -> None:
+        """Register ``fn(changed_fids, removed_fids)``, called after each
+        batch of records has been committed to the catalog."""
+        self._delta_listeners.append(fn)
+
+    def _notify(self, changed: List[int], removed: List[int]) -> None:
+        if changed or removed:
+            for fn in self._delta_listeners:
+                fn(changed, removed)
 
     # -- record -> catalog application -------------------------------------------
     def _apply_records(self, recs: List[ChangelogRecord]) -> None:
-        """GET_INFO + DB_APPLY for one batch, then mark complete for ack."""
-        entries: List[Entry] = []
-        removals: List[int] = []
+        """GET_INFO + DB_APPLY for one batch, then mark complete for ack.
+
+        Records are folded per fid, last-in-record-order wins: repeated
+        updates of one entry cost a single ``fs.stat``, and an ``UNLNK``
+        following a ``CREAT`` of the same fid inside the batch results in a
+        removal only (the short-lived entry is never materialized).
+        """
+        is_removal: Dict[int, bool] = {}      # fid -> last op kind, batch order
         for rec in recs:
             if self.counters is not None:
                 self.counters.on_record(rec)
-            if rec.type in (ChangelogType.UNLNK, ChangelogType.RMDIR):
-                removals.append(rec.fid)
+            is_removal[rec.fid] = rec.type in (ChangelogType.UNLNK,
+                                               ChangelogType.RMDIR)
+        entries: List[Entry] = []
+        removals: List[int] = []
+        for fid, rm in is_removal.items():
+            if rm:
+                removals.append(fid)
                 continue
             with self._fs_sem:                       # bounded FS concurrency
-                e = self.fs.stat(rec.fid)
+                e = self.fs.stat(fid)
             if e is not None:
                 entries.append(e)
         with self._db_sem:                            # bounded DB concurrency
@@ -110,6 +144,7 @@ class EventPipeline:
                 self.catalog.remove(fid)
         with self._processed_lock:
             self.processed += len(recs)
+        self._notify([e.fid for e in entries], removals)
         self._ack.complete([r.seq for r in recs])
 
     def _tag_records(self, recs: List[ChangelogRecord]) -> None:
@@ -124,7 +159,7 @@ class EventPipeline:
                     self.counters.on_record(rec)
                 if rec.type in (ChangelogType.UNLNK, ChangelogType.RMDIR):
                     removals.append(rec.fid)
-                    self._dirty.discard(rec.fid)
+                    self._dirty.discard(rec.fid)      # never refreshed post-rm
                 elif rec.fid in self._dirty:
                     self.dedup_hits += 1              # folded into pending tag
                 else:
@@ -135,6 +170,8 @@ class EventPipeline:
                 self.catalog.remove(fid)
         with self._processed_lock:
             self.processed += len(recs)
+        # changed fids are notified by the updater after the actual refresh
+        self._notify([], removals)
         self._ack.complete([r.seq for r in recs])
 
     def _updater(self) -> None:
@@ -157,6 +194,7 @@ class EventPipeline:
             with self._db_sem:
                 if entries:
                     self.catalog.upsert_batch(entries)
+            self._notify([e.fid for e in entries], [])
 
     # -- driver ------------------------------------------------------------------
     def _reader(self) -> None:
@@ -232,4 +270,5 @@ class EventPipeline:
                         entries.append(e)
                 if entries:
                     self.catalog.upsert_batch(entries)
+                self._notify([e.fid for e in entries], [])
         return total

@@ -372,6 +372,16 @@ def compile_program(expr: Expr, strings, now: float
     return ops, cols, operands
 
 
+def iter_exprs(expr: Expr):
+    """Yield every node of a criteria AST (pre-order)."""
+    yield expr
+    if isinstance(expr, (And, Or)):
+        yield from iter_exprs(expr.lhs)
+        yield from iter_exprs(expr.rhs)
+    elif isinstance(expr, Not):
+        yield from iter_exprs(expr.inner)
+
+
 def any_of(exprs: Sequence[Expr]) -> Expr:
     """OR-fold a list of criteria (empty list -> ALWAYS)."""
     if not exprs:

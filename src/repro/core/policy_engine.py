@@ -33,6 +33,41 @@ billions of entries must never degenerate into per-entry scans):
 
 The pre-batching scalar path is kept as ``execution="scalar"`` so
 ``benchmarks/bench_policy.py`` can report the speedup honestly.
+
+Incremental match (paper SII-C: changelogs replace re-scans)
+------------------------------------------------------------
+
+Policy runs do not have to re-scan the catalog: once the engine is wired to
+a delta source — :meth:`PolicyEngine.subscribe_pipeline` (the changelog
+pipeline's post-commit fan-out), :meth:`PolicyEngine.subscribe_stream` /
+:meth:`subscribe_hub` (a named changelog subscriber that trails the
+pipeline's ack watermark), or explicit :meth:`mark_dirty` calls — it keeps
+per-policy **incremental match state**:
+
+* a **dirty-fid set** of entries touched since the last run;
+* a cached **match table** (fid -> size, sort key, first-matching rule) for
+  every entry currently satisfying ``scope AND any(rules)``;
+* a **flip schedule** for age predicates (``last_access > 30d`` flips at
+  ``atime + 30d`` with no delta arriving): per entry, the earliest future
+  instant its match status can change through time alone.
+
+An incremental run re-evaluates only ``dirty ∪ time-due`` rows — gathered
+by fid via :meth:`Catalog.gather_rows`, no full-column snapshot — merges
+the verdicts into the cached table, and plans/sorts/budgets from the table
+exactly like a full run. Watermark ``extra_criteria`` are applied freshly
+on top of the cached set each run (they can only restrict it). After a
+non-dry run, actioned fids are marked dirty again so plugin-made catalog
+mutations are re-observed.
+
+Runs fall back to a **full columnar scan** when: (1) no state exists yet —
+the first run (or any run after :meth:`invalidate`, e.g. on a changelog
+cursor reset) scans fully and rebuilds the cache; (2) the policy uses
+``==``/``!=`` comparisons on age attributes (no well-defined flip instant);
+(3) the dirty set outgrew ``incremental_rescan_frac`` of the catalog, where
+a scan is cheaper; (4) the caller forces ``matching="full"``. Every full
+run with no extra criteria rebuilds the cache in passing. ``RunReport.mode``
+records which path ran; correctness contract: all catalog mutations reach
+the engine through a subscribed delta source (or ``mark_dirty``).
 """
 from __future__ import annotations
 
@@ -40,12 +75,14 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from .catalog import Catalog
-from .policy import ALWAYS, Expr, PolicyError, all_of, any_of, parse_expr
+from .changelog import ChangelogHub, ChangelogStream
+from .policy import (AGE_ATTRS, ALWAYS, Cmp, Expr, GLOB_ATTRS, PolicyError,
+                     all_of, any_of, iter_exprs, parse_expr)
 from .types import Entry, FsType
 
 Action = Callable[[Entry, dict], bool]   # returns True on success
@@ -54,6 +91,10 @@ Action = Callable[[Entry, dict], bool]   # returns True on success
 BatchAction = Callable[[List[Entry], dict], List[bool]]
 
 EVALUATORS = ("numpy", "policy_scan")
+MATCHING_MODES = ("auto", "full", "incremental")
+
+_ENGINE_SEQ = [0]                 # per-process engine subscriber counter
+_ENGINE_SEQ_LOCK = threading.Lock()
 
 
 @dataclasses.dataclass
@@ -78,6 +119,11 @@ class PolicyDefinition:
     dry_run: bool = False
     batch_size: int = 512           # entries per execution chunk
     evaluator: str = "numpy"        # default matching backend
+    # whether the action mutates entries (purge/archive/...): actioned fids
+    # are then re-marked dirty so incremental state re-observes them. Pure
+    # observer actions (tagging nothing, reporting) may set False to keep
+    # the dirty set at true churn size.
+    mutates: bool = True
 
     @classmethod
     def from_config(cls, name: str, action: Action, scope: str = "true",
@@ -103,6 +149,8 @@ class RunReport:
     skipped: int = 0         # matched but gone from the catalog by exec time
     evaluator: str = "numpy"
     rounds: int = 0          # budget re-planning rounds executed
+    mode: str = "full"       # matching path: "full" scan or "incremental"
+    reval: int = 0           # rows (re-)evaluated to produce the match set
 
 
 class UsageWatermarkTrigger:
@@ -141,8 +189,240 @@ class _Plan:
     rule_idx: np.ndarray    # int32, -1 = no rule (empty params)
 
 
+class _FidTable:
+    """Fid-keyed parallel numpy columns with O(1) upsert/remove.
+
+    Rows are tombstoned on removal and the storage compacts itself once the
+    dead fraction dominates; ``live()`` snapshots the surviving rows in
+    arbitrary order (callers impose a total order by sorting on content)."""
+
+    def __init__(self, specs: Sequence[Tuple[str, type]], cap: int = 1024
+                 ) -> None:
+        self._specs = tuple(specs)
+        self._reset(cap)
+
+    def _reset(self, cap: int) -> None:
+        cap = max(1, cap)
+        self._pos: Dict[int, int] = {}
+        self._fids = np.zeros(cap, dtype=np.int64)
+        self._cols = {name: np.zeros(cap, dtype=dt)
+                      for name, dt in self._specs}
+        self._alive = np.zeros(cap, dtype=bool)
+        self._n = 0                               # high-water row count
+
+    def __len__(self) -> int:
+        return len(self._pos)
+
+    def _grow(self, need: int) -> None:
+        cap = len(self._alive)
+        while cap < need:
+            cap *= 2
+        for name in self._cols:
+            col = np.zeros(cap, dtype=self._cols[name].dtype)
+            col[: self._n] = self._cols[name][: self._n]
+            self._cols[name] = col
+        fids = np.zeros(cap, dtype=np.int64)
+        fids[: self._n] = self._fids[: self._n]
+        self._fids = fids
+        alive = np.zeros(cap, dtype=bool)
+        alive[: self._n] = self._alive[: self._n]
+        self._alive = alive
+
+    def bulk_load(self, fids: np.ndarray, **cols: np.ndarray) -> None:
+        """Replace the whole table with the given rows."""
+        n = len(fids)
+        self._reset(max(1024, n))
+        self._fids[:n] = fids
+        for name, vals in cols.items():
+            self._cols[name][:n] = vals
+        self._alive[:n] = True
+        self._n = n
+        self._pos = {f: i for i, f in enumerate(fids.tolist())}
+
+    def upsert_many(self, fids: List[int], **cols: np.ndarray) -> None:
+        if not fids:
+            return
+        pos = np.empty(len(fids), dtype=np.int64)
+        for i, f in enumerate(fids):
+            p = self._pos.get(f)
+            if p is None:
+                if self._n >= len(self._alive):
+                    self._grow(self._n + 1)
+                p = self._n
+                self._n += 1
+                self._pos[f] = p
+                self._fids[p] = f
+                self._alive[p] = True
+            pos[i] = p
+        for name, vals in cols.items():
+            self._cols[name][pos] = vals
+
+    def remove_many(self, fids: Iterable[int]) -> None:
+        for f in fids:
+            p = self._pos.pop(f, None)
+            if p is not None:
+                self._alive[p] = False
+
+    def maybe_compact(self) -> None:
+        dead = self._n - len(self._pos)
+        if dead > 1024 and dead > len(self._pos):
+            fids, cols = self.live()
+            self.bulk_load(fids, **cols)
+
+    def live(self) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        idx = np.nonzero(self._alive[: self._n])[0]
+        return (self._fids[idx].copy(),
+                {name: col[idx].copy() for name, col in self._cols.items()})
+
+    def select_le(self, col: str, val: float) -> np.ndarray:
+        """Fids of live rows whose ``col`` value is <= ``val``."""
+        sel = self._alive[: self._n] & (self._cols[col][: self._n] <= val)
+        return self._fids[: self._n][sel]
+
+
+def _age_predicates(policy: PolicyDefinition
+                    ) -> Tuple[List[Tuple[str, float]], bool]:
+    """Collect (time_column, threshold_seconds) per age predicate in the
+    policy's scope/rules; second result is False when a predicate has no
+    well-defined flip instant (``==``/``!=`` on a continuous age)."""
+    preds: Set[Tuple[str, float]] = set()
+    supported = True
+    for expr in [policy.scope] + [r.condition for r in policy.rules]:
+        for node in iter_exprs(expr):
+            if isinstance(node, Cmp) and node.attr in AGE_ATTRS:
+                if node.op in ("==", "!="):
+                    supported = False
+                preds.add((AGE_ATTRS[node.attr], float(node.value)))
+    return sorted(preds), supported
+
+
+def _uses_globs(*exprs: Optional[Expr]) -> bool:
+    return any(isinstance(node, Cmp) and node.attr in GLOB_ATTRS
+               for expr in exprs if expr is not None
+               for node in iter_exprs(expr))
+
+
+def _next_flips(cols: Dict[str, np.ndarray],
+                age_preds: List[Tuple[str, float]], now: float) -> np.ndarray:
+    """Earliest future instant each row's age predicates change truth value.
+
+    A predicate over ``time_col`` with threshold T flips exactly at
+    ``time_col + T``; instants already past are spent. The boundary itself
+    is kept (>= now) so strict comparisons that only become true just after
+    the boundary are still re-evaluated on the next run. Rows with no
+    future flip read +inf.
+    """
+    out = np.full(len(cols["fid"]), np.inf)
+    for time_col, thr in age_preds:
+        cand = np.asarray(cols[time_col], dtype=np.float64) + thr
+        np.minimum(out, np.where(cand >= now, cand, np.inf), out=out)
+    return out
+
+
+class _IncrementalState:
+    """Per-policy incremental match state (dirty set + cached match table).
+
+    ``matched`` caches every fid satisfying ``scope AND any(rules)`` with
+    its budget/sort/attribution columns; ``flips`` schedules time-driven
+    re-evaluation for age predicates. ``touched`` collects delta fids
+    between runs. All methods are thread-safe against delta fan-in."""
+
+    def __init__(self, policy: PolicyDefinition) -> None:
+        self.lock = threading.Lock()
+        self.touched: Set[int] = set()
+        self.valid = False
+        self.sort_by = policy.sort_by
+        self.matched = _FidTable((("size", np.int64), ("sort", np.float64),
+                                  ("rule", np.int32)))
+        self.flips = _FidTable((("flip", np.float64),))
+        self.age_preds, self.supported = _age_predicates(policy)
+        # string gather is only paid when a criteria holds a glob predicate
+        self.needs_strings = _uses_globs(
+            policy.scope, *(r.condition for r in policy.rules))
+        self.full_rebuilds = 0
+
+    def note_touched(self, fids: Iterable[int]) -> None:
+        with self.lock:
+            if self.valid:           # invalid state is rebuilt by a full scan
+                self.touched.update(fids)
+
+    def drain_touched(self) -> Set[int]:
+        with self.lock:
+            out, self.touched = self.touched, set()
+            return out
+
+    def touched_count(self) -> int:
+        with self.lock:
+            return len(self.touched)
+
+    def invalidate(self) -> None:
+        with self.lock:
+            self.valid = False
+            self.touched = set()
+
+    def begin_rebuild(self) -> None:
+        """Start accepting deltas for the full scan about to be snapshot.
+
+        Called *before* the columnar snapshot: changes committed before the
+        snapshot are covered by it, changes committed after will be
+        re-delivered into ``touched`` — either way nothing is lost."""
+        with self.lock:
+            self.touched = set()
+            self.valid = True
+
+    def rebuild(self, cols: Dict[str, np.ndarray], mask: np.ndarray,
+                rule_idx: np.ndarray, now: float) -> None:
+        """Load the cached match table from a full columnar scan."""
+        fids = cols["fid"][mask]
+        self.matched.bulk_load(
+            fids, size=cols["size"][mask],
+            sort=np.asarray(cols[self.sort_by][mask], dtype=np.float64),
+            rule=rule_idx[mask])
+        if self.age_preds:
+            flips = _next_flips(cols, self.age_preds, now)
+            keep = np.isfinite(flips)
+            self.flips.bulk_load(cols["fid"][keep], flip=flips[keep])
+        else:
+            self.flips.bulk_load(np.zeros(0, dtype=np.int64),
+                                 flip=np.zeros(0))
+        self.full_rebuilds += 1
+
+    def due_flips(self, now: float) -> Set[int]:
+        return set(self.flips.select_le("flip", now).tolist())
+
+    def apply(self, fids: np.ndarray, cols: Dict[str, np.ndarray],
+              present: np.ndarray, mask: np.ndarray, rule_idx: np.ndarray,
+              now: float) -> None:
+        """Merge re-evaluated rows into the cached tables."""
+        gone = fids[~present].tolist()
+        self.matched.remove_many(gone)
+        self.flips.remove_many(gone)
+        hit = mask & present
+        self.matched.upsert_many(
+            fids[hit].tolist(), size=cols["size"][hit],
+            sort=np.asarray(cols[self.sort_by][hit], dtype=np.float64),
+            rule=rule_idx[hit])
+        self.matched.remove_many(fids[present & ~mask].tolist())
+        if self.age_preds:
+            flips = _next_flips(cols, self.age_preds, now)
+            sched = present & np.isfinite(flips)
+            self.flips.upsert_many(fids[sched].tolist(), flip=flips[sched])
+            self.flips.remove_many(fids[present & ~np.isfinite(flips)].tolist())
+        self.matched.maybe_compact()
+        self.flips.maybe_compact()
+
+    def plan_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+        fids, cols = self.matched.live()
+        return fids, cols["size"], cols["sort"], cols["rule"]
+
+
 class PolicyEngine:
     """Evaluates policies over the catalog and applies actions."""
+
+    # auto matching falls back to a full rescan once the dirty set exceeds
+    # this fraction of the catalog (a scan is cheaper than that many gathers)
+    incremental_rescan_frac = 0.25
 
     def __init__(self, catalog: Catalog, clock: Callable[[], float] = time.time
                  ) -> None:
@@ -152,15 +432,143 @@ class PolicyEngine:
         self.triggers: List[Tuple[str, UsageWatermarkTrigger]] = []
         self.history: List[RunReport] = []
         self._lock = threading.Lock()
+        self._inc: Dict[str, _IncrementalState] = {}
+        self._inc_enabled = False
+        self._streams: List[Tuple[ChangelogStream, str]] = []
+        self._sub_name: Optional[str] = None
 
     def register(self, policy: PolicyDefinition) -> None:
         self.policies[policy.name] = policy
+        self._inc.pop(policy.name, None)     # definition changed: reset cache
+        if self._inc_enabled:
+            self._ensure_state(policy.name)
 
     def add_watermark_trigger(self, policy_name: str,
                               trigger: UsageWatermarkTrigger) -> None:
         self.triggers.append((policy_name, trigger))
 
+    # -- incremental state plumbing ------------------------------------------------
+    def _ensure_state(self, policy_name: str) -> Optional[_IncrementalState]:
+        state = self._inc.get(policy_name)
+        if state is None:
+            state = _IncrementalState(self.policies[policy_name])
+            if state.supported:
+                self._inc[policy_name] = state
+            else:
+                return None              # ==/!= age predicates: always full
+        return state
+
+    def enable_incremental(self) -> None:
+        """Create per-policy incremental state; on by default once any delta
+        source (pipeline / stream / mark_dirty) is attached."""
+        self._inc_enabled = True
+        for name in self.policies:
+            self._ensure_state(name)
+
+    def subscribe_pipeline(self, pipeline) -> None:
+        """Receive (changed, removed) fid deltas from an
+        :class:`EventPipeline` after each catalog commit."""
+        self.enable_incremental()
+        pipeline.add_delta_listener(self._on_deltas)
+
+    def subscribe_stream(self, stream: ChangelogStream,
+                         subscriber: Optional[str] = None) -> None:
+        """Follow a changelog stream under the engine's own cursor.
+
+        The subscriber registers ``from_start`` so records already emitted
+        but not yet committed by the pipeline are not skipped (re-folding
+        an already-committed fid is harmless — it is just re-evaluated).
+        The engine's cursor then deliberately trails the stream's *default*
+        consumer ack watermark (the pipeline's catalog-commit point): a
+        record is only folded into dirty state once the catalog reflects
+        it. Polling happens at the start of every :meth:`run`.
+
+        ``subscriber`` defaults to a name unique to this engine instance so
+        engines sharing a stream never steal each other's records; pass a
+        stable name explicitly to resume a durable cursor across restarts
+        (and :meth:`ChangelogStream.unsubscribe` it when decommissioned).
+        """
+        self.enable_incremental()
+        name = subscriber or self._subscriber_name()
+        # auto-named cursors are per-process: never persisted, so a dead
+        # engine instance cannot pin the stream's purge floor after restart
+        stream.subscribe(name, from_start=True,
+                         durable=subscriber is not None)
+        self._streams.append((stream, name))
+
+    def _subscriber_name(self) -> str:
+        if self._sub_name is None:
+            with _ENGINE_SEQ_LOCK:
+                _ENGINE_SEQ[0] += 1
+                self._sub_name = f"policy-engine-{_ENGINE_SEQ[0]}"
+        return self._sub_name
+
+    def subscribe_hub(self, hub: ChangelogHub,
+                      subscriber: Optional[str] = None) -> None:
+        for stream in hub.streams.values():
+            self.subscribe_stream(stream, subscriber)
+
+    def mark_dirty(self, fids: Iterable[int]) -> None:
+        """Explicitly mark entries changed (for catalog mutations that did
+        not flow through a subscribed changelog/pipeline)."""
+        if not self._inc_enabled:
+            self.enable_incremental()
+        fids = list(fids)
+        for state in list(self._inc.values()):
+            state.note_touched(fids)
+
+    def invalidate(self, policy_name: Optional[str] = None) -> None:
+        """Drop cached match state (e.g. after a changelog cursor reset);
+        the next run falls back to a full scan and rebuilds it."""
+        if policy_name is None:
+            states = list(self._inc.values())
+        else:
+            state = self._inc.get(policy_name)
+            states = [state] if state is not None else []
+        for state in states:
+            state.invalidate()
+
+    def _on_deltas(self, changed: List[int], removed: List[int]) -> None:
+        # called from pipeline worker threads: snapshot against concurrent
+        # register() mutating the state dict
+        for state in list(self._inc.values()):
+            state.note_touched(changed)
+            state.note_touched(removed)
+
+    def _poll_streams(self) -> None:
+        """Drain subscribed changelog streams into the dirty sets, acking
+        only records the default consumer has already committed."""
+        for stream, name in self._streams:
+            while True:
+                recs = stream.read(max_records=4096, subscriber=name)
+                if not recs:
+                    break
+                committed = stream.acked        # pipeline's commit watermark
+                use = [r for r in recs if r.seq <= committed]
+                if use:
+                    fids = [r.fid for r in use]
+                    for state in list(self._inc.values()):
+                        state.note_touched(fids)
+                    stream.ack(use[-1].seq, subscriber=name)
+                if len(use) < len(recs):
+                    # beyond the commit point: re-deliver on the next poll
+                    stream.reset_cursor(subscriber=name)
+                    break
+
     # -- matching -----------------------------------------------------------------
+    def _eval_cols(self, policy: PolicyDefinition, cols, extra: Optional[Expr],
+                   now: float) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized scope/rules evaluation over any column dict."""
+        strings = self.catalog.strings
+        mask = policy.scope.mask(cols, strings, now)
+        rule_masks = [r.condition.mask(cols, strings, now)
+                      for r in policy.rules]
+        if rule_masks:
+            mask = mask & np.logical_or.reduce(rule_masks)
+        if extra is not None:
+            mask = mask & extra.mask(cols, strings, now)
+        return mask, self._attribute(mask, rule_masks)
+
     def _match(self, policy: PolicyDefinition, extra: Optional[Expr],
                now: float, evaluator: str = "numpy"
                ) -> Tuple[np.ndarray, np.ndarray, Dict[str, np.ndarray], str]:
@@ -187,14 +595,69 @@ class PolicyEngine:
                         cols, "policy_scan")
             except PolicyError:
                 pass          # glob predicates run on the host
-        strings = self.catalog.strings
-        mask = policy.scope.mask(cols, strings, now)
-        rule_masks = [r.mask(cols, strings, now) for r in rule_exprs]
-        if rule_masks:
-            mask &= np.logical_or.reduce(rule_masks)
-        if extra is not None:
-            mask &= extra.mask(cols, strings, now)
-        return mask, self._attribute(mask, rule_masks), cols, "numpy"
+        mask, rule_idx = self._eval_cols(policy, cols, extra, now)
+        return mask, rule_idx, cols, "numpy"
+
+    def _match_incremental(self, policy: PolicyDefinition,
+                           state: _IncrementalState, extra: Optional[Expr],
+                           now: float
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                      np.ndarray, int]:
+        """Re-evaluate only dirty/time-due rows, plan from the cached table.
+
+        Returns (fids, sizes, sort_keys, rule_idx, n_revaluated)."""
+        reval = sorted(state.drain_touched() | state.due_flips(now))
+        if reval:
+            try:
+                cols, present = self.catalog.gather_rows(
+                    reval, with_strings=state.needs_strings)
+                mask, rule_idx = self._eval_cols(policy, cols, None, now)
+                state.apply(np.asarray(reval, dtype=np.int64), cols, present,
+                            mask, rule_idx, now)
+            except Exception:
+                # the drained dirty fids may be partially merged: force a
+                # full rebuild rather than silently losing them
+                state.invalidate()
+                raise
+        fids, sizes, sort_keys, rule_idx = state.plan_arrays()
+        if extra is not None and fids.size:
+            ecols, epresent = self.catalog.gather_rows(
+                fids.tolist(), with_strings=_uses_globs(extra))
+            emask = extra.mask(ecols, self.catalog.strings, now) & epresent
+            fids, sizes = fids[emask], sizes[emask]
+            sort_keys, rule_idx = sort_keys[emask], rule_idx[emask]
+        return fids, sizes, sort_keys, rule_idx, len(reval)
+
+    def _resolve_matching(self, matching: str, policy: PolicyDefinition,
+                          state: Optional[_IncrementalState],
+                          has_extra: bool = False) -> str:
+        if matching not in MATCHING_MODES:
+            raise PolicyError(f"unknown matching mode {matching!r}")
+        if matching == "full":
+            return "full"
+        ready = state is not None and state.valid
+        if matching == "incremental":
+            if not ready:
+                if not _age_predicates(policy)[1]:
+                    raise PolicyError(
+                        f"policy {policy.name!r} cannot match incrementally:"
+                        " ==/!= comparisons on age attributes have no"
+                        " well-defined flip instant")
+                raise PolicyError(
+                    "incremental matching unavailable: no cached match "
+                    "state (attach a delta source and run a full scan "
+                    "first)")
+            return "incremental"
+        if not ready:
+            return "full"
+        limit = self.incremental_rescan_frac * max(1, len(self.catalog))
+        if state.touched_count() > limit:
+            return "full"                  # scan beats that many gathers
+        if has_extra and len(state.matched) > limit:
+            # extra criteria re-gather every cached matched fid; past this
+            # size a vectorized full snapshot is the cheaper plan
+            return "full"
+        return "incremental"
 
     @staticmethod
     def _attribute(mask: np.ndarray, rule_masks: List[np.ndarray]
@@ -217,38 +680,77 @@ class PolicyEngine:
     def run(self, policy_name: str, extra_criteria: Optional[Expr] = None,
             target_volume: int = 0, trigger: str = "manual",
             evaluator: Optional[str] = None,
-            execution: str = "batched") -> RunReport:
+            execution: str = "batched",
+            matching: str = "auto") -> RunReport:
         """One policy run: match -> sort -> apply until targets met.
 
         ``evaluator`` overrides the policy's matching backend for this run;
         ``execution="scalar"`` keeps the legacy per-entry path (benchmarks /
-        bisection only).
+        bisection only); ``matching`` picks the planner: ``"full"`` scans
+        the catalog columns, ``"incremental"`` re-evaluates only dirty/due
+        rows against the cached match table (requires a delta source and a
+        prior full run), ``"auto"`` (default) uses the incremental path
+        whenever it is valid.
         """
         policy = self.policies[policy_name]
         now = self.clock()
         t0 = time.perf_counter()
-        mask, rule_idx, cols, used_eval = self._match(
-            policy, extra_criteria, now, evaluator or policy.evaluator)
-        fids = cols["fid"][mask]
-        sizes = cols["size"][mask]
+        self._poll_streams()
+        state = self._inc.get(policy_name)
+        mode = self._resolve_matching(matching, policy, state,
+                                      has_extra=extra_criteria is not None)
+
+        if mode == "incremental":
+            fids, sizes, sort_keys, ridx, reval = self._match_incremental(
+                policy, state, extra_criteria, now)
+            used_eval = "numpy"
+        else:
+            rebuild = state is not None and extra_criteria is None
+            if rebuild:
+                state.begin_rebuild()   # before the snapshot: no lost deltas
+            try:
+                mask, rule_idx, cols, used_eval = self._match(
+                    policy, extra_criteria, now, evaluator or policy.evaluator)
+                fids = cols["fid"][mask]
+                sizes = cols["size"][mask]
+                ridx = rule_idx[mask]
+                sort_keys = np.asarray(cols[policy.sort_by][mask],
+                                       dtype=np.float64)
+                reval = int(mask.size)
+                if rebuild:
+                    state.rebuild(cols, mask, rule_idx, now)
+            except Exception:
+                # never leave a half-built cache marked valid (a bad
+                # sort_by would otherwise silently match nothing forever)
+                if rebuild:
+                    state.invalidate()
+                raise
         report = RunReport(policy=policy_name, matched=int(fids.size),
                            trigger=trigger, evaluator=used_eval,
+                           mode=mode, reval=reval,
                            matched_volume=int(sizes.sum()) if fids.size else 0)
 
+        executed = 0
+        plan = None
         if fids.size:
-            order = np.argsort(cols[policy.sort_by][mask], kind="stable")
-            if policy.sort_desc:
-                order = order[::-1]
-            plan = _Plan(fids=fids[order], sizes=sizes[order],
-                         rule_idx=rule_idx[mask][order])
+            key = -sort_keys if policy.sort_desc else sort_keys
+            order = np.lexsort((fids, key))    # fid tie-break: total order,
+            plan = _Plan(fids=fids[order],     # identical across planners
+                         sizes=sizes[order], rule_idx=ridx[order])
             budget_volume = target_volume or policy.max_volume_per_run
             budget_count = policy.max_actions_per_run
             if execution == "scalar":
-                self._run_scalar(policy, plan, now, report,
-                                 budget_volume, budget_count)
+                executed = self._run_scalar(policy, plan, now, report,
+                                            budget_volume, budget_count)
             else:
-                self._run_batched(policy, plan, now, report,
-                                  budget_volume, budget_count)
+                executed = self._run_batched(policy, plan, now, report,
+                                             budget_volume, budget_count)
+        if executed and policy.mutates and not policy.dry_run:
+            # actions may mutate the catalog directly (purge/archive
+            # plugins): re-observe actioned entries on the next run
+            acted = plan.fids[:executed].tolist()
+            for st in list(self._inc.values()):
+                st.note_touched(acted)
 
         report.elapsed = time.perf_counter() - t0
         self.history.append(report)
@@ -257,14 +759,15 @@ class PolicyEngine:
     # -- batched execution --------------------------------------------------------
     def _run_batched(self, policy: PolicyDefinition, plan: _Plan, now: float,
                      report: RunReport, budget_volume: int,
-                     budget_count: int) -> None:
+                     budget_count: int) -> int:
         """Budgeted rounds of chunk-parallel execution.
 
         Each round takes the minimal prefix of the remaining sorted work
         whose projected (match-time) volume/count meets the remaining
         budget, so the stop decision happens on batch boundaries and the
         actioned set never depends on thread timing. A follow-up round only
-        happens when failures/skips left a budget unmet.
+        happens when failures/skips left a budget unmet. Returns the number
+        of plan entries attempted.
         """
         n = len(plan.fids)
         pos = 0
@@ -286,6 +789,7 @@ class PolicyEngine:
             pos += take
             if not budget_volume and not budget_count:
                 break                      # single round covers everything
+        return pos
 
     def _execute_round(self, policy: PolicyDefinition, plan: _Plan,
                        lo: int, hi: int, now: float,
@@ -329,24 +833,28 @@ class PolicyEngine:
         skipped = np.array([e is None for e in entries])
         batch_fn: Optional[BatchAction] = getattr(policy.action,
                                                   "action_batch", None)
-        for ri in np.unique(ridx):
-            group = np.nonzero((ridx == ri) & ~skipped)[0]
-            if not group.size:
-                continue
-            params = policy.rules[ri].params if ri >= 0 else {}
-            group_entries = [entries[i] for i in group]
-            if batch_fn is not None:
+        if batch_fn is not None:
+            # batch interface: one call per rule group (shared params)
+            for ri in np.unique(ridx):
+                group = np.nonzero((ridx == ri) & ~skipped)[0]
+                if not group.size:
+                    continue
+                params = policy.rules[ri].params if ri >= 0 else {}
+                group_entries = [entries[i] for i in group]
                 try:
                     results = batch_fn(group_entries, params)
                 except Exception:
                     results = [False] * len(group_entries)
                 ok[group] = results
-            else:
-                for i, e in zip(group, group_entries):
-                    try:
-                        ok[i] = policy.action(e, params)
-                    except Exception:
-                        ok[i] = False
+        else:
+            # scalar actions keep strict plan (sort) order within the chunk
+            for i in np.nonzero(~skipped)[0]:
+                ri = ridx[i]
+                params = policy.rules[ri].params if ri >= 0 else {}
+                try:
+                    ok[i] = policy.action(entries[i], params)
+                except Exception:
+                    ok[i] = False
         done = ok & ~skipped
         with self._lock:
             report.succeeded += int(done.sum())
@@ -357,9 +865,10 @@ class PolicyEngine:
     # -- legacy scalar execution (benchmark baseline) ------------------------------
     def _run_scalar(self, policy: PolicyDefinition, plan: _Plan, now: float,
                     report: RunReport, budget_volume: int,
-                    budget_count: int) -> None:
+                    budget_count: int) -> int:
         """Pre-batching hot path: O(n) dequeues, per-entry catalog.get and
-        Python rule re-evaluation, racy post-hoc budget checks."""
+        Python rule re-evaluation, racy post-hoc budget checks. Returns the
+        number of plan entries attempted (conservative: the whole list)."""
         work = list(plan.fids.tolist())
         work_lock = threading.Lock()
         stop = threading.Event()
@@ -399,6 +908,7 @@ class PolicyEngine:
             t.start()
         for t in threads:
             t.join()
+        return len(plan.fids)
 
     def check_triggers(self) -> List[RunReport]:
         """Fire any watermark triggers whose threshold is exceeded (C7)."""

@@ -1,6 +1,6 @@
 import threading
 
-from repro.core import ChangelogStream, ChangelogType
+from repro.core import ChangelogHub, ChangelogStream, ChangelogType
 
 
 def test_ack_purges_and_pending():
@@ -42,6 +42,106 @@ def test_reset_cursor_redelivers():
     s.ack(1)
     s.reset_cursor()
     assert [r.seq for r in s.read()] == [2, 3]
+
+
+def test_named_subscribers_have_independent_cursors():
+    s = ChangelogStream()
+    for fid in range(1, 4):
+        s.emit(ChangelogType.CREAT, fid)
+    s.subscribe("engine")                  # starts at the head: future only
+    s.emit(ChangelogType.CREAT, 4)
+    assert [r.seq for r in s.read(subscriber="engine")] == [4]
+    assert [r.seq for r in s.read()] == [1, 2, 3, 4]   # default unaffected
+    s.ack(4)                               # default acks everything...
+    assert s.pending() == 0
+    # ...but records 4+ survive until "engine" acks too
+    s.reset_cursor(subscriber="engine")
+    assert [r.seq for r in s.read(subscriber="engine")] == [4]
+    s.ack(4, subscriber="engine")
+    assert s.pending(subscriber="engine") == 0
+
+
+def test_subscribe_from_start_sees_retained_records():
+    s = ChangelogStream()
+    for fid in range(1, 4):
+        s.emit(ChangelogType.CREAT, fid)
+    s.subscribe("auditor", from_start=True)
+    assert [r.seq for r in s.read(subscriber="auditor")] == [1, 2, 3]
+
+
+def test_laggard_subscriber_holds_back_purge_until_unsubscribed():
+    s = ChangelogStream()
+    s.subscribe("slow")
+    for fid in range(1, 6):
+        s.emit(ChangelogType.CREAT, fid)
+    s.read(max_records=100)
+    s.ack(5)                               # default fully acked
+    assert len(s._records) == 5            # retained for "slow"
+    s.unsubscribe("slow")
+    assert len(s._records) == 0            # released
+
+
+def test_subscriber_acks_survive_crash(tmp_path):
+    d = str(tmp_path)
+    s = ChangelogStream(mdt=0, persist_dir=d)
+    s.subscribe("engine", from_start=True)
+    for fid in range(1, 8):
+        s.emit(ChangelogType.CREAT, fid)
+    s.read(max_records=100)
+    s.ack(7)
+    s.read(max_records=3, subscriber="engine")
+    s.ack(3, subscriber="engine")
+    s.close()
+    # restart: both cursors recover; 4..7 redelivered to "engine" only
+    s2 = ChangelogStream(mdt=0, persist_dir=d)
+    assert s2.read(max_records=100) == []
+    s2.subscribe("engine")
+    assert [r.seq for r in s2.read(max_records=100, subscriber="engine")] \
+        == [4, 5, 6, 7]
+    # an unregistered crashed subscriber still holds back purge
+    s2.ack(7)
+    assert len(s2._records) == 4
+
+
+def test_unsubscribe_after_recovery_releases_retention(tmp_path):
+    d = str(tmp_path)
+    s = ChangelogStream(mdt=0, persist_dir=d)
+    s.subscribe("engine", from_start=True)
+    for fid in range(1, 4):
+        s.emit(ChangelogType.CREAT, fid)
+    s.read(max_records=2, subscriber="engine")
+    s.ack(2, subscriber="engine")
+    s.close()
+    s2 = ChangelogStream(mdt=0, persist_dir=d)
+    s2.subscribe("engine")
+    s2.unsubscribe("engine")           # decommissioned for good
+    for fid in range(4, 10):
+        s2.emit(ChangelogType.CREAT, fid)
+    s2.read(max_records=100)
+    s2.ack(9)
+    assert len(s2._records) == 0       # stale recovered ack must not pin
+    s2.close()
+    s3 = ChangelogStream(mdt=0, persist_dir=d)
+    assert s3.pending() == 0           # ...nor resurrect in the ack file
+
+
+def test_ack_beyond_head_is_clamped():
+    s = ChangelogStream()
+    for fid in range(1, 4):
+        s.emit(ChangelogType.CREAT, fid)
+    s.ack(100)                             # overshoot: clamped to seq 3
+    assert s.acked == 3
+    r = s.emit(ChangelogType.CREAT, 9)     # later records are NOT swallowed
+    assert r.seq == 4
+    assert [x.seq for x in s.read()] == [4]
+
+
+def test_hub_and_stream_close_are_idempotent(tmp_path):
+    hub = ChangelogHub(n_mdts=2, persist_dir=str(tmp_path))
+    hub.stream(0).emit(ChangelogType.CREAT, 1)
+    hub.close()
+    hub.close()                            # second close: no error
+    hub.stream(1).close()                  # per-stream re-close: no error
 
 
 def test_concurrent_producers_unique_seqs():

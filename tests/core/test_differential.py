@@ -1,0 +1,212 @@
+"""Differential suite: the four execution/matching paths are one engine.
+
+On randomized catalogs and randomized policies, ``execution="scalar"``,
+``execution="batched"`` under both evaluator backends (numpy and the
+policy_scan kernel oracle), and the incremental planner must action the
+**identical fid sequence** — same entries, same order, same report totals.
+
+All generated values are exactly representable in float32 so the kernel
+path is bit-for-bit with the int64/float64 numpy path (sizes are multiples
+of 1KiB below 2^31, times are integers below 2^24).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Catalog, Entry, FsType, HsmState, PolicyDefinition,
+                        PolicyEngine)
+
+NOW = float(2 ** 20)          # f32-exact "now"
+
+SCOPES = [
+    "true",
+    "type == file",
+    "type == file and size > 0",
+    "not type == dir",
+]
+
+CONDITIONS = [
+    "size > 16M",
+    "size <= 4M",
+    "size >= 1M and size < 64M",
+    "owner == 'user1'",
+    "not owner == 'user2'",
+    "group == 'grp0'",
+    "last_access > 1000s",
+    "last_access <= 5000s",
+    "last_mod > 2000s",
+    "hsm_state == none",
+    "hsm_state == archived",
+    "pool == 'ssd'",
+    "size > 8M or owner == 'user0'",
+    "size > 2M and last_access > 3000s",
+    "not (size <= 1M or last_access <= 500s)",
+]
+
+
+class Recorder:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.calls = []
+
+    def __call__(self, e, params):
+        with self.lock:
+            self.calls.append(e.fid)
+        return True
+
+
+def _random_catalog(rng, n):
+    cat = Catalog(n_shards=4)
+    entries = []
+    for i in range(n):
+        fid = i + 1
+        entries.append(Entry(
+            fid=fid, name=f"f{fid}", path=f"/p/d{fid % 5}/f{fid}",
+            type=FsType.FILE if rng.random() < 0.9 else FsType.DIR,
+            size=int(rng.integers(0, 2 ** 15)) * 1024,       # f32-exact
+            blocks=int(rng.integers(0, 2 ** 10)),
+            owner=f"user{int(rng.integers(0, 4))}",
+            group=f"grp{int(rng.integers(0, 3))}",
+            pool=["", "ssd", "hdd"][int(rng.integers(0, 3))],
+            hsm_state=HsmState(int(rng.integers(0, 5))),
+            atime=NOW - float(rng.integers(0, 10_000)),      # f32-exact
+            mtime=NOW - float(rng.integers(0, 10_000)),
+        ))
+    cat.upsert_batch(entries)
+    return cat
+
+
+def _random_policy(rng, action):
+    n_rules = int(rng.integers(1, 4))
+    conds = rng.choice(len(CONDITIONS), size=n_rules, replace=False)
+    return PolicyDefinition.from_config(
+        name="p", action=action,
+        scope=SCOPES[int(rng.integers(0, len(SCOPES)))],
+        rules=[(f"r{i}", CONDITIONS[int(c)], {"tag": f"r{i}"})
+               for i, c in enumerate(conds)],
+        sort_by=["atime", "size", "mtime"][int(rng.integers(0, 3))],
+        sort_desc=bool(rng.integers(0, 2)),
+        n_threads=1, batch_size=64, mutates=False)
+
+
+def _churn(rng, cat, n):
+    """Randomly mutate/remove/insert entries; returns the touched fids."""
+    touched = set()
+    live = [int(f) for s in cat.shards for f in s.fids()]
+    for fid in rng.choice(live, size=max(1, len(live) // 10), replace=False):
+        fid = int(fid)
+        kind = rng.random()
+        if kind < 0.2:
+            cat.remove(fid)
+        elif kind < 0.6:
+            cat.update_fields(fid, size=int(rng.integers(0, 2 ** 15)) * 1024,
+                              atime=NOW - float(rng.integers(0, 10_000)))
+        else:
+            cat.update_fields(fid, owner=f"user{int(rng.integers(0, 4))}",
+                              hsm_state=HsmState(int(rng.integers(0, 5))))
+        touched.add(fid)
+    for _ in range(n // 20):
+        fid = n + int(rng.integers(1, 10_000))
+        cat.upsert(Entry(fid=fid, name=f"n{fid}", path=f"/p/new/n{fid}",
+                         type=FsType.FILE,
+                         size=int(rng.integers(0, 2 ** 15)) * 1024,
+                         owner=f"user{int(rng.integers(0, 4))}",
+                         atime=NOW - float(rng.integers(0, 10_000))))
+        touched.add(fid)
+    return sorted(touched)
+
+
+def _run_path(cat, policy_factory, clock_t, **run_kw):
+    rec = Recorder()
+    eng = PolicyEngine(cat, clock=lambda: clock_t)
+    eng.register(policy_factory(rec))
+    r = eng.run("p", **run_kw)
+    return r, rec.calls
+
+
+def _assert_paths_agree(seed, n=600, rounds=2):
+    rng = np.random.default_rng(seed)
+    cat = _random_catalog(rng, n)
+    policy_rng = np.random.default_rng(seed + 1)
+
+    def factory(action, _proto=_random_policy(policy_rng, None)):
+        import dataclasses
+        return dataclasses.replace(_proto, action=action)
+
+    # incremental engine lives across churn rounds; every other path is a
+    # fresh full evaluation of the same catalog state
+    inc_rec = Recorder()
+    inc_eng = PolicyEngine(cat, clock=lambda: _assert_paths_agree.t)
+    inc_eng.register(factory(inc_rec))
+    inc_eng.enable_incremental()
+    _assert_paths_agree.t = NOW
+    inc_eng.run("p")              # cold full run primes the cache
+
+    t = NOW
+    for round_i in range(rounds):
+        touched = _churn(rng, cat, n)
+        inc_eng.mark_dirty(touched)
+        t += float(rng.integers(0, 2_000))      # flips fire too
+        _assert_paths_agree.t = t
+
+        results = {}
+        inc_rec.calls.clear()
+        r = inc_eng.run("p", matching="incremental")
+        results["incremental"] = (r.matched, r.succeeded, r.volume,
+                                  list(inc_rec.calls))
+        r, calls = _run_path(cat, factory, t, execution="scalar")
+        results["scalar"] = (r.matched, r.succeeded, r.volume, calls)
+        r, calls = _run_path(cat, factory, t, execution="batched",
+                             evaluator="numpy")
+        results["numpy"] = (r.matched, r.succeeded, r.volume, calls)
+        r, calls = _run_path(cat, factory, t, execution="batched",
+                             evaluator="policy_scan")
+        results["policy_scan"] = (r.matched, r.succeeded, r.volume, calls)
+
+        ref = results["numpy"]
+        for name, got in results.items():
+            assert got == ref, (
+                f"seed={seed} round={round_i} path={name} diverged: "
+                f"{got[:3]} vs {ref[:3]}; "
+                f"sym_diff={set(got[3]) ^ set(ref[3])}")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_all_paths_action_identical_sets(seed):
+    _assert_paths_agree(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(2, 12)))
+def test_all_paths_action_identical_sets_deep(seed):
+    _assert_paths_agree(seed, n=1500, rounds=3)
+
+
+@pytest.mark.slow
+def test_budgeted_runs_agree_across_paths():
+    """Volume/count budgets: deterministic prefix on every path."""
+    rng = np.random.default_rng(99)
+    cat = _random_catalog(rng, 800)
+
+    def factory(action):
+        return PolicyDefinition.from_config(
+            name="p", action=action, scope="type == file",
+            rules=[("any", "size >= 0", {})], sort_by="atime",
+            n_threads=1, batch_size=32, max_actions_per_run=111,
+            mutates=False)
+
+    results = {}
+    for execution in ("scalar", "batched"):
+        r, calls = _run_path(cat, factory, NOW, execution=execution)
+        results[execution] = (r.succeeded, calls)
+    inc_rec = Recorder()
+    eng = PolicyEngine(cat, clock=lambda: NOW)
+    eng.register(factory(inc_rec))
+    eng.enable_incremental()
+    eng.run("p")
+    inc_rec.calls.clear()
+    eng.mark_dirty([1, 2, 3])
+    r = eng.run("p", matching="incremental")
+    results["incremental"] = (r.succeeded, list(inc_rec.calls))
+    assert results["scalar"] == results["batched"] == results["incremental"]

@@ -77,6 +77,71 @@ def test_threaded_pipeline_drains():
     assert counters.snapshot()["per_user"]["live"]
 
 
+def test_same_batch_create_unlink_never_materializes():
+    """An UNLNK after a CREAT of the same fid in one batch folds to nothing:
+    no error, no catalog entry, no dirty tag (sync and async modes)."""
+    for async_updates in (False, True):
+        fs = LustreSim(n_mdts=1)
+        d = fs.mkdir(fs.root_fid(), "dir")
+        keep = fs.create(d, "keep", owner="u")
+        fs.write(keep, 50)
+        ephemeral = fs.create(d, "tmp", owner="u")
+        fs.write(ephemeral, 999)
+        fs.unlink(ephemeral)               # same pending batch as its CREAT
+        cat = Catalog()
+        pipe = EventPipeline(fs, cat, fs.changelog.stream(0),
+                             PipelineConfig(async_updates=async_updates,
+                                            batch_size=1024))
+        pipe.process_once(100000)
+        assert cat.get(ephemeral) is None
+        assert ephemeral not in pipe._dirty
+        assert cat.get(keep).size == 50
+        assert fs.changelog.stream(0).pending() == 0   # all acked cleanly
+
+
+def test_delta_fanout_notifies_after_commit():
+    fs, d, fids = _fs_with_files(8)
+    cat = Catalog()
+    pipe = EventPipeline(fs, cat, fs.changelog.stream(0), PipelineConfig())
+    events = []
+    pipe.add_delta_listener(
+        lambda changed, removed: events.append((sorted(changed),
+                                                sorted(removed))))
+    pipe.process_once(100000)
+    changed = sorted(f for ch, _ in events for f in ch)
+    assert changed == sorted([d] + fids)
+    events.clear()
+
+    fs.write(fids[0], 7, uid="u")
+    fs.write(fids[0], 7, uid="u")          # folded: one refresh per batch
+    fs.unlink(fids[1])
+    pipe.process_once(100000)
+    changed = [f for ch, _ in events for f in ch]
+    removed = [f for _, rm in events for f in rm]
+    assert changed == [fids[0]] and removed == [fids[1]]
+
+
+def test_delta_fanout_async_mode_notifies_refresh():
+    fs, d, fids = _fs_with_files(5)
+    cat = Catalog()
+    pipe = EventPipeline(fs, cat, fs.changelog.stream(0),
+                         PipelineConfig(async_updates=True))
+    pipe.process_once(100000)
+    events = []
+    pipe.add_delta_listener(
+        lambda changed, removed: events.append((list(changed),
+                                                list(removed))))
+    for _ in range(10):
+        fs.write(fids[2], 10, uid="u")
+    fs.unlink(fids[3])
+    pipe.process_once(100000)
+    changed = [f for ch, _ in events for f in ch]
+    removed = [f for _, rm in events for f in rm]
+    assert removed == [fids[3]]
+    assert changed == [fids[2]]            # deduped to one refresh
+    assert cat.get(fids[2]).size == 300 + 100
+
+
 def test_scan_and_changelog_agree():
     """DB built by scan == DB built by changelog replay."""
     fs, d, fids = _fs_with_files(25)
