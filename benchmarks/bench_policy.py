@@ -6,14 +6,20 @@ and the Pallas ``policy_scan`` kernel in interpret mode (the TPU path;
 interpret mode measures correctness not speed — on-TPU it fuses the scan
 with aggregation in one HBM pass).
 
-Plus the end-to-end engine comparison: ``engine_scalar`` (legacy per-entry
-execution: O(n) dequeues, per-entry catalog.get, Python rule re-evaluation)
-vs ``engine_batched`` (columnar match, vectorized attribution, chunked
-get_batch execution) on a 1M-entry catalog, and ``engine_incremental``
-(changelog-driven dirty-set matching vs a full re-scan at 1% churn).
+Plus the end-to-end engine comparison on a 1M-entry catalog:
+``engine_scalar`` (legacy per-entry execution: O(n) dequeues, per-entry
+catalog.get, Python rule re-evaluation) vs ``engine_batched`` (columnar
+match, vectorized attribution, chunked get_batch execution — every chunk
+still materializes Entry objects) vs ``engine_columnar`` (the
+zero-materialization path: ColumnBatch chunks flow straight to the batch
+action, no ``Entry.__init__`` anywhere). All three action the identical
+fid sequence — asserted — as do the numpy / per-rule-launch /
+single-launch matcher backends. ``engine_incremental`` adds the
+changelog-driven dirty-set matching vs a full re-scan at 1% churn.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import jax.numpy as jnp
@@ -22,7 +28,7 @@ import numpy as np
 from repro.core import (Catalog, Entry, FsType, PolicyDefinition,
                         PolicyEngine, parse_expr)
 from repro.core.policy import KERNEL_COLUMNS, compile_program
-from repro.kernels.policy_scan.ops import policy_scan
+from repro.kernels.policy_scan.ops import match_programs, policy_scan
 
 EXPR = "(size > 1GB or owner == 'user3') and not last_access > 30d"
 N = 120_000
@@ -45,11 +51,29 @@ def _catalog(n):
 
 
 def _bench_engine(n: int) -> list:
-    """engine_scalar vs engine_batched on the same catalog + policy."""
+    """engine_scalar vs engine_batched vs engine_columnar, same catalog +
+    policy + recording action; actioned fid sequences asserted identical."""
     cat = _catalog(n)
 
+    acted: list = []
+    lock = threading.Lock()
+
     def act(e, params):
+        with lock:
+            acted.append(e.fid)
         return True
+
+    def act_batch(batch, params):
+        with lock:
+            acted.extend(batch.fids.tolist())
+        return [True] * len(batch)
+
+    act.action_batch = act_batch
+
+    def drain():
+        out = sorted(acted)
+        acted.clear()
+        return out
 
     eng = PolicyEngine(cat)
     # ~17% of entries match: large enough that the legacy path's O(n)
@@ -64,24 +88,52 @@ def _bench_engine(n: int) -> list:
     t0 = time.perf_counter()
     r_s = eng.run("sweep", execution="scalar")
     dt_s = time.perf_counter() - t0
+    fids_scalar = drain()
     rows.append(("policy_engine_scalar", 1e6 * dt_s / n,
                  f"{n/dt_s:.0f}_entries_per_s_actions_{r_s.succeeded}"))
 
     t0 = time.perf_counter()
     r_b = eng.run("sweep", execution="batched")
     dt_b = time.perf_counter() - t0
+    fids_batched = drain()
     assert r_b.succeeded == r_s.succeeded and r_b.matched == r_s.matched
+    assert fids_batched == fids_scalar
     rows.append(("policy_engine_batched", 1e6 * dt_b / n,
                  f"{n/dt_b:.0f}_entries_per_s_speedup_{dt_s/dt_b:.1f}x"))
 
     t0 = time.perf_counter()
-    r_k = eng.run("sweep", evaluator="policy_scan", execution="batched")
+    r_c = eng.run("sweep", execution="columnar")
+    dt_c = time.perf_counter() - t0
+    fids_col = drain()
+    assert r_c.succeeded == r_b.succeeded and r_c.matched == r_b.matched
+    assert fids_col == fids_batched       # Entry-free path: identical actions
+    rows.append(("policy_engine_columnar", 1e6 * dt_c / n,
+                 f"{n/dt_c:.0f}_entries_per_s"
+                 f"_speedup_vs_batched_{dt_b/dt_c:.1f}x"))
+
+    t0 = time.perf_counter()
+    r_k = eng.run("sweep", evaluator="policy_scan", execution="columnar")
     dt_k = time.perf_counter() - t0
+    fids_scan = drain()
     # f32 kernel columns: sizes within one ulp (~256 B at 2 GB) of the
     # cutoff may flip vs the int64 numpy path
-    assert abs(r_k.succeeded - r_b.succeeded) <= 8
-    rows.append(("policy_engine_batched_scan", 1e6 * dt_k / n,
+    assert abs(r_k.succeeded - r_c.succeeded) <= 8
+    assert len(set(fids_scan) ^ set(fids_col)) <= 8
+    rows.append(("policy_engine_columnar_scan", 1e6 * dt_k / n,
                  f"{n/dt_k:.0f}_entries_per_s_backend_{r_k.evaluator}"))
+
+    # matcher backends: per-rule launches == single launch, bit-for-bit
+    policy = eng.policies["sweep"]
+    exprs = [parse_expr("type == file and size > 1700MB"),
+             policy.rules[0].condition]
+    arrays = cat.arrays()
+    now = time.time()
+    m1, a1, r1 = match_programs(arrays, exprs, cat.strings, now,
+                                use_kernel=False, single_launch=True)
+    m2, a2, r2 = match_programs(arrays, exprs, cat.strings, now,
+                                use_kernel=False, single_launch=False)
+    assert all((x == y).all() for x, y in zip(m1, m2)) and (r1 == r2).all()
+    assert a1["count"] == a2["count"] and a1["rule_count"] == a2["rule_count"]
     return rows
 
 

@@ -5,7 +5,7 @@ Collect (scanner/changelog/pipeline) -> store (catalog) -> exploit
 """
 from .types import (ChangelogRecord, ChangelogType, Entry, FsType, HsmState,
                     format_size, parse_duration, parse_size)
-from .catalog import Catalog, CatalogShard, StringTable
+from .catalog import Catalog, CatalogShard, ColumnBatch, StringTable
 from .changelog import ChangelogHub, ChangelogStream
 from .scanner import Scanner, multi_client_scan, prune_missing
 from .pipeline import EventPipeline, PipelineConfig
@@ -22,7 +22,7 @@ from .plugins import PLUGIN_REGISTRY, register_plugin
 __all__ = [
     "ChangelogRecord", "ChangelogType", "Entry", "FsType", "HsmState",
     "format_size", "parse_duration", "parse_size",
-    "Catalog", "CatalogShard", "StringTable",
+    "Catalog", "CatalogShard", "ColumnBatch", "StringTable",
     "ChangelogHub", "ChangelogStream",
     "Scanner", "multi_client_scan", "prune_missing",
     "EventPipeline", "PipelineConfig",

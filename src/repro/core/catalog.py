@@ -104,6 +104,126 @@ class LazyColumns(dict):
         return super().__contains__(key) or key in self._loaders
 
 
+class ColumnBatch:
+    """Entry-free columnar view of a set of catalog rows.
+
+    The zero-materialization contract of the batched action path: a
+    ``ColumnBatch`` carries every numeric column (fid/size/blocks/hsm_state/
+    owner-code/... as numpy arrays aligned with the requested fid order)
+    plus a ``present`` mask, WITHOUT constructing a single Python ``Entry``.
+    Batch actions consume it directly; the few that genuinely need full
+    ``Entry`` objects declare ``needs_entries = True`` (see
+    ``core.plugins``) and the engine materializes for them alone.
+
+    * numeric columns: attribute access (``batch.size``, ``batch.fid``) or
+      ``batch.col(name)``;
+    * interned string columns: ``batch.decode("owner")`` lazily decodes the
+      int32 codes through the shared :class:`StringTable` (cached);
+    * ``take(idx)`` slices a sub-batch (used for per-rule action groups);
+    * ``entries()`` is the materializing escape hatch — one
+      :meth:`Catalog.get_batch` call, cached; only ``needs_entries``
+      plugins and the legacy benchmark path pay it.
+    """
+
+    __slots__ = ("cols", "present", "strings", "_catalog", "_decoded",
+                 "_entries")
+
+    def __init__(self, cols: Dict[str, np.ndarray], present: np.ndarray,
+                 strings: "StringTable", catalog=None) -> None:
+        self.cols = cols
+        self.present = present
+        self.strings = strings
+        self._catalog = catalog
+        self._decoded: Dict[str, list] = {}
+        self._entries = None
+
+    def __len__(self) -> int:
+        return len(self.present)
+
+    @property
+    def fids(self) -> np.ndarray:
+        return self.cols["fid"]
+
+    def col(self, name: str) -> np.ndarray:
+        return self.cols[name]
+
+    def __getattr__(self, name: str):
+        try:
+            return self.cols[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def decode(self, name: str) -> List[str]:
+        """Lazily decode an interned string column (owner/group/pool/status)
+        to a list of strings; absent rows decode to ''."""
+        out = self._decoded.get(name)
+        if out is None:
+            lookup = self.strings.lookup
+            out = [lookup(c) for c in self.cols[name].tolist()]
+            self._decoded[name] = out
+        return out
+
+    def take(self, idx) -> "ColumnBatch":
+        """Sub-batch at the given positions (int indices or bool mask)."""
+        idx = np.asarray(idx)
+        if idx.dtype == bool:
+            idx = np.nonzero(idx)[0]
+        idx = idx.astype(np.int64)
+        pos = idx.tolist()
+        cols = {k: (v[idx] if isinstance(v, np.ndarray)
+                    else [v[i] for i in pos])           # _names/_paths lists
+                for k, v in self.cols.items()}
+        sub = ColumnBatch(cols, self.present[idx], self.strings,
+                          self._catalog)
+        if self._entries is not None:
+            sub._entries = [self._entries[i] for i in idx.tolist()]
+        return sub
+
+    def entries(self) -> List[Optional[Entry]]:
+        """Materialize full Entry objects (cached; the cost this view
+        exists to avoid — only ``needs_entries`` actions trigger it)."""
+        if self._entries is None:
+            if self._catalog is None:
+                raise RuntimeError("ColumnBatch has no catalog attached")
+            self._entries = self._catalog.get_batch(self.fids.tolist())
+        return self._entries
+
+    @classmethod
+    def from_entries(cls, entries: Sequence[Optional[Entry]],
+                     strings: "StringTable", catalog=None) -> "ColumnBatch":
+        """Build a batch from already-materialized entries (the legacy
+        Entry-first execution path; pure overhead the columnar path skips).
+        Absent entries (None) read 0 with ``present=False``."""
+        n = len(entries)
+        cols = {name: np.zeros(n, dtype=dt) for name, dt in _NUMERIC_COLUMNS}
+        present = np.zeros(n, dtype=bool)
+        for i, e in enumerate(entries):
+            if e is None:
+                continue
+            present[i] = True
+            cols["fid"][i] = e.fid
+            cols["parent_fid"][i] = e.parent_fid
+            cols["type"][i] = int(e.type)
+            cols["size"][i] = e.size
+            cols["blocks"][i] = e.blocks
+            cols["mode"][i] = e.mode
+            cols["nlink"][i] = e.nlink
+            cols["atime"][i] = e.atime
+            cols["mtime"][i] = e.mtime
+            cols["ctime"][i] = e.ctime
+            cols["ost_idx"][i] = e.ost_idx
+            cols["hsm_state"][i] = int(e.hsm_state)
+            cols["archive_id"][i] = e.archive_id
+            cols["owner"][i] = strings.intern(e.owner)
+            cols["group"][i] = strings.intern(e.group)
+            cols["pool"][i] = strings.intern(e.pool)
+            cols["status"][i] = strings.intern(e.status)
+            cols["dirty"][i] = 1 if e.dirty else 0
+        batch = cls(cols, present, strings, catalog)
+        batch._entries = list(entries)
+        return batch
+
+
 class StringTable:
     """Bidirectional string<->int32 interning table (thread-safe)."""
 
@@ -432,8 +552,28 @@ class Catalog:
         self.db_path = db_path
         self._db: Optional[sqlite3.Connection] = None
         self._db_lock = threading.Lock()
+        self._version = 0
+        self._version_lock = threading.Lock()
         if db_path:
             self._open_db(db_path)
+
+    # -- change tick ----------------------------------------------------------
+    @property
+    def version(self) -> int:
+        """Monotonic change tick: bumped by every mutating operation.
+
+        Readers (e.g. ``Reports``' sorted path index) cache derived
+        structures keyed by it and rebuild only after the catalog changed.
+        """
+        return self._version
+
+    def _bump(self) -> None:
+        # Called AFTER a mutation is applied: a reader that caches under the
+        # new version is then guaranteed to have seen the new data (a reader
+        # racing the mutation itself caches under the old version and
+        # rebuilds on its next check — one redundant rebuild, never stale).
+        with self._version_lock:
+            self._version += 1
 
     # -- persistence ----------------------------------------------------------
     _SCHEMA = (
@@ -517,6 +657,7 @@ class Catalog:
     # -- operations ---------------------------------------------------------------
     def upsert(self, e: Entry, persist: bool = True) -> None:
         old, new = self.shard_of(e.fid).upsert(e)
+        self._bump()
         self._fire(old, new)
         for fn in self._entry_hooks:
             fn(e)
@@ -530,12 +671,14 @@ class Catalog:
             self._fire(old, new)
             for fn in self._entry_hooks:
                 fn(e)
+        self._bump()
         self._persist(entries, [])
 
     def update_fields(self, fid: int, **fields) -> bool:
         res = self.shard_of(fid).update_fields(fid, **fields)
         if res is None:
             return False
+        self._bump()
         self._fire(res[0], res[1])
         if self._db is not None:
             e = self.get(fid)
@@ -547,6 +690,7 @@ class Catalog:
         old = self.shard_of(fid).remove(fid)
         if old is None:
             return False
+        self._bump()
         self._fire(old, None)
         if persist:
             self._persist([], [fid])
@@ -582,6 +726,8 @@ class Catalog:
                 if res is not None:
                     self._fire(res[0], res[1])
                     updated.append(fid)
+        if updated:
+            self._bump()
         if self._db is not None and updated:
             entries = [e for e in self.get_batch(updated) if e is not None]
             self._persist(entries, [])
@@ -596,6 +742,7 @@ class Catalog:
                 self._fire(old, None)
                 removed.append(fid)
         if removed:
+            self._bump()
             self._persist([], removed)
         return len(removed)
 
@@ -660,6 +807,21 @@ class Catalog:
             out["_names"] = names   # type: ignore[assignment]
             out["_paths"] = paths   # type: ignore[assignment]
         return out, present
+
+    def column_batch(self, fids: Sequence[int], with_strings: bool = False
+                     ) -> ColumnBatch:
+        """Entry-free row fetch: a :class:`ColumnBatch` over every numeric
+        column for the given fids (one lock acquisition per shard group, no
+        ``Entry.__init__``). The policy engine's columnar execution path and
+        incremental re-evaluation both flow through this.
+
+        ``with_strings=True`` additionally gathers the per-row name/path
+        lists (host-side glob predicates need them); interned columns are
+        always present as int32 codes and decode lazily via
+        :meth:`ColumnBatch.decode`.
+        """
+        cols, present = self.gather_rows(fids, with_strings=with_strings)
+        return ColumnBatch(cols, present, self.strings, catalog=self)
 
     def __len__(self) -> int:
         return sum(s.count() for s in self.shards)

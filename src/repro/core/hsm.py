@@ -43,18 +43,20 @@ class HsmCoordinator:
                                        archive_id=aid)
             return True
 
-        def do_archive_batch(entries: List[Entry], params: dict) -> List[bool]:
+        def do_archive_batch(batch, params: dict) -> List[bool]:
+            # Entry-free: consumes a ColumnBatch, touches only fid columns
             aid = params.get("archive_id", self.archive_id)
             oks = []
-            for e in entries:
+            done = []
+            for fid in batch.fids.tolist():
                 try:
-                    self.fs.hsm_archive(e.fid, archive_id=aid)
+                    self.fs.hsm_archive(fid, archive_id=aid)
                     oks.append(True)
+                    done.append(fid)
                 except Exception:
                     oks.append(False)
             self.catalog.update_fields_batch(
-                [e.fid for e, ok in zip(entries, oks) if ok],
-                hsm_state=HsmState.ARCHIVED, archive_id=aid)
+                done, hsm_state=HsmState.ARCHIVED, archive_id=aid)
             return oks
 
         do_archive.action_batch = do_archive_batch
@@ -75,17 +77,19 @@ class HsmCoordinator:
                                        blocks=0)
             return True
 
-        def do_release_batch(entries: List[Entry], params: dict) -> List[bool]:
+        def do_release_batch(batch, params: dict) -> List[bool]:
+            # Entry-free: consumes a ColumnBatch, touches only fid columns
             oks = []
-            for e in entries:
+            done = []
+            for fid in batch.fids.tolist():
                 try:
-                    self.fs.hsm_release(e.fid)
+                    self.fs.hsm_release(fid)
                     oks.append(True)
+                    done.append(fid)
                 except Exception:
                     oks.append(False)
             self.catalog.update_fields_batch(
-                [e.fid for e, ok in zip(entries, oks) if ok],
-                hsm_state=HsmState.RELEASED, blocks=0)
+                done, hsm_state=HsmState.RELEASED, blocks=0)
             return oks
 
         do_release.action_batch = do_release_batch

@@ -5,18 +5,28 @@ Each plugin is an action factory: given runtime handles it returns an
 compose policies from these "with a few lines of configuration"; custom
 plugins are just new callables registered in :data:`PLUGIN_REGISTRY`.
 
-Actions may additionally expose a **batch interface** by attaching an
-``action_batch(entries, params) -> list[bool]`` attribute to the callable:
-the batched policy engine then applies whole chunks at once (one catalog
-commit per chunk instead of one per entry).
+Batch interface (zero-materialization contract)
+-----------------------------------------------
+
+Actions may expose a vectorized form by attaching an
+``action_batch(batch, params) -> list[bool]`` attribute to the callable.
+``batch`` is a :class:`~repro.core.catalog.ColumnBatch` — parallel numpy
+columns (``batch.fids``, ``batch.size``, ``batch.hsm_state``, interned
+codes with ``batch.decode("owner")`` for lazy string access) gathered
+straight from the catalog shards with **no per-entry Python object**. The
+engine calls it once per rule group per chunk; actions apply their effects
+with one filesystem pass plus one ``catalog.*_batch`` commit.
+
+Actions that genuinely need full :class:`Entry` objects (names, paths,
+xattrs) declare ``needs_entries = True`` next to ``action_batch``; the
+engine then materializes entries for that action alone and passes
+``List[Entry]`` instead. Everything else rides the Entry-free path.
 """
 from __future__ import annotations
 
-import os
-import shutil
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
-from .catalog import Catalog
+from .catalog import Catalog, ColumnBatch
 from .types import Entry, HsmState
 
 PluginFactory = Callable[..., Callable[[Entry, dict], bool]]
@@ -39,15 +49,17 @@ def purge_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
         catalog.remove(e.fid)
         return True
 
-    def action_batch(entries: List[Entry], params: dict) -> List[bool]:
+    def action_batch(batch: ColumnBatch, params: dict) -> List[bool]:
         oks = []
-        for e in entries:
+        gone = []
+        for fid in batch.fids.tolist():
             try:
-                fs.unlink(e.fid)
+                fs.unlink(fid)
                 oks.append(True)
+                gone.append(fid)
             except Exception:
                 oks.append(False)
-        catalog.remove_batch([e.fid for e, ok in zip(entries, oks) if ok])
+        catalog.remove_batch(gone)
         return oks
 
     action.action_batch = action_batch
@@ -56,7 +68,7 @@ def purge_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
 
 @register_plugin("rmdir_empty")
 def rmdir_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
-    """Remove old empty directories."""
+    """Remove old empty directories (scalar: needs a readdir per entry)."""
 
     def action(e: Entry, params: dict) -> bool:
         if fs.readdir(e.fid):
@@ -75,18 +87,18 @@ def archive_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
         catalog.update_fields(e.fid, hsm_state=HsmState.ARCHIVED)
         return True
 
-    def action_batch(entries: List[Entry], params: dict) -> List[bool]:
+    def action_batch(batch: ColumnBatch, params: dict) -> List[bool]:
         archive_id = params.get("archive_id", 1)
         oks = []
-        for e in entries:
+        done = []
+        for fid in batch.fids.tolist():
             try:
-                fs.hsm_archive(e.fid, archive_id=archive_id)
+                fs.hsm_archive(fid, archive_id=archive_id)
                 oks.append(True)
+                done.append(fid)
             except Exception:
                 oks.append(False)
-        catalog.update_fields_batch(
-            [e.fid for e, ok in zip(entries, oks) if ok],
-            hsm_state=HsmState.ARCHIVED)
+        catalog.update_fields_batch(done, hsm_state=HsmState.ARCHIVED)
         return oks
 
     action.action_batch = action_batch
@@ -100,17 +112,18 @@ def release_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
         catalog.update_fields(e.fid, hsm_state=HsmState.RELEASED, blocks=0)
         return True
 
-    def action_batch(entries: List[Entry], params: dict) -> List[bool]:
+    def action_batch(batch: ColumnBatch, params: dict) -> List[bool]:
         oks = []
-        for e in entries:
+        done = []
+        for fid in batch.fids.tolist():
             try:
-                fs.hsm_release(e.fid)
+                fs.hsm_release(fid)
                 oks.append(True)
+                done.append(fid)
             except Exception:
                 oks.append(False)
-        catalog.update_fields_batch(
-            [e.fid for e, ok in zip(entries, oks) if ok],
-            hsm_state=HsmState.RELEASED, blocks=0)
+        catalog.update_fields_batch(done, hsm_state=HsmState.RELEASED,
+                                    blocks=0)
         return oks
 
     action.action_batch = action_batch
@@ -124,12 +137,25 @@ def migrate_pool_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
     Re-stripes a file's data onto the target pool's OSTs (simulated move)
     and updates pool/ost metadata — the 'data must be moved between pools of
     storage resources according to site-specific policies' case.
+
+    The batch form takes the FS lock once per chunk and applies the space
+    accounting as a **per-OST grouped restripe**: frees are summed per
+    source OST and allocations per target OST, one ``free``/``alloc`` call
+    per OST instead of one per file stripe, followed by a single catalog
+    batch commit.
     """
+
+    def _new_stripes(target_pool: str):
+        cands = fs.pools.get(target_pool)
+        if not cands:
+            return None
+        n = min(fs.stripe_count, len(cands))
+        return tuple(cands[i % len(cands)] for i in range(n))
 
     def action(e: Entry, params: dict) -> bool:
         target_pool = params.get("pool", "")
-        cands = fs.pools.get(target_pool)
-        if not cands:
+        new_stripes = _new_stripes(target_pool)
+        if new_stripes is None:
             return False
         node = fs._nodes.get(e.fid)
         if node is None:
@@ -138,8 +164,6 @@ def migrate_pool_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
             per = node.data_len // max(1, len(e.stripe_osts)) if e.stripe_osts else 0
             for idx in e.stripe_osts:
                 fs.osts[idx].free(per)
-            n = min(fs.stripe_count, len(cands))
-            new_stripes = tuple(cands[i % len(cands)] for i in range(n))
             per_new = node.data_len // max(1, len(new_stripes))
             for idx in new_stripes:
                 fs.osts[idx].alloc(per_new)
@@ -151,6 +175,42 @@ def migrate_pool_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
                               stripe_osts=new_stripes)
         return True
 
+    def action_batch(batch: ColumnBatch, params: dict) -> List[bool]:
+        target_pool = params.get("pool", "")
+        new_stripes = _new_stripes(target_pool)
+        fids = batch.fids.tolist()
+        if new_stripes is None:
+            return [False] * len(fids)
+        oks = [False] * len(fids)
+        moved: List[int] = []
+        freed: Dict[int, int] = {}       # per-source-OST grouped frees
+        alloc_total = 0                  # per-target-OST grouped allocs
+        with fs._lock:
+            for i, fid in enumerate(fids):
+                node = fs._nodes.get(fid)
+                if node is None:
+                    continue
+                stripes = node.entry.stripe_osts
+                per = node.data_len // max(1, len(stripes)) if stripes else 0
+                for idx in stripes:
+                    freed[idx] = freed.get(idx, 0) + per
+                alloc_total += node.data_len // max(1, len(new_stripes))
+                node.entry.stripe_osts = new_stripes
+                node.entry.ost_idx = new_stripes[0] if new_stripes else -1
+                node.entry.pool = target_pool
+                oks[i] = True
+                moved.append(fid)
+            for idx, nbytes in freed.items():
+                fs.osts[idx].free(nbytes)
+            for idx in new_stripes:
+                fs.osts[idx].alloc(alloc_total)
+        catalog.update_fields_batch(
+            moved, pool=target_pool,
+            ost_idx=new_stripes[0] if new_stripes else -1,
+            stripe_osts=new_stripes)
+        return oks
+
+    action.action_batch = action_batch
     return action
 
 
@@ -159,7 +219,9 @@ def checksum_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
     """Data-integrity check pass (paper SIII-D 'data integrity checks').
 
     The sim has no payload bytes; we verify metadata consistency instead:
-    catalog size/blocks must match FS truth.
+    catalog size/blocks must match FS truth. The batch form compares the
+    catalog's size column against FS stats in one pass and commits the
+    check/corrupt verdicts with one grouped catalog update per outcome.
     """
 
     def action(e: Entry, params: dict) -> bool:
@@ -170,6 +232,42 @@ def checksum_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
         catalog.update_fields(e.fid, status="checked" if ok else "corrupt")
         return ok
 
+    def _truth_sizes(fids: List[int]) -> List[Optional[int]]:
+        """FS-truth sizes for a chunk: one FS lock when the backend exposes
+        its node table (LustreSim), else a stat per fid."""
+        nodes = getattr(fs, "_nodes", None)
+        if nodes is not None and hasattr(fs, "_lock"):
+            with fs._lock:
+                return [nodes[f].entry.size if f in nodes else None
+                        for f in fids]
+        out: List[Optional[int]] = []
+        for f in fids:
+            truth = fs.stat(f)
+            out.append(None if truth is None else truth.size)
+        return out
+
+    def action_batch(batch: ColumnBatch, params: dict) -> List[bool]:
+        fids = batch.fids.tolist()
+        sizes = batch.size.tolist()
+        oks = [False] * len(fids)
+        checked: List[int] = []
+        corrupt: List[int] = []
+        for i, (fid, size, truth) in enumerate(
+                zip(fids, sizes, _truth_sizes(fids))):
+            if truth is None:
+                continue
+            if truth == size:
+                oks[i] = True
+                checked.append(fid)
+            else:
+                corrupt.append(fid)
+        if checked:
+            catalog.update_fields_batch(checked, status="checked")
+        if corrupt:
+            catalog.update_fields_batch(corrupt, status="corrupt")
+        return oks
+
+    action.action_batch = action_batch
     return action
 
 
@@ -180,10 +278,11 @@ def tag_status_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
     def action(e: Entry, params: dict) -> bool:
         return catalog.update_fields(e.fid, status=params.get("status", "seen"))
 
-    def action_batch(entries: List[Entry], params: dict) -> List[bool]:
+    def action_batch(batch: ColumnBatch, params: dict) -> List[bool]:
+        fids = batch.fids.tolist()
         updated = set(catalog.update_fields_batch(
-            [e.fid for e in entries], status=params.get("status", "seen")))
-        return [e.fid in updated for e in entries]
+            fids, status=params.get("status", "seen")))
+        return [fid in updated for fid in fids]
 
     action.action_batch = action_batch
     return action

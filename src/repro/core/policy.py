@@ -402,6 +402,24 @@ def all_of(exprs: Sequence[Expr]) -> Expr:
     return out
 
 
+def attribute_rules(rule_masks: Sequence[np.ndarray], n: int) -> np.ndarray:
+    """First-match-wins rule attribution: the single host-side authority.
+
+    ``rule_masks`` are the per-rule boolean masks in priority order (the
+    policy's combined criteria mask is NOT included). Returns (n,) int32:
+    index of the first matching rule per row, -1 where none match. The
+    engine's numpy path, the per-rule-launch kernel fallback, and the
+    fused on-device attribution (``attribute_ref`` / the batch kernel) all
+    implement exactly these semantics — differential-tested equal.
+    """
+    if not rule_masks:
+        return np.full(n, -1, dtype=np.int32)
+    stacked = np.stack(rule_masks)
+    idx = np.argmax(stacked, axis=0).astype(np.int32)   # first True wins
+    idx[~stacked.any(axis=0)] = -1
+    return idx
+
+
 def compile_programs(exprs: Sequence[Expr], strings, now: float
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Compile several criteria into one (R, P) instruction batch.

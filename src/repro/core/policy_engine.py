@@ -11,28 +11,42 @@ shipped plugin configurations; users register custom actions the same way
 when an OST exceeds ``high_wm``, the engine runs the policy restricted to
 entries striped on that OST until usage is projected below ``low_wm``.
 
-Execution is **batched and shard-parallel** (paper SII-B1: policy runs over
-billions of entries must never degenerate into per-entry scans):
+Execution is **columnar, batched and shard-parallel** (paper SII-B1: policy
+runs over billions of entries must never degenerate into per-entry scans).
+The hot path never constructs a per-entry Python object and never launches
+more than one kernel per shard batch:
 
 * **matching** goes through a pluggable evaluator backend — ``"numpy"``
   (vectorized column masks) or ``"policy_scan"`` (the Pallas TPU kernel,
-  falling back to its jitted oracle off-TPU) — and rule **attribution** is
-  vectorized too: one mask per rule, first-match-wins by rule order, no
-  per-entry Python re-evaluation;
+  falling back to its jitted oracle off-TPU). The kernel backend evaluates
+  the policy's whole (R, P) rule-program batch in a SINGLE launch that
+  writes the (R, N) mask tile with first-match-wins rule **attribution**
+  and per-rule size/blocks reductions fused on-device (the per-rule-launch
+  path survives inside ``match_programs`` as a fallback and differential
+  oracle);
 * **budgets** (target volume / max actions) are planned on batch
-  boundaries: the engine takes the minimal prefix of the sorted candidate
-  list whose projected volume meets the remaining target, executes it, and
-  only re-plans if failures left the target unmet. The actioned set is a
-  pure function of the catalog snapshot — deterministic across
-  ``n_threads``, with no overshoot races;
-* **execution** draws work in fid chunks from a deque; each chunk is
-  fetched with :meth:`Catalog.get_batch` (one lock acquisition per shard
-  group) and applied either through an action's optional batch interface
-  (``action.action_batch(entries, params) -> list[bool]``) or the scalar
-  callable.
+  boundaries over the match-time column snapshot — no entry objects: the
+  engine takes the minimal prefix of the sorted candidate list whose
+  projected volume meets the remaining target, executes it, and only
+  re-plans if failures left the target unmet. The actioned set is a pure
+  function of the catalog snapshot — deterministic across ``n_threads``,
+  with no overshoot races;
+* **execution** draws work in fid chunks from a deque; under the default
+  ``execution="columnar"`` each chunk is fetched as a
+  :class:`~repro.core.catalog.ColumnBatch` (one numeric column gather per
+  shard group, lazy string decode, zero ``Entry.__init__``) and applied
+  through the action's batch interface
+  (``action.action_batch(batch, params) -> list[bool]``). ``Entry``
+  objects are materialized ONLY for actions that declare
+  ``needs_entries = True`` (their ``action_batch`` then receives
+  ``List[Entry]``) and for scalar-only actions.
 
-The pre-batching scalar path is kept as ``execution="scalar"`` so
-``benchmarks/bench_policy.py`` can report the speedup honestly.
+Two slower paths are kept so ``benchmarks/bench_policy.py`` can report the
+speedups honestly: ``execution="batched"`` (the pre-columnar path — every
+chunk materializes Entries via :meth:`Catalog.get_batch`, then batch
+actions run off a ``ColumnBatch.from_entries`` shim so plugin code is
+byte-identical across modes) and ``execution="scalar"`` (per-entry
+catalog.get + Python rule re-evaluation).
 
 Incremental match (paper SII-C: changelogs replace re-scans)
 ------------------------------------------------------------
@@ -68,10 +82,20 @@ a scan is cheaper; (4) the caller forces ``matching="full"``. Every full
 run with no extra criteria rebuilds the cache in passing. ``RunReport.mode``
 records which path ran; correctness contract: all catalog mutations reach
 the engine through a subscribed delta source (or ``mark_dirty``).
+
+Incremental state **persists across restarts**: :meth:`save_incremental`
+serializes every valid per-policy match table + age-flip schedule (plus any
+undrained dirty fids) to a compressed npz beside the catalog's sqlite
+mirror, keyed by a signature of each policy's criteria;
+:meth:`load_incremental` restores the tables whose signatures still match,
+so a restarted engine resumes incrementally instead of paying a cold full
+scan. Pair it with a durable changelog subscriber name so deltas that
+arrive while the engine is down are re-delivered on restart.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from collections import deque
@@ -79,19 +103,23 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tupl
 
 import numpy as np
 
-from .catalog import Catalog
+from .catalog import Catalog, ColumnBatch
 from .changelog import ChangelogHub, ChangelogStream
 from .policy import (AGE_ATTRS, ALWAYS, Cmp, Expr, GLOB_ATTRS, PolicyError,
-                     all_of, any_of, iter_exprs, parse_expr)
+                     all_of, any_of, attribute_rules, iter_exprs, parse_expr)
 from .types import Entry, FsType
 
 Action = Callable[[Entry, dict], bool]   # returns True on success
 # Optional vectorized form, attached to the Action callable as the
-# ``action_batch`` attribute: (entries, shared params) -> per-entry success.
-BatchAction = Callable[[List[Entry], dict], List[bool]]
+# ``action_batch`` attribute: (batch, shared params) -> per-entry success.
+# ``batch`` is a ColumnBatch unless the callable also sets
+# ``needs_entries = True``, in which case the engine materializes and
+# passes List[Entry] instead.
+BatchAction = Callable[[ColumnBatch, dict], List[bool]]
 
 EVALUATORS = ("numpy", "policy_scan")
 MATCHING_MODES = ("auto", "full", "incremental")
+EXECUTION_MODES = ("columnar", "batched", "scalar")
 
 _ENGINE_SEQ = [0]                 # per-process engine subscriber counter
 _ENGINE_SEQ_LOCK = threading.Lock()
@@ -151,6 +179,7 @@ class RunReport:
     rounds: int = 0          # budget re-planning rounds executed
     mode: str = "full"       # matching path: "full" scan or "incremental"
     reval: int = 0           # rows (re-)evaluated to produce the match set
+    execution: str = "columnar"   # execution path that applied the actions
 
 
 class UsageWatermarkTrigger:
@@ -416,6 +445,34 @@ class _IncrementalState:
         fids, cols = self.matched.live()
         return fids, cols["size"], cols["sort"], cols["rule"]
 
+    # -- persistence (engine restart resumes incrementally) -------------------
+    def export(self, sig: str) -> Optional[Dict[str, np.ndarray]]:
+        """Snapshot the match table + flip schedule (+ undrained dirty fids)
+        as flat arrays; None when the state is cold (nothing to resume)."""
+        with self.lock:
+            if not self.valid:
+                return None
+            fids, cols = self.matched.live()
+            ffids, fcols = self.flips.live()
+            return {
+                "sig": np.array(sig),
+                "fids": fids, "size": cols["size"], "sort": cols["sort"],
+                "rule": cols["rule"],
+                "flip_fids": ffids, "flip": fcols["flip"],
+                "touched": np.array(sorted(self.touched), dtype=np.int64),
+            }
+
+    def restore(self, data: Dict[str, np.ndarray]) -> None:
+        """Load a previously exported snapshot and mark the state valid."""
+        with self.lock:
+            self.matched.bulk_load(
+                data["fids"].astype(np.int64), size=data["size"],
+                sort=data["sort"], rule=data["rule"])
+            self.flips.bulk_load(data["flip_fids"].astype(np.int64),
+                                 flip=data["flip"])
+            self.touched = set(data["touched"].tolist())
+            self.valid = True
+
 
 class PolicyEngine:
     """Evaluates policies over the catalog and applies actions."""
@@ -528,6 +585,82 @@ class PolicyEngine:
         for state in states:
             state.invalidate()
 
+    # -- incremental state persistence --------------------------------------------
+    @staticmethod
+    def _signature(policy: PolicyDefinition) -> str:
+        """Criteria signature guarding resume: a snapshot is only restored
+        into a policy whose scope/rules/sort have not changed since save."""
+        return repr((policy.scope,
+                     [(r.name, r.condition, sorted(r.params.items()))
+                      for r in policy.rules],
+                     policy.sort_by, policy.sort_desc))
+
+    def _inc_state_path(self, path: Optional[str]) -> str:
+        if path is not None:
+            return path
+        if self.catalog.db_path:
+            return self.catalog.db_path + ".incstate.npz"
+        raise PolicyError("no incremental-state path: pass one explicitly "
+                          "or attach a sqlite mirror to the catalog")
+
+    def save_incremental(self, path: Optional[str] = None) -> str:
+        """Serialize every valid per-policy match table + age-flip schedule
+        (and undrained dirty fids) beside the sqlite mirror.
+
+        Default path is ``<catalog.db_path>.incstate.npz``. The write is
+        atomic (tmp + rename). Call it quiescent — between runs, after the
+        changelog pipeline has drained — and pair it with a *durable*
+        changelog subscriber so deltas arriving while the engine is down
+        are re-delivered after :meth:`load_incremental`.
+        """
+        path = self._inc_state_path(path)
+        payload: Dict[str, np.ndarray] = {}
+        for name, state in list(self._inc.items()):
+            policy = self.policies.get(name)
+            if policy is None:
+                continue
+            data = state.export(self._signature(policy))
+            if data is None:
+                continue
+            for key, arr in data.items():
+                payload[f"{name}::{key}"] = arr
+        tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, **payload)
+        os.replace(tmp, path)
+        return path
+
+    def load_incremental(self, path: Optional[str] = None) -> List[str]:
+        """Restore saved match state; returns the policies resumed.
+
+        A policy resumes only when it is registered and its criteria
+        signature matches the snapshot (a changed definition falls back to
+        the usual cold full scan). Missing file -> no-op, [].
+        """
+        path = self._inc_state_path(path)
+        if not os.path.exists(path):
+            return []
+        by_policy: Dict[str, Dict[str, np.ndarray]] = {}
+        with np.load(path, allow_pickle=False) as z:
+            for key in z.files:
+                name, field = key.rsplit("::", 1)
+                by_policy.setdefault(name, {})[field] = z[key]
+        self.enable_incremental()
+        resumed = []
+        for name, data in by_policy.items():
+            policy = self.policies.get(name)
+            if policy is None or "sig" not in data:
+                continue
+            if str(data["sig"]) != self._signature(policy):
+                continue
+            state = self._ensure_state(name)
+            if state is None:
+                continue
+            state.restore(data)
+            resumed.append(name)
+        return resumed
+
     def _on_deltas(self, changed: List[int], removed: List[int]) -> None:
         # called from pipeline worker threads: snapshot against concurrent
         # register() mutating the state dict
@@ -576,8 +709,10 @@ class PolicyEngine:
 
         Returns (mask, rule_idx, cols, evaluator_used). ``rule_idx[i]`` is
         the index of the first (highest-priority) rule matching row i, or -1
-        when the policy has no rules. The ``policy_scan`` backend silently
-        falls back to numpy for host-only (glob) predicates.
+        when the policy has no rules. The ``policy_scan`` backend evaluates
+        the whole program batch in a single kernel launch with attribution
+        fused on-device; it silently falls back to numpy for host-only
+        (glob) predicates.
         """
         if evaluator not in EVALUATORS:
             raise PolicyError(f"unknown evaluator {evaluator!r}")
@@ -589,10 +724,9 @@ class PolicyEngine:
                 full = all_of([policy.scope]
                               + ([any_of(rule_exprs)] if rule_exprs else [])
                               + ([extra] if extra else []))
-                masks, _agg = match_programs(cols, [full] + rule_exprs,
-                                             self.catalog.strings, now)
-                return (masks[0], self._attribute(masks[0], masks[1:]),
-                        cols, "policy_scan")
+                masks, _agg, rule_idx = match_programs(
+                    cols, [full] + rule_exprs, self.catalog.strings, now)
+                return masks[0], rule_idx, cols, "policy_scan"
             except PolicyError:
                 pass          # glob predicates run on the host
         mask, rule_idx = self._eval_cols(policy, cols, extra, now)
@@ -605,15 +739,18 @@ class PolicyEngine:
                                       np.ndarray, int]:
         """Re-evaluate only dirty/time-due rows, plan from the cached table.
 
-        Returns (fids, sizes, sort_keys, rule_idx, n_revaluated)."""
+        Re-evaluated rows flow as a :class:`ColumnBatch` (no Entry
+        materialization). Returns (fids, sizes, sort_keys, rule_idx,
+        n_revaluated)."""
         reval = sorted(state.drain_touched() | state.due_flips(now))
         if reval:
             try:
-                cols, present = self.catalog.gather_rows(
+                batch = self.catalog.column_batch(
                     reval, with_strings=state.needs_strings)
-                mask, rule_idx = self._eval_cols(policy, cols, None, now)
-                state.apply(np.asarray(reval, dtype=np.int64), cols, present,
-                            mask, rule_idx, now)
+                mask, rule_idx = self._eval_cols(policy, batch.cols, None,
+                                                 now)
+                state.apply(np.asarray(reval, dtype=np.int64), batch.cols,
+                            batch.present, mask, rule_idx, now)
             except Exception:
                 # the drained dirty fids may be partially merged: force a
                 # full rebuild rather than silently losing them
@@ -621,9 +758,10 @@ class PolicyEngine:
                 raise
         fids, sizes, sort_keys, rule_idx = state.plan_arrays()
         if extra is not None and fids.size:
-            ecols, epresent = self.catalog.gather_rows(
+            ebatch = self.catalog.column_batch(
                 fids.tolist(), with_strings=_uses_globs(extra))
-            emask = extra.mask(ecols, self.catalog.strings, now) & epresent
+            emask = extra.mask(ebatch.cols, self.catalog.strings, now) \
+                & ebatch.present
             fids, sizes = fids[emask], sizes[emask]
             sort_keys, rule_idx = sort_keys[emask], rule_idx[emask]
         return fids, sizes, sort_keys, rule_idx, len(reval)
@@ -662,13 +800,9 @@ class PolicyEngine:
     @staticmethod
     def _attribute(mask: np.ndarray, rule_masks: List[np.ndarray]
                    ) -> np.ndarray:
-        """First-match-wins rule index per row (np.select-style priority)."""
-        if not rule_masks:
-            return np.full(mask.shape, -1, dtype=np.int32)
-        stacked = np.stack(rule_masks)
-        idx = np.argmax(stacked, axis=0).astype(np.int32)   # first True wins
-        idx[~stacked.any(axis=0)] = -1
-        return idx
+        """First-match-wins rule index per row (shared semantics authority:
+        :func:`core.policy.attribute_rules`)."""
+        return attribute_rules(rule_masks, int(mask.shape[0]))
 
     def _rule_params(self, policy: PolicyDefinition, e: Entry, now: float) -> dict:
         for rule in policy.rules:
@@ -680,18 +814,23 @@ class PolicyEngine:
     def run(self, policy_name: str, extra_criteria: Optional[Expr] = None,
             target_volume: int = 0, trigger: str = "manual",
             evaluator: Optional[str] = None,
-            execution: str = "batched",
+            execution: str = "columnar",
             matching: str = "auto") -> RunReport:
         """One policy run: match -> sort -> apply until targets met.
 
         ``evaluator`` overrides the policy's matching backend for this run;
-        ``execution="scalar"`` keeps the legacy per-entry path (benchmarks /
-        bisection only); ``matching`` picks the planner: ``"full"`` scans
+        ``execution`` picks the apply path: ``"columnar"`` (default) flows
+        ColumnBatch chunks straight to batch actions with zero Entry
+        materialization, ``"batched"`` keeps the Entry-materializing
+        chunked path and ``"scalar"`` the legacy per-entry path (benchmarks
+        / bisection only); ``matching`` picks the planner: ``"full"`` scans
         the catalog columns, ``"incremental"`` re-evaluates only dirty/due
         rows against the cached match table (requires a delta source and a
         prior full run), ``"auto"`` (default) uses the incremental path
         whenever it is valid.
         """
+        if execution not in EXECUTION_MODES:
+            raise PolicyError(f"unknown execution mode {execution!r}")
         policy = self.policies[policy_name]
         now = self.clock()
         t0 = time.perf_counter()
@@ -727,7 +866,7 @@ class PolicyEngine:
                 raise
         report = RunReport(policy=policy_name, matched=int(fids.size),
                            trigger=trigger, evaluator=used_eval,
-                           mode=mode, reval=reval,
+                           mode=mode, reval=reval, execution=execution,
                            matched_volume=int(sizes.sum()) if fids.size else 0)
 
         executed = 0
@@ -744,7 +883,8 @@ class PolicyEngine:
                                             budget_volume, budget_count)
             else:
                 executed = self._run_batched(policy, plan, now, report,
-                                             budget_volume, budget_count)
+                                             budget_volume, budget_count,
+                                             execution)
         if executed and policy.mutates and not policy.dry_run:
             # actions may mutate the catalog directly (purge/archive
             # plugins): re-observe actioned entries on the next run
@@ -756,10 +896,10 @@ class PolicyEngine:
         self.history.append(report)
         return report
 
-    # -- batched execution --------------------------------------------------------
+    # -- batched / columnar execution ---------------------------------------------
     def _run_batched(self, policy: PolicyDefinition, plan: _Plan, now: float,
                      report: RunReport, budget_volume: int,
-                     budget_count: int) -> int:
+                     budget_count: int, execution: str = "columnar") -> int:
         """Budgeted rounds of chunk-parallel execution.
 
         Each round takes the minimal prefix of the remaining sorted work
@@ -784,7 +924,8 @@ class PolicyEngine:
                 if remaining_n <= 0:
                     break
                 take = min(take, remaining_n)
-            self._execute_round(policy, plan, pos, pos + take, now, report)
+            self._execute_round(policy, plan, pos, pos + take, now, report,
+                                execution)
             report.rounds += 1
             pos += take
             if not budget_volume and not budget_count:
@@ -792,8 +933,8 @@ class PolicyEngine:
         return pos
 
     def _execute_round(self, policy: PolicyDefinition, plan: _Plan,
-                       lo: int, hi: int, now: float,
-                       report: RunReport) -> None:
+                       lo: int, hi: int, now: float, report: RunReport,
+                       execution: str = "columnar") -> None:
         """Execute plan[lo:hi] in chunks drawn from a deque by N workers."""
         chunk = max(1, policy.batch_size)
         work: "deque[slice]" = deque(slice(i, min(i + chunk, hi))
@@ -805,7 +946,7 @@ class PolicyEngine:
                     sl = work.popleft()    # atomic; IndexError ends worker
                 except IndexError:
                     return
-                self._apply_chunk(policy, plan, sl, now, report)
+                self._apply_chunk(policy, plan, sl, now, report, execution)
 
         n_threads = min(max(1, policy.n_threads), len(work))
         if n_threads <= 1:
@@ -819,7 +960,21 @@ class PolicyEngine:
             t.join()
 
     def _apply_chunk(self, policy: PolicyDefinition, plan: _Plan,
-                     sl: slice, now: float, report: RunReport) -> None:
+                     sl: slice, now: float, report: RunReport,
+                     execution: str = "columnar") -> None:
+        """Apply one chunk of planned work.
+
+        ``execution="columnar"`` (the hot path) fetches the chunk as a
+        :class:`ColumnBatch` — one numeric gather per shard group, zero
+        ``Entry.__init__`` — and hands per-rule sub-batches to the action's
+        batch interface. Entries are materialized only when the action
+        declares ``needs_entries = True`` or exposes no batch interface.
+        ``execution="batched"`` is the legacy baseline: every chunk
+        materializes Entries first, then batch actions run off a
+        ``ColumnBatch.from_entries`` shim (identical plugin code, so the
+        two paths action identical fid sequences — the materialization is
+        exactly the cost being measured).
+        """
         fids = plan.fids[sl]
         sizes = plan.sizes[sl]
         ridx = plan.rule_idx[sl]
@@ -828,11 +983,22 @@ class PolicyEngine:
                 report.succeeded += len(fids)
                 report.volume += int(sizes.sum())
             return
-        entries = self.catalog.get_batch(fids.tolist())
-        ok = np.zeros(len(fids), dtype=bool)
-        skipped = np.array([e is None for e in entries])
         batch_fn: Optional[BatchAction] = getattr(policy.action,
                                                   "action_batch", None)
+        needs_entries = bool(getattr(policy.action, "needs_entries", False))
+        entries: Optional[List[Optional[Entry]]] = None
+        batch: Optional[ColumnBatch] = None
+        if batch_fn is None or needs_entries or execution == "batched":
+            entries = self.catalog.get_batch(fids.tolist())
+            skipped = np.array([e is None for e in entries])
+            if batch_fn is not None and not needs_entries:
+                batch = ColumnBatch.from_entries(entries,
+                                                 self.catalog.strings,
+                                                 self.catalog)
+        else:
+            batch = self.catalog.column_batch(fids.tolist())
+            skipped = ~batch.present
+        ok = np.zeros(len(fids), dtype=bool)
         if batch_fn is not None:
             # batch interface: one call per rule group (shared params)
             for ri in np.unique(ridx):
@@ -840,11 +1006,12 @@ class PolicyEngine:
                 if not group.size:
                     continue
                 params = policy.rules[ri].params if ri >= 0 else {}
-                group_entries = [entries[i] for i in group]
+                payload = ([entries[i] for i in group] if needs_entries
+                           else batch.take(group))
                 try:
-                    results = batch_fn(group_entries, params)
+                    results = batch_fn(payload, params)
                 except Exception:
-                    results = [False] * len(group_entries)
+                    results = [False] * int(group.size)
                 ok[group] = results
         else:
             # scalar actions keep strict plan (sort) order within the chunk

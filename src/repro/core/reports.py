@@ -18,12 +18,61 @@ from .stats import StatsAggregator
 from .types import FsType, format_size
 
 
+class _PathIndex:
+    """Sorted path column + subtree prefix sums for O(log n) ``du``.
+
+    Built once per catalog version: every path under ``prefix/`` is
+    contiguous in the sorted order — bounded below by ``prefix + "/"`` and
+    above by ``prefix + "0"`` ('0' is the successor of '/') — so a subtree
+    aggregate is two binary searches into precomputed prefix sums instead
+    of a per-path scan.
+    """
+
+    def __init__(self, cols) -> None:
+        paths = np.asarray(cols["_paths"])
+        order = np.argsort(paths, kind="stable")
+        self.spaths = paths[order]
+        is_file = (cols["type"][order] == int(FsType.FILE))
+        fsize = np.where(is_file, cols["size"][order], 0)
+        fblocks = np.where(is_file, cols["blocks"][order], 0)
+        # leading 0 so any [lo, hi) range sum is csum[hi] - csum[lo]
+        self.csize = np.concatenate([[0], np.cumsum(fsize)])
+        self.cblocks = np.concatenate([[0], np.cumsum(fblocks)])
+        self.cfiles = np.concatenate([[0], np.cumsum(is_file.astype(np.int64))])
+
+    def _range(self, lo_key: str, hi_key: str, side_hi: str = "left") -> dict:
+        lo = int(np.searchsorted(self.spaths, lo_key, side="left"))
+        hi = int(np.searchsorted(self.spaths, hi_key, side=side_hi))
+        return {
+            "count": hi - lo,
+            "files": int(self.cfiles[hi] - self.cfiles[lo]),
+            "volume": int(self.csize[hi] - self.csize[lo]),
+            "spc_used": int(self.cblocks[hi] - self.cblocks[lo]),
+        }
+
+    def du(self, path_prefix: str) -> dict:
+        prefix = path_prefix.rstrip("/")
+        sub = self._range(prefix + "/", prefix + "0")
+        root = self._range(prefix, prefix, side_hi="right")
+        return {k: sub[k] + root[k] for k in sub}
+
+
 class Reports:
     def __init__(self, catalog: Catalog, stats: Optional[StatsAggregator] = None,
                  clock=time.time) -> None:
         self.catalog = catalog
         self.stats = stats
         self.clock = clock
+        self._pindex: Optional[_PathIndex] = None
+        self._pindex_version = -1
+
+    def _path_index(self) -> _PathIndex:
+        """(Re)build the sorted path index when the catalog changed."""
+        version = self.catalog.version
+        if self._pindex is None or self._pindex_version != version:
+            self._pindex = _PathIndex(self.catalog.arrays())
+            self._pindex_version = version
+        return self._pindex
 
     # -- rbh-report ---------------------------------------------------------------
     def report_user(self, user: str) -> List[dict]:
@@ -55,20 +104,20 @@ class Reports:
 
     # -- rbh-du --------------------------------------------------------------------
     def du(self, path_prefix: str) -> dict:
-        """DB-backed `du -s`: aggregate a subtree with one vector pass."""
-        cols = self.catalog.arrays()
-        prefix = path_prefix.rstrip("/")
-        paths = cols["_paths"]
-        mask = np.fromiter(
-            (p == prefix or p.startswith(prefix + "/") for p in paths),
-            dtype=bool, count=len(paths))
-        file_mask = mask & (cols["type"] == int(FsType.FILE))
-        return {
-            "count": int(mask.sum()),
-            "files": int(file_mask.sum()),
-            "volume": int(cols["size"][file_mask].sum()),
-            "spc_used": int(cols["blocks"][file_mask].sum()),
-        }
+        """DB-backed `du -s`: subtree aggregate via sorted-prefix-range.
+
+        The old implementation ran a per-path Python generator
+        (``np.fromiter`` over ``startswith``) on every call; this one
+        answers from a sorted path index + prefix sums cached per
+        :attr:`Catalog.version` — two binary searches per query, rebuild
+        only after catalog churn (see ``benchmarks/bench_find_du.py``).
+        """
+        return self._path_index().du(path_prefix)
+
+    def du_many(self, path_prefixes: List[str]) -> List[dict]:
+        """Batched `du -s`: one index build amortized over many subtrees."""
+        index = self._path_index()
+        return [index.du(p) for p in path_prefixes]
 
     # -- top-N listings (paper SII-B3) ----------------------------------------------
     def top_files(self, by: str = "size", k: int = 10,

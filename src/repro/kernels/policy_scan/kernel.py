@@ -16,6 +16,15 @@ grid step — standard Pallas reduction pattern).
 The program (ops/colidx/operands) rides in SMEM-like small blocks; P is
 static (padded with NOPs), so the instruction loop fully unrolls into
 vector selects — no scalar branching on TPU.
+
+Two launch shapes share the evaluation loop:
+
+* :func:`policy_scan_pallas` — one program, (N,) mask + fused aggregates;
+* :func:`policy_scan_batch_pallas` — the full (R, P) program batch of a
+  policy (combined criteria + per-rule conditions) in a SINGLE launch,
+  writing the (R, N) mask tile, the fused first-match-wins rule
+  attribution, and per-program size/blocks reductions. One grid walk over
+  the entry table replaces R launches plus two host-side passes.
 """
 from __future__ import annotations
 
@@ -35,21 +44,17 @@ _EDGE_VALS = (0.0, 1.0, 32.0, float(1 << 10), float(32 << 10),
               float(32 << 30), float(1 << 40))
 
 
-def _policy_scan_kernel(ops_ref, colidx_ref, operands_ref, cols_ref,
-                        mask_ref, agg_ref, *, n_instr: int, max_stack: int,
-                        size_col: int, blocks_col: int, valid_col: int):
-    step = pl.program_id(0)
+def _eval_program_tile(cols, read_instr, n_instr: int, max_stack: int):
+    """Unrolled postfix-program evaluation on a (n_cols, tile) block.
 
-    cols = cols_ref[...]                       # (n_cols, tile) f32 in VMEM
+    ``read_instr(i)`` returns the (op, col, val) scalars of instruction i —
+    indirection so the single- and batch-program kernels share the loop.
+    """
     tile = cols.shape[1]
-
-    # --- unrolled postfix-program evaluation on the tile ------------------
     stack = jnp.zeros((max_stack, tile), jnp.float32)
     sp = jnp.zeros((), jnp.int32)
     for i in range(n_instr):                   # static unroll
-        op = ops_ref[i]
-        col = colidx_ref[i]
-        val = operands_ref[i]
+        op, col, val = read_instr(i)
         vec = jax.lax.dynamic_index_in_dim(cols, col, axis=0,
                                            keepdims=False)
         cmps = jnp.stack([
@@ -78,9 +83,21 @@ def _policy_scan_kernel(ops_ref, colidx_ref, operands_ref, cols_ref,
         sp = jnp.where(is_nop, sp,
                        jnp.where(is_cmp, sp + 1,
                                  jnp.where(is_not, sp, sp - 1)))
-
-    mask = jax.lax.dynamic_index_in_dim(stack, jnp.maximum(sp - 1, 0),
+    return jax.lax.dynamic_index_in_dim(stack, jnp.maximum(sp - 1, 0),
                                         axis=0, keepdims=False)
+
+
+def _policy_scan_kernel(ops_ref, colidx_ref, operands_ref, cols_ref,
+                        mask_ref, agg_ref, *, n_instr: int, max_stack: int,
+                        size_col: int, blocks_col: int, valid_col: int):
+    step = pl.program_id(0)
+
+    cols = cols_ref[...]                       # (n_cols, tile) f32 in VMEM
+    tile = cols.shape[1]
+
+    mask = _eval_program_tile(
+        cols, lambda i: (ops_ref[i], colidx_ref[i], operands_ref[i]),
+        n_instr, max_stack)
     if valid_col >= 0:
         mask = mask * cols[valid_col]
     mask_ref[...] = mask[None, :]
@@ -147,3 +164,116 @@ def policy_scan_pallas(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
         interpret=interpret,
     )(ops, colidx, operands, cols)
     return mask[0], agg[0]
+
+
+def _policy_scan_batch_kernel(ops_ref, colidx_ref, operands_ref, cols_ref,
+                              masks_ref, rule_ref, agg_ref, *, n_progs: int,
+                              n_instr: int, max_stack: int, size_col: int,
+                              blocks_col: int, valid_col: int):
+    """Single-launch multi-program scan: the whole (R, P) program batch over
+    one column tile, writing an (R, tile) mask block, the fused
+    first-match-wins rule attribution, and per-program aggregates.
+
+    Program 0 is the policy's combined criteria; programs 1..R-1 are the
+    per-rule conditions in priority order. Both loops (programs × unrolled
+    instructions) are static, so the whole matcher lowers to straight-line
+    vector selects — one grid walk over the entry table replaces R kernel
+    launches and the host-side attribution pass.
+    """
+    step = pl.program_id(0)
+    cols = cols_ref[...]                       # (n_cols, tile) f32 in VMEM
+    tile = cols.shape[1]
+
+    rows = []
+    for r in range(n_progs):                   # static unroll over programs
+        mask = _eval_program_tile(
+            cols, lambda i, r=r: (ops_ref[r, i], colidx_ref[r, i],
+                                  operands_ref[r, i]),
+            n_instr, max_stack)
+        if valid_col >= 0:
+            mask = mask * cols[valid_col]
+        rows.append(mask)
+    masks = jnp.stack(rows)                    # (R, tile)
+    masks_ref[...] = masks
+
+    # --- fused first-match-wins attribution (programs 1..R-1) -------------
+    if n_progs > 1:
+        rules = masks[1:] > 0.5                # (R-1, tile)
+        first = jnp.argmax(rules, axis=0).astype(jnp.int32)
+        att = jnp.where(jnp.any(rules, axis=0), first, -1)
+    else:
+        att = jnp.full((tile,), -1, jnp.int32)
+    rule_ref[...] = att[None, :]
+
+    # --- fused per-program aggregation ------------------------------------
+    size = cols[size_col]
+    spc = cols[blocks_col]
+    count = jnp.sum(masks, axis=1)                         # (R,)
+    volume = jnp.sum(masks * size[None, :], axis=1)        # (R,)
+    spc_used = jnp.sum(masks * spc[None, :], axis=1)       # (R,)
+    bucket = sum((size >= e).astype(jnp.int32) for e in _EDGE_VALS) - 1
+    bucket = jnp.clip(bucket, 0, 9)
+    iota10 = jax.lax.broadcasted_iota(jnp.int32, (10, tile), 0)
+    onehot = (bucket[None, :] == iota10).astype(jnp.float32)   # (10, tile)
+    hist = jax.lax.dot_general(masks, onehot,
+                               (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (R, 10)
+    any_match = jnp.max(masks, axis=1)                     # (R,)
+    agg = jnp.concatenate([count[:, None], volume[:, None],
+                           spc_used[:, None], hist, any_match[:, None]],
+                          axis=1)                          # (R, N_AGG)
+
+    @pl.when(step == 0)
+    def _init():
+        agg_ref[...] = jnp.zeros_like(agg_ref)
+
+    prev = agg_ref[...]
+    acc = prev + agg
+    # any_match is a max-, not sum-, accumulator
+    agg_ref[...] = acc.at[:, N_AGG - 1].set(
+        jnp.maximum(prev[:, N_AGG - 1], any_match))
+
+
+def policy_scan_batch_pallas(cols: jax.Array, ops: jax.Array,
+                             colidx: jax.Array, operands: jax.Array, *,
+                             size_col: int = 0, blocks_col: int = 1,
+                             valid_col: int = -1, tile: int = 8 * LANE,
+                             max_stack: int = 8, interpret: bool = True
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """cols: (n_cols, N) f32, N % tile == 0; ops/colidx/operands: (R, P).
+
+    Returns (masks (R, N) f32, rule_idx (N,) i32, agg (R, N_AGG) f32) from a
+    single kernel launch.
+    """
+    n_cols, n = cols.shape
+    assert n % tile == 0, f"N={n} must be padded to tile={tile}"
+    n_progs, n_instr = int(ops.shape[0]), int(ops.shape[1])
+    grid = (n // tile,)
+
+    kernel = functools.partial(
+        _policy_scan_batch_kernel, n_progs=n_progs, n_instr=n_instr,
+        max_stack=max_stack, size_col=size_col, blocks_col=blocks_col,
+        valid_col=valid_col)
+
+    masks, rule, agg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_progs, n_instr), lambda i: (0, 0)),   # ops
+            pl.BlockSpec((n_progs, n_instr), lambda i: (0, 0)),   # colidx
+            pl.BlockSpec((n_progs, n_instr), lambda i: (0, 0)),   # operands
+            pl.BlockSpec((n_cols, tile), lambda i: (0, i)),       # columns
+        ],
+        out_specs=[
+            pl.BlockSpec((n_progs, tile), lambda i: (0, i)),      # masks
+            pl.BlockSpec((1, tile), lambda i: (0, i)),            # rule idx
+            pl.BlockSpec((n_progs, N_AGG), lambda i: (0, 0)),     # aggregates
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_progs, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((n_progs, N_AGG), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ops, colidx, operands, cols)
+    return masks, rule[0], agg

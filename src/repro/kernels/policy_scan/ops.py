@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import LANE, policy_scan_pallas
-from .ref import N_AGG, policy_scan_multi_ref, policy_scan_ref
+from .kernel import LANE, policy_scan_batch_pallas, policy_scan_pallas
+from .ref import (N_AGG, policy_scan_batch_ref, policy_scan_multi_ref,
+                  policy_scan_ref)
 
 
 def _on_tpu() -> bool:
@@ -29,6 +30,8 @@ def policy_scan(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
     via a validity column the wrapper appends when ``valid_col`` < 0).
     """
     n_cols, n = cols.shape
+    if n == 0:            # zero-row table: nothing to scan (grid would be 0)
+        return jnp.zeros((0,), jnp.float32), jnp.zeros((N_AGG,), jnp.float32)
     pad = (-n) % tile
     if valid_col < 0:
         valid = jnp.ones((1, n), jnp.float32)
@@ -64,6 +67,45 @@ def policy_scan_multi(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
                                  size_col=size_col, blocks_col=blocks_col)
 
 
+@partial(jax.jit, static_argnames=("size_col", "blocks_col", "valid_col",
+                                   "use_kernel", "tile"))
+def policy_scan_batch(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
+                      operands: jax.Array, size_col: int = 0,
+                      blocks_col: int = 1, valid_col: int = -1,
+                      use_kernel: bool = True, tile: int = 8 * LANE
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-launch batch matcher over a columnar table.
+
+    cols: (n_cols, N) f32; ops/colidx/operands: (R, P) OP_NOP-padded
+    programs (program 0 = combined criteria, 1..R-1 = per-rule conditions).
+    Returns (masks (R, N) f32, rule_idx (N,) i32, agg (R, N_AGG) f32): all
+    program masks, fused first-match-wins attribution, and per-program
+    size/blocks reductions — one kernel launch instead of R.
+    """
+    n_cols, n = cols.shape
+    if n == 0:            # zero-row table: nothing to scan (grid would be 0)
+        r = ops.shape[0]
+        return (jnp.zeros((r, 0), jnp.float32), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((r, N_AGG), jnp.float32))
+    pad = (-n) % tile
+    if valid_col < 0:
+        valid = jnp.ones((1, n), jnp.float32)
+        cols = jnp.concatenate([cols, valid], axis=0)
+        valid_col = n_cols
+        n_cols += 1
+    if pad:
+        cols = jnp.pad(cols, ((0, 0), (0, pad)))
+    args = (cols, ops.astype(jnp.int32), colidx.astype(jnp.int32),
+            operands.astype(jnp.float32))
+    kw = dict(size_col=size_col, blocks_col=blocks_col, valid_col=valid_col)
+    if use_kernel:
+        masks, rule, agg = policy_scan_batch_pallas(
+            *args, tile=tile, interpret=not _on_tpu(), **kw)
+    else:
+        masks, rule, agg = policy_scan_batch_ref(*args, **kw)
+    return masks[:, :n], rule[:n], agg
+
+
 def column_stack(arrays) -> jax.Array:
     """Stack a Catalog.arrays() dict into the (n_cols, N) f32 kernel layout."""
     from ...core.policy import KERNEL_COLUMNS
@@ -71,17 +113,50 @@ def column_stack(arrays) -> jax.Array:
                       for c in KERNEL_COLUMNS], axis=0)
 
 
+def _attribute_np(masks: List[np.ndarray]) -> np.ndarray:
+    """Host-side first-match-wins attribution (per-rule-launch fallback):
+    ``masks[0]`` is the combined criteria (excluded), ``masks[1:]`` the
+    rules. Delegates to the single semantics authority in core.policy."""
+    from ...core.policy import attribute_rules
+    n = masks[0].shape[0] if masks else 0
+    return attribute_rules(masks[1:], n)
+
+
+def _agg_dict(agg_np: np.ndarray, per_rule: Optional[np.ndarray] = None
+              ) -> dict:
+    out = {
+        "count": float(agg_np[0]), "volume": float(agg_np[1]),
+        "spc_used": float(agg_np[2]),
+        "size_profile": agg_np[3:13].tolist(),
+        "any_match": bool(agg_np[13] > 0.5),
+    }
+    if per_rule is not None and per_rule.shape[0] > 1:
+        out["rule_count"] = per_rule[1:, 0].tolist()
+        out["rule_volume"] = per_rule[1:, 1].tolist()
+        out["rule_spc_used"] = per_rule[1:, 2].tolist()
+    return out
+
+
 def match_programs(arrays, exprs, strings, now: float,
-                   use_kernel: Optional[bool] = None
-                   ) -> Tuple[List[np.ndarray], dict]:
+                   use_kernel: Optional[bool] = None,
+                   single_launch: Optional[bool] = None
+                   ) -> Tuple[List[np.ndarray], dict, np.ndarray]:
     """Evaluate several core.policy Exprs over catalog columns at once.
 
     ``exprs[0]`` is the combined match criteria (its fused aggregates are
-    returned); further exprs are typically per-rule conditions for
-    vectorized attribution. ``use_kernel=None`` selects the Pallas kernel
-    on TPU and the jitted oracle everywhere else. Raises PolicyError if any
-    expr contains host-only (glob) predicates — callers fall back to the
-    numpy mask path.
+    returned); further exprs are per-rule conditions in priority order.
+    Returns ``(masks, agg, rule_idx)``: one boolean mask per program, the
+    aggregate dict of program 0 (plus ``rule_count``/``rule_volume``/
+    ``rule_spc_used`` per-rule reductions when rules are present), and the
+    (N,) int32 first-match-wins rule attribution (-1 = no rule).
+
+    ``use_kernel=None`` selects the Pallas kernel on TPU and the jitted
+    oracle everywhere else. ``single_launch`` (default True) evaluates the
+    whole (R, P) program batch in ONE launch with attribution and per-rule
+    reductions fused on-device; ``single_launch=False`` keeps the legacy
+    one-launch-per-program path as a fallback and differential oracle.
+    Raises PolicyError if any expr contains host-only (glob) predicates —
+    callers fall back to the numpy mask path.
     """
     from ...core.policy import KERNEL_COLUMNS, compile_programs
     ops, colidx, operands = compile_programs(exprs, strings, now)
@@ -90,33 +165,31 @@ def match_programs(arrays, exprs, strings, now: float,
     blocks_col = KERNEL_COLUMNS.index("blocks")
     if use_kernel is None:
         use_kernel = _on_tpu()
-    if use_kernel:
-        # The Pallas kernel evaluates one program per launch; the combined
-        # criteria (program 0) fuses mask + aggregation in a single HBM pass,
-        # rule programs reuse the resident column stack.
-        masks, agg = [], None
-        for r in range(ops.shape[0]):
-            m, a = policy_scan(kcols, jnp.asarray(ops[r]),
-                               jnp.asarray(colidx[r]),
-                               jnp.asarray(operands[r]), size_col=size_col,
-                               blocks_col=blocks_col, use_kernel=True)
-            if r == 0:
-                agg = a
-            masks.append(np.asarray(m) > 0.5)
-    else:
-        m, agg = policy_scan_multi(kcols, jnp.asarray(ops),
-                                   jnp.asarray(colidx),
-                                   jnp.asarray(operands), size_col=size_col,
-                                   blocks_col=blocks_col)
+    if single_launch is None:
+        single_launch = True
+    if single_launch:
+        m, rule, agg = policy_scan_batch(
+            kcols, jnp.asarray(ops), jnp.asarray(colidx),
+            jnp.asarray(operands), size_col=size_col, blocks_col=blocks_col,
+            use_kernel=use_kernel)
         m = np.asarray(m) > 0.5
         masks = [m[r] for r in range(m.shape[0])]
-    agg_np = np.asarray(agg)
-    return masks, {
-        "count": float(agg_np[0]), "volume": float(agg_np[1]),
-        "spc_used": float(agg_np[2]),
-        "size_profile": agg_np[3:13].tolist(),
-        "any_match": bool(agg_np[13] > 0.5),
-    }
+        per_rule = np.asarray(agg)
+        return masks, _agg_dict(per_rule[0], per_rule), \
+            np.asarray(rule, dtype=np.int32)
+    # Fallback: one launch per program (program 0 still fuses mask +
+    # aggregation in a single HBM pass; rule programs reuse the resident
+    # column stack), attribution on the host.
+    masks, aggs = [], []
+    for r in range(ops.shape[0]):
+        m, a = policy_scan(kcols, jnp.asarray(ops[r]),
+                           jnp.asarray(colidx[r]),
+                           jnp.asarray(operands[r]), size_col=size_col,
+                           blocks_col=blocks_col, use_kernel=use_kernel)
+        aggs.append(np.asarray(a))
+        masks.append(np.asarray(m) > 0.5)
+    per_rule = np.stack(aggs)
+    return masks, _agg_dict(per_rule[0], per_rule), _attribute_np(masks)
 
 
 def scan_catalog(catalog, expr, now: float, use_kernel: bool = True

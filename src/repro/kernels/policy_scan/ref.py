@@ -77,7 +77,7 @@ def aggregate(mask: jax.Array, size: jax.Array, spc: jax.Array) -> jax.Array:
                      axis=0) - 1
     bucket = jnp.clip(bucket, 0, 9)
     hist = jnp.zeros((10,), jnp.float32).at[bucket].add(mask)
-    any_match = jnp.max(mask)
+    any_match = jnp.max(mask, initial=0.0)    # zero-row tables match nothing
     return jnp.concatenate([jnp.stack([count, volume, spc_used]), hist,
                             any_match[None]])
 
@@ -112,3 +112,46 @@ def policy_scan_multi_ref(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
         lambda o, c, v: eval_program(cols, o, c, v))(ops, colidx, operands)
     agg = aggregate(masks[0], cols[size_col], cols[blocks_col])
     return masks, agg
+
+
+def attribute_ref(masks: jax.Array) -> jax.Array:
+    """First-match-wins rule attribution over (R, N) program masks.
+
+    Program 0 is the combined criteria; programs 1..R-1 are the per-rule
+    conditions in priority order. Returns (N,) i32: the index of the first
+    rule whose mask is set (0-based into the rule list, i.e. program r maps
+    to rule r-1), or -1 where no rule matches. Mirrors
+    ``PolicyEngine._attribute`` exactly — attribution ignores program 0;
+    callers gate by it separately.
+    """
+    n = masks.shape[1]
+    if masks.shape[0] <= 1:
+        return jnp.full((n,), -1, jnp.int32)
+    rules = masks[1:] > 0.5                       # (R-1, N)
+    first = jnp.argmax(rules, axis=0).astype(jnp.int32)
+    return jnp.where(jnp.any(rules, axis=0), first, -1)
+
+
+def aggregate_multi(masks: jax.Array, size: jax.Array, spc: jax.Array
+                    ) -> jax.Array:
+    """Per-program fused aggregates: (R, N_AGG) f32, one row per mask."""
+    return jax.vmap(lambda m: aggregate(m, size, spc))(masks)
+
+
+def policy_scan_batch_ref(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
+                          operands: jax.Array, size_col: int = 0,
+                          blocks_col: int = 1, valid_col: int = -1
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the single-launch batch matcher.
+
+    Returns (masks (R, N) f32, rule_idx (N,) i32, agg (R, N_AGG) f32):
+    every program's mask, fused first-match-wins attribution over programs
+    1..R-1, and per-program size/blocks reductions — the full match→plan
+    payload of one policy run in one columnar pass.
+    """
+    masks = jax.vmap(
+        lambda o, c, v: eval_program(cols, o, c, v))(ops, colidx, operands)
+    if valid_col >= 0:
+        masks = masks * cols[valid_col][None, :]
+    return (masks, attribute_ref(masks),
+            aggregate_multi(masks, cols[size_col], cols[blocks_col]))

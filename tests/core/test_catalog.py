@@ -126,6 +126,56 @@ def test_column_slice_alignment():
     assert cols["size"].dtype == np.int64
 
 
+def test_column_batch_entry_free_view():
+    from repro.core import ColumnBatch
+    cat = Catalog(n_shards=3)
+    for i in range(1, 21):
+        cat.upsert(_entry(i, owner=f"u{i % 3}", pool="ssd" if i % 2 else ""))
+    fids = [7, 300, 14, 1, 2]
+    batch = cat.column_batch(fids)
+    assert isinstance(batch, ColumnBatch) and len(batch) == 5
+    assert batch.present.tolist() == [True, False, True, True, True]
+    assert batch.fids.tolist() == [7, 0, 14, 1, 2]
+    assert batch.size.tolist() == [700, 0, 1400, 100, 200]
+    # lazy string decode through the interned codes
+    assert batch.decode("owner") == ["u1", "", "u2", "u1", "u2"]
+    assert batch.decode("pool") == ["ssd", "", "", "ssd", ""]
+    # sub-batch slicing keeps alignment; bool masks select, not index
+    sub = batch.take([0, 2])
+    assert sub.fids.tolist() == [7, 14] and sub.present.all()
+    assert sub.decode("owner") == ["u1", "u2"]
+    masked = batch.take(batch.present)
+    assert masked.fids.tolist() == [7, 14, 1, 2]
+    # the materializing escape hatch equals get_batch
+    assert batch.entries() == cat.get_batch(fids)
+
+
+def test_column_batch_from_entries_matches_gather():
+    from repro.core import ColumnBatch
+    cat = Catalog(n_shards=2)
+    for i in range(1, 11):
+        cat.upsert(_entry(i, owner=f"u{i % 2}"))
+    fids = [3, 99, 8]
+    direct = cat.column_batch(fids)
+    shim = ColumnBatch.from_entries(cat.get_batch(fids), cat.strings, cat)
+    assert (shim.present == direct.present).all()
+    for name in direct.cols:
+        assert (shim.cols[name] == direct.cols[name]).all(), name
+
+
+def test_catalog_version_bumps_on_every_mutation():
+    cat = Catalog(n_shards=2)
+    v = cat.version
+    cat.upsert(_entry(1)); assert cat.version > v; v = cat.version
+    cat.upsert_batch([_entry(2), _entry(3)]); assert cat.version > v
+    v = cat.version
+    cat.update_fields(1, size=5); assert cat.version > v; v = cat.version
+    cat.update_fields_batch([2, 3], status="x"); assert cat.version > v
+    v = cat.version
+    cat.remove(1); assert cat.version > v; v = cat.version
+    cat.remove_batch([2]); assert cat.version > v
+
+
 def test_arrays_lazy_paths_still_correct():
     cat = Catalog(n_shards=3)
     for i in range(1, 16):

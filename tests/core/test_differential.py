@@ -1,9 +1,14 @@
-"""Differential suite: the four execution/matching paths are one engine.
+"""Differential suite: every execution/matching path is one engine.
 
 On randomized catalogs and randomized policies, ``execution="scalar"``,
-``execution="batched"`` under both evaluator backends (numpy and the
-policy_scan kernel oracle), and the incremental planner must action the
-**identical fid sequence** — same entries, same order, same report totals.
+``execution="columnar"`` (the Entry-free default), ``execution="batched"``
+under both evaluator backends (numpy and the policy_scan kernel oracle),
+and the incremental planner must action the **identical fid sequence** —
+same entries, same order, same report totals. A second harness proves the
+ColumnBatch batch-action path byte-identical between the Entry-
+materializing (``batched``) and zero-materialization (``columnar``) modes,
+and a third that the single-launch (R, N) matcher, the per-rule-launch
+fallback, and the numpy masks agree bit-for-bit (attribution included).
 
 All generated values are exactly representable in float32 so the kernel
 path is bit-for-bit with the int64/float64 numpy path (sizes are multiples
@@ -54,6 +59,20 @@ class Recorder:
         with self.lock:
             self.calls.append(e.fid)
         return True
+
+
+class BatchRecorder(Recorder):
+    """Recorder exposing the ColumnBatch batch-action interface."""
+
+    def __init__(self):
+        super().__init__()
+
+        def action_batch(batch, params):
+            with self.lock:
+                self.calls.extend(batch.fids.tolist())
+            return [True] * len(batch)
+
+        self.action_batch = action_batch
 
 
 def _random_catalog(rng, n):
@@ -160,6 +179,9 @@ def _assert_paths_agree(seed, n=600, rounds=2):
         r, calls = _run_path(cat, factory, t, execution="batched",
                              evaluator="numpy")
         results["numpy"] = (r.matched, r.succeeded, r.volume, calls)
+        r, calls = _run_path(cat, factory, t, execution="columnar",
+                             evaluator="numpy")
+        results["columnar"] = (r.matched, r.succeeded, r.volume, calls)
         r, calls = _run_path(cat, factory, t, execution="batched",
                              evaluator="policy_scan")
         results["policy_scan"] = (r.matched, r.succeeded, r.volume, calls)
@@ -171,6 +193,22 @@ def _assert_paths_agree(seed, n=600, rounds=2):
                 f"{got[:3]} vs {ref[:3]}; "
                 f"sym_diff={set(got[3]) ^ set(ref[3])}")
 
+        # ColumnBatch batch-action path: the Entry-materializing mode and
+        # the zero-materialization mode must action byte-identical
+        # sequences (same chunking, same rule grouping, same order)
+        batch_results = {}
+        for execution in ("batched", "columnar"):
+            rec = BatchRecorder()
+            eng = PolicyEngine(cat, clock=lambda: t)
+            eng.register(factory(rec))
+            r = eng.run("p", execution=execution)
+            batch_results[execution] = (r.matched, r.succeeded, r.volume,
+                                        list(rec.calls))
+        assert batch_results["batched"] == batch_results["columnar"], (
+            f"seed={seed} round={round_i} ColumnBatch path diverged")
+        assert sorted(batch_results["columnar"][3]) == sorted(ref[3])
+        assert batch_results["columnar"][:3] == ref[:3]
+
 
 @pytest.mark.parametrize("seed", [0, 1])
 def test_all_paths_action_identical_sets(seed):
@@ -181,6 +219,55 @@ def test_all_paths_action_identical_sets(seed):
 @pytest.mark.parametrize("seed", list(range(2, 12)))
 def test_all_paths_action_identical_sets_deep(seed):
     _assert_paths_agree(seed, n=1500, rounds=3)
+
+
+def _assert_matchers_agree(seed, n=400, use_kernel=False):
+    """single-launch (R, N) matcher == per-rule launches == numpy masks,
+    attribution and per-rule aggregates included."""
+    from repro.core.policy import all_of, any_of
+    from repro.kernels.policy_scan.ops import match_programs
+
+    rng = np.random.default_rng(seed)
+    cat = _random_catalog(rng, n)
+    policy = _random_policy(np.random.default_rng(seed + 1), None)
+    rule_exprs = [r.condition for r in policy.rules]
+    full = all_of([policy.scope, any_of(rule_exprs)])
+    arrays = cat.arrays()
+
+    single = match_programs(arrays, [full] + rule_exprs, cat.strings, NOW,
+                            use_kernel=use_kernel, single_launch=True)
+    per_rule = match_programs(arrays, [full] + rule_exprs, cat.strings, NOW,
+                              use_kernel=use_kernel, single_launch=False)
+    for m_s, m_r in zip(single[0], per_rule[0]):
+        np.testing.assert_array_equal(m_s, m_r)
+    np.testing.assert_array_equal(single[2], per_rule[2])   # attribution
+    assert single[1]["count"] == per_rule[1]["count"]
+    assert single[1].get("rule_count") == per_rule[1].get("rule_count")
+    assert single[1].get("rule_volume") == per_rule[1].get("rule_volume")
+
+    # vs numpy Expr.mask ground truth (f32-exact catalogs: bit-for-bit)
+    np_masks = [full.mask(arrays, cat.strings, NOW)] + \
+        [e.mask(arrays, cat.strings, NOW) for e in rule_exprs]
+    for m_s, m_n in zip(single[0], np_masks):
+        np.testing.assert_array_equal(m_s, m_n)
+    stacked = np.stack(np_masks[1:])
+    att = np.argmax(stacked, axis=0).astype(np.int32)
+    att[~stacked.any(axis=0)] = -1
+    np.testing.assert_array_equal(single[2], att)
+    assert single[1]["count"] == int(np_masks[0].sum())
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_single_launch_matcher_agrees(seed):
+    _assert_matchers_agree(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(3, 9)))
+def test_single_launch_matcher_agrees_kernel_interpret(seed):
+    """Same differential through the actual Pallas kernels (interpret mode
+    off-TPU): the single-launch batch kernel vs per-rule launches."""
+    _assert_matchers_agree(seed, n=700, use_kernel=True)
 
 
 @pytest.mark.slow
@@ -197,7 +284,7 @@ def test_budgeted_runs_agree_across_paths():
             mutates=False)
 
     results = {}
-    for execution in ("scalar", "batched"):
+    for execution in ("scalar", "batched", "columnar"):
         r, calls = _run_path(cat, factory, NOW, execution=execution)
         results[execution] = (r.succeeded, calls)
     inc_rec = Recorder()
@@ -209,4 +296,5 @@ def test_budgeted_runs_agree_across_paths():
     eng.mark_dirty([1, 2, 3])
     r = eng.run("p", matching="incremental")
     results["incremental"] = (r.succeeded, list(inc_rec.calls))
-    assert results["scalar"] == results["batched"] == results["incremental"]
+    assert results["scalar"] == results["batched"] == results["columnar"] \
+        == results["incremental"]

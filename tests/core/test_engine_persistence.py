@@ -1,0 +1,151 @@
+"""Incremental state persistence: an engine restart resumes incrementally
+(match table + age-flip schedule serialized beside the sqlite mirror)
+instead of paying a cold full scan."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (Catalog, Entry, FsType, PolicyDefinition,
+                        PolicyEngine)
+from repro.core.policy import PolicyError
+
+NOW = 1_000_000.0
+
+
+def _catalog(n=400, db_path=None):
+    cat = Catalog(n_shards=2, db_path=db_path)
+    cat.upsert_batch([
+        Entry(fid=i + 1, name=f"f{i}", path=f"/p/f{i}", type=FsType.FILE,
+              size=(i % 40 + 1) * 1000, blocks=i % 40 + 1,
+              owner=f"user{i % 3}", atime=NOW - float(i + 1))
+        for i in range(n)])
+    return cat
+
+
+def _engine(cat, clock, rules=None, name="p"):
+    eng = PolicyEngine(cat, clock=clock)
+    eng.register(PolicyDefinition.from_config(
+        name=name, action=lambda e, p: True, scope="type == file",
+        rules=rules or [("old", "last_access > 100s", {})],
+        sort_by="atime", mutates=False))
+    return eng
+
+
+class _Clock:
+    def __init__(self, t=NOW):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_save_load_roundtrip_resumes_incrementally(tmp_path):
+    path = str(tmp_path / "state.npz")
+    cat = _catalog()
+    clock = _Clock()
+    eng = _engine(cat, clock)
+    eng.enable_incremental()
+    assert eng.run("p").mode == "full"          # prime the cache
+    assert eng.save_incremental(path) == path
+
+    # churn while the engine is "down"
+    cat.update_fields(3, atime=NOW)             # young again -> unmatches
+    cat.remove(7)
+    cat.upsert(Entry(fid=9000, name="n", path="/p/n", type=FsType.FILE,
+                     size=5000, atime=NOW - 900))
+
+    eng2 = _engine(cat, clock)
+    assert eng2.load_incremental(path) == ["p"]
+    eng2.mark_dirty([3, 7, 9000])               # re-delivered deltas
+    clock.t = NOW + 50
+    r = eng2.run("p", matching="incremental")   # NO cold full scan
+    assert r.mode == "incremental"
+    assert r.reval < len(cat)
+
+    r_full = _engine(cat, _Clock(NOW + 50)).run("p")
+    assert r_full.mode == "full"
+    assert (r.matched, r.succeeded, r.volume) == \
+        (r_full.matched, r_full.succeeded, r_full.volume)
+
+
+def test_flip_schedule_survives_restart(tmp_path):
+    """Age flips due after the restart still fire without any delta."""
+    path = str(tmp_path / "state.npz")
+    cat = _catalog(50)
+    clock = _Clock()
+    eng = _engine(cat, clock)
+    eng.enable_incremental()
+    r0 = eng.run("p")
+    eng.save_incremental(path)
+
+    eng2 = _engine(cat, clock)
+    assert eng2.load_incremental(path) == ["p"]
+    clock.t = NOW + 80                    # ages 21..50 cross the 100s line
+    r = eng2.run("p", matching="incremental")
+    assert r.mode == "incremental"
+    r_full = _engine(cat, clock).run("p")
+    assert r.matched == r_full.matched > r0.matched
+
+
+def test_changed_definition_is_not_resumed(tmp_path):
+    path = str(tmp_path / "state.npz")
+    cat = _catalog()
+    eng = _engine(cat, _Clock())
+    eng.enable_incremental()
+    eng.run("p")
+    eng.save_incremental(path)
+
+    changed = _engine(cat, _Clock(),
+                      rules=[("old", "last_access > 999s", {})])
+    assert changed.load_incremental(path) == []     # signature mismatch
+    assert changed.run("p").mode == "full"          # safe cold start
+
+
+def test_unregistered_policy_and_missing_file(tmp_path):
+    path = str(tmp_path / "state.npz")
+    cat = _catalog(50)
+    eng = _engine(cat, _Clock())
+    assert eng.load_incremental(path) == []         # missing file: no-op
+    eng.enable_incremental()
+    eng.run("p")
+    eng.save_incremental(path)
+    other = PolicyEngine(cat, clock=_Clock())
+    other.register(PolicyDefinition.from_config(
+        name="q", action=lambda e, p: True, scope="true", mutates=False))
+    assert other.load_incremental(path) == []       # "p" not registered
+
+
+def test_undrained_dirty_fids_survive(tmp_path):
+    path = str(tmp_path / "state.npz")
+    cat = _catalog(60)
+    clock = _Clock()
+    eng = _engine(cat, clock)
+    eng.enable_incremental()
+    eng.run("p")
+    cat.update_fields(5, atime=NOW)
+    eng.mark_dirty([5])                   # noted but never drained by a run
+    eng.save_incremental(path)
+
+    eng2 = _engine(cat, clock)
+    eng2.load_incremental(path)
+    r = eng2.run("p", matching="incremental")
+    assert r.reval >= 1                   # fid 5 was re-evaluated
+    r_full = _engine(cat, clock).run("p")
+    assert r.matched == r_full.matched
+
+
+def test_default_path_requires_db_or_explicit(tmp_path):
+    cat = _catalog(10)
+    eng = _engine(cat, _Clock())
+    eng.enable_incremental()
+    eng.run("p")
+    with pytest.raises(PolicyError):
+        eng.save_incremental()            # no sqlite mirror, no path
+    db = str(tmp_path / "cat.sqlite")
+    cat2 = _catalog(10, db_path=db)
+    eng2 = _engine(cat2, _Clock())
+    eng2.enable_incremental()
+    eng2.run("p")
+    out = eng2.save_incremental()
+    assert out == db + ".incstate.npz" and os.path.exists(out)

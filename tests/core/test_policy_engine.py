@@ -68,6 +68,17 @@ def test_policy_scan_evaluator_matches_numpy_bit_for_bit():
     assert results["numpy"] == results["policy_scan"]
 
 
+def test_policy_scan_evaluator_on_empty_catalog():
+    """A zero-row catalog matches nothing on every backend (no crash)."""
+    cat = Catalog(n_shards=2)
+    rec = Recorder()
+    eng = _engine(cat, rec, rules=[("big", "size > 1k", {"tag": "big"})])
+    for ev in ("numpy", "policy_scan"):
+        r = eng.run("p", evaluator=ev)
+        assert (r.matched, r.succeeded, r.failed) == (0, 0, 0)
+    assert rec.calls == []
+
+
 def test_policy_scan_falls_back_to_numpy_on_glob():
     cat = _catalog()
     rec = Recorder()
@@ -210,9 +221,12 @@ def test_watermark_trigger_budget_stop():
 # -- execution paths -----------------------------------------------------------
 
 def test_batch_action_interface_used_and_equivalent():
+    """Columnar default: action_batch consumes ColumnBatch, no Entries."""
+    from repro.core import ColumnBatch
     cat = _catalog()
     batch_sizes = []
     scalar_calls = []
+    payload_types = []
     lock = threading.Lock()
 
     def action(e, params):
@@ -220,30 +234,80 @@ def test_batch_action_interface_used_and_equivalent():
             scalar_calls.append(e.fid)
         return True
 
-    def action_batch(entries, params):
+    def action_batch(batch, params):
         with lock:
-            batch_sizes.append(len(entries))
-        return [e.fid % 10 != 0 for e in entries]
+            batch_sizes.append(len(batch))
+            payload_types.append(type(batch))
+        return (batch.fids % 10 != 0).tolist()
 
     action.action_batch = action_batch
     eng = _engine(cat, action, n_threads=2, batch_size=128)
     r = eng.run("p")
     assert not scalar_calls                    # batch interface preferred
+    assert all(t is ColumnBatch for t in payload_types)
     assert sum(batch_sizes) == r.matched
     assert max(batch_sizes) <= 128
     assert r.failed == sum(1 for e in cat.entries() if e.fid % 10 == 0)
     assert r.succeeded == r.matched - r.failed
 
 
+def test_needs_entries_declaration_materializes():
+    """A plugin declaring needs_entries gets List[Entry], even columnar."""
+    cat = _catalog()
+    payloads = []
+    lock = threading.Lock()
+
+    def action(e, params):
+        return True
+
+    def action_batch(entries, params):
+        with lock:
+            payloads.append(entries)
+        return [e.fid % 10 != 0 for e in entries]
+
+    action.action_batch = action_batch
+    action.needs_entries = True
+    eng = _engine(cat, action, n_threads=1, batch_size=128)
+    r = eng.run("p", execution="columnar")
+    assert payloads and all(isinstance(p, list) for p in payloads)
+    assert all(isinstance(e, Entry) for p in payloads for e in p)
+    assert r.failed == sum(1 for e in cat.entries() if e.fid % 10 == 0)
+
+
+def test_batched_mode_shim_matches_columnar():
+    """Legacy batched mode feeds the same ColumnBatch-consuming plugin via
+    the from_entries shim: identical outcomes, Entry cost paid."""
+    results = {}
+    for execution in ("columnar", "batched"):
+        cat = _catalog(800)
+        acted = []
+        lock = threading.Lock()
+
+        def action(e, params):
+            return True
+
+        def action_batch(batch, params):
+            with lock:
+                acted.extend(batch.fids.tolist())
+            return [True] * len(batch)
+
+        action.action_batch = action_batch
+        eng = _engine(cat, action, n_threads=1, batch_size=64)
+        r = eng.run("p", execution=execution)
+        assert r.execution == execution
+        results[execution] = (r.matched, r.succeeded, r.volume, sorted(acted))
+    assert results["columnar"] == results["batched"]
+
+
 def test_scalar_execution_path_agrees_with_batched():
     results = {}
-    for execution in ("batched", "scalar"):
+    for execution in ("columnar", "batched", "scalar"):
         cat = _catalog(800)
         rec = Recorder()
         eng = _engine(cat, rec, n_threads=1, batch_size=64)
         r = eng.run("p", execution=execution)
         results[execution] = (r.matched, r.succeeded, r.volume, rec.acted())
-    assert results["batched"] == results["scalar"]
+    assert results["batched"] == results["scalar"] == results["columnar"]
 
 
 def test_dry_run_counts_without_calling_actions():

@@ -40,6 +40,52 @@ def test_find_and_du():
     assert rep.top_dirs_by_count(1)[0]["children"] >= 10
 
 
+def test_du_index_tracks_catalog_churn():
+    """The sorted-prefix-range index rebuilds on catalog mutations."""
+    fs, proj, logs = _fs()
+    cat = Catalog()
+    Scanner(fs, cat).scan()
+    rep = Reports(cat)
+    before = rep.du("/proj/logs")
+    assert before["files"] == 5 and before["volume"] == 50
+    # mutate through every invalidation-relevant path
+    log0 = [e for e in cat.entries() if e.path == "/proj/logs/log0.txt"][0]
+    cat.update_fields(log0.fid, size=1000)
+    assert rep.du("/proj/logs")["volume"] == 50 - 10 + 1000
+    cat.remove(log0.fid)
+    after = rep.du("/proj/logs")
+    assert after["files"] == 4 and after["volume"] == 40
+    # du_many answers several subtrees from one index build
+    many = rep.du_many(["/proj", "/proj/logs", "/nope"])
+    assert many[0] == rep.du("/proj")
+    assert many[1] == after
+    assert many[2] == {"count": 0, "files": 0, "volume": 0, "spc_used": 0}
+    # prefix is a path-component match, not a string prefix match
+    assert rep.du("/proj/lo")["count"] == 0
+
+
+def test_checksum_plugin_batch_matches_scalar():
+    results = {}
+    for execution in ("scalar", "columnar"):
+        fs, proj, logs = _fs()
+        cat = Catalog()
+        Scanner(fs, cat).scan()
+        # desync one file so a corrupt verdict exists
+        tar0 = [e for e in cat.entries() if e.path == "/proj/data0.tar"][0]
+        cat.update_fields(tar0.fid, size=tar0.size + 1)
+        eng = PolicyEngine(cat)
+        eng.register(PolicyDefinition.from_config(
+            name="fsck", action=PLUGIN_REGISTRY["checksum"](fs, cat),
+            scope="type == file"))
+        r = eng.run("fsck", execution=execution)
+        statuses = sorted((e.path, e.status) for e in cat.entries()
+                          if e.type == 0)
+        results[execution] = (r.succeeded, r.failed, statuses)
+    assert results["scalar"] == results["columnar"]
+    assert results["columnar"][1] == 1          # the desynced file failed
+    assert ("/proj/data0.tar", "corrupt") in results["columnar"][2]
+
+
 def test_report_user_o1_matches_scan():
     fs, proj, logs = _fs()
     cat = Catalog()

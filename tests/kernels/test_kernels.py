@@ -49,6 +49,48 @@ def test_policy_scan_kernel_vs_ref(seed, n):
                                rtol=1e-5, atol=1)
 
 
+@pytest.mark.parametrize("seed,n", [(0, 17), (1, 100), (2, 1024), (3, 3000)])
+def test_policy_scan_batch_kernel_vs_ref(seed, n):
+    """Single-launch (R, P) batch kernel == batch oracle == per-program
+    single kernel: masks, fused attribution, per-program aggregates."""
+    from repro.core.policy import compile_programs
+    from repro.kernels.policy_scan.ops import policy_scan, policy_scan_batch
+    rng = np.random.default_rng(seed)
+    st_ = StringTable()
+    st_.intern("u0"), st_.intern("u1"), st_.intern("u2")
+    cols = _random_cols(rng, n)
+    exprs = [parse_expr("(size > 1GB or owner == 'u1') and type == file"),
+             parse_expr("size > 1GB"),
+             parse_expr("owner == 'u1'"),
+             parse_expr("not (type == file and size <= 32M)")]
+    ops, ci, opr = compile_programs(exprs, st_, now=1e6)
+    kw = dict(size_col=KERNEL_COLUMNS.index("size"),
+              blocks_col=KERNEL_COLUMNS.index("blocks"))
+    jc = jnp.asarray(cols)
+    masks_k, rule_k, agg_k = policy_scan_batch(
+        jc, jnp.asarray(ops), jnp.asarray(ci), jnp.asarray(opr),
+        use_kernel=True, **kw)
+    masks_r, rule_r, agg_r = policy_scan_batch(
+        jc, jnp.asarray(ops), jnp.asarray(ci), jnp.asarray(opr),
+        use_kernel=False, **kw)
+    np.testing.assert_allclose(np.asarray(masks_k), np.asarray(masks_r))
+    np.testing.assert_array_equal(np.asarray(rule_k), np.asarray(rule_r))
+    np.testing.assert_allclose(np.asarray(agg_k), np.asarray(agg_r),
+                               rtol=1e-5, atol=1)
+    # per-program single launches see the identical masks and aggregates
+    for r in range(ops.shape[0]):
+        m1, a1 = policy_scan(jc, jnp.asarray(ops[r]), jnp.asarray(ci[r]),
+                             jnp.asarray(opr[r]), use_kernel=True, **kw)
+        np.testing.assert_allclose(np.asarray(masks_k)[r], np.asarray(m1))
+        np.testing.assert_allclose(np.asarray(agg_k)[r], np.asarray(a1),
+                                   rtol=1e-5, atol=1)
+    # attribution: first-match-wins over programs 1..R-1, -1 when none
+    mk = np.asarray(masks_k) > 0.5
+    expect = np.argmax(mk[1:], axis=0).astype(np.int32)
+    expect[~mk[1:].any(axis=0)] = -1
+    np.testing.assert_array_equal(np.asarray(rule_k), expect)
+
+
 def test_policy_scan_end_to_end_catalog():
     from repro.core import Catalog, Entry, FsType
     from repro.kernels.policy_scan.ops import scan_catalog
