@@ -3,6 +3,13 @@
 The claim: `rbh-report -u foo` is O(1) in catalog size because aggregates
 are maintained at ingest. We time the query at growing catalog sizes for
 both the pre-aggregated path and a from-scratch recomputation.
+
+Profile-cube cases (this repo's third data plane): the scalar
+``StatsAggregator`` fold (one python dict update per delta) vs the
+``ProfileCube`` vectorized per-shard build, and incremental signed-delta
+maintenance at 1% churn vs a full cube recompute. CI gates on
+``profile_cube_build`` beating ``stats_scalar_fold`` and
+``profile_cube_incremental`` beating ``profile_cube_recompute``.
 """
 from __future__ import annotations
 
@@ -10,7 +17,8 @@ import time
 
 import numpy as np
 
-from repro.core import Catalog, Entry, FsType, Reports, StatsAggregator
+from repro.core import (Catalog, Entry, FsType, ProfileCube, Reports,
+                        StatsAggregator)
 
 
 def _fill(cat, stats, n):
@@ -21,6 +29,78 @@ def _fill(cat, stats, n):
                      blocks=100, owner=owners[int(rng.integers(0, 20))])
                for i in range(n)]
     cat.upsert_batch(entries)
+
+
+def _cube_catalog(n: int, now: float) -> Catalog:
+    """n entries with spread owners/groups/ages, chunked build."""
+    rng = np.random.default_rng(1)
+    cat = Catalog(n_shards=4)
+    for lo in range(0, n, 100_000):
+        hi = min(lo + 100_000, n)
+        entries = [Entry(fid=i + 1, name=f"f{i}", path=f"/p/f{i}",
+                         type=FsType.FILE,
+                         size=int(rng.integers(0, 1 << 30)), blocks=100,
+                         owner=f"user{int(rng.integers(0, 16))}",
+                         group=f"grp{int(rng.integers(0, 4))}",
+                         atime=now - float(rng.integers(0, 400 * 86400)))
+                   for i in range(lo, hi)]
+        cat.upsert_batch(entries)
+    return cat
+
+
+def _bench_profile_cube(n: int) -> list:
+    """Cube build vs scalar fold, incremental vs recompute at 1% churn."""
+    now = time.time()
+    cat = _cube_catalog(n, now)
+    clock = lambda: now  # noqa: E731
+
+    # scalar StatsAggregator fold: one python dict fold per delta (the
+    # pre-cube maintenance cost for the same catalog)
+    deltas = []
+    for shard in cat.shards:
+        with shard.lock:
+            for row in shard._rows.values():
+                deltas.append(shard._row_delta(row))
+    scalar = StatsAggregator(cat.strings)
+    t0 = time.perf_counter()
+    for d in deltas:
+        scalar._apply(None, d)
+    scalar_dt = time.perf_counter() - t0
+
+    # profile cube: vectorized per-shard build (snapshot + groupby)
+    cube = ProfileCube(cat, clock=clock)
+    t0 = time.perf_counter()
+    cube.rebuild(now=now)
+    build_dt = time.perf_counter() - t0
+    assert cube.totals()[0] == scalar.total.count
+
+    # 1% churn: size/atime updates flow through the delta hook
+    cat.add_delta_hook(cube.on_delta)
+    rng = np.random.default_rng(2)
+    churn = (rng.choice(n, max(1, n // 100), replace=False) + 1).tolist()
+    for fid in churn:
+        cat.update_fields(fid, size=123456, atime=now - 50.0)
+
+    t0 = time.perf_counter()
+    cube.cube(now)                       # flush signed deltas + rollovers
+    inc_dt = time.perf_counter() - t0
+
+    fresh = ProfileCube(cat, clock=clock)
+    t0 = time.perf_counter()
+    fresh.rebuild(now=now)               # full cube recompute
+    recompute_dt = time.perf_counter() - t0
+    assert fresh.totals() == cube.totals()
+
+    return [
+        (f"stats_scalar_fold_n{n}", scalar_dt * 1e6,
+         f"{n / scalar_dt:.0f}_deltas_per_s"),
+        (f"profile_cube_build_n{n}", build_dt * 1e6,
+         f"vs_scalar_fold_{scalar_dt / build_dt:.1f}x"),
+        (f"profile_cube_recompute_n{n}", recompute_dt * 1e6,
+         f"churn_{len(churn)}_rows"),
+        (f"profile_cube_incremental_n{n}", inc_dt * 1e6,
+         f"vs_recompute_{recompute_dt / inc_dt:.1f}x"),
+    ]
 
 
 def run(smoke: bool = False) -> list:
@@ -50,4 +130,5 @@ def run(smoke: bool = False) -> list:
                      f"flat_vs_scan_{full/o1:.0f}x"))
         rows.append((f"report_fullscan_n{n}", full * 1e6,
                      f"ingest_{n/ingest_dt:.0f}_entries_per_s"))
+    rows.extend(_bench_profile_cube(120_000 if smoke else 1_000_000))
     return rows

@@ -3,16 +3,21 @@
 Collect (scanner/changelog/pipeline) -> store (catalog) -> exploit
 (stats/reports/policies/alerts/HSM).
 """
-from .types import (ChangelogRecord, ChangelogType, Entry, FsType, HsmState,
-                    format_size, parse_duration, parse_size)
+from .types import (AGE_PROFILE_EDGES, AGE_PROFILE_LABELS, ChangelogRecord,
+                    ChangelogType, Entry, FsType, HsmState,
+                    SIZE_PROFILE_EDGES, SIZE_PROFILE_LABELS,
+                    age_profile_bucket, format_size, parse_duration,
+                    parse_size, size_profile_bucket)
 from .catalog import Catalog, CatalogShard, ColumnBatch, StringTable
 from .changelog import ChangelogHub, ChangelogStream
+from .fidtable import FidTable
 from .scanner import Scanner, multi_client_scan, prune_missing
 from .pipeline import EventPipeline, PipelineConfig
 from .policy import (ALWAYS, And, Cmp, Const, Expr, Not, Or, PolicyError,
                      compile_program, parse_expr, KERNEL_COLUMNS)
 from .policy_engine import (PolicyDefinition, PolicyEngine, Rule, RunReport,
                             UsageWatermarkTrigger)
+from .profiles import GroupIndex, ProfileCube
 from .stats import ChangelogCounters, DirUsage, StatsAggregator
 from .reports import Reports
 from .alerts import AlertManager, AlertRule
@@ -20,10 +25,14 @@ from .hsm import HsmCoordinator
 from .plugins import PLUGIN_REGISTRY, register_plugin
 
 __all__ = [
-    "ChangelogRecord", "ChangelogType", "Entry", "FsType", "HsmState",
-    "format_size", "parse_duration", "parse_size",
+    "AGE_PROFILE_EDGES", "AGE_PROFILE_LABELS", "ChangelogRecord",
+    "ChangelogType", "Entry", "FsType", "HsmState",
+    "SIZE_PROFILE_EDGES", "SIZE_PROFILE_LABELS",
+    "age_profile_bucket", "format_size", "parse_duration", "parse_size",
+    "size_profile_bucket",
     "Catalog", "CatalogShard", "ColumnBatch", "StringTable",
-    "ChangelogHub", "ChangelogStream",
+    "ChangelogHub", "ChangelogStream", "FidTable",
+    "GroupIndex", "ProfileCube",
     "Scanner", "multi_client_scan", "prune_missing",
     "EventPipeline", "PipelineConfig",
     "ALWAYS", "And", "Cmp", "Const", "Expr", "Not", "Or", "PolicyError",

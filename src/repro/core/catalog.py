@@ -31,8 +31,10 @@ import numpy as np
 from .types import Entry, FsType, HsmState
 
 # Stats/alert hooks receive these light tuples instead of full Entries.
-# (owner_code, group_code, type, size, blocks, hsm_state)
-Delta = Tuple[int, int, int, int, int, int]
+# (fid, owner_code, group_code, type, size, blocks, hsm_state, atime) —
+# everything the pre-aggregated stats and the profile cube need to apply a
+# signed bucket update without re-reading the shard.
+Delta = Tuple[int, int, int, int, int, int, int, float]
 
 _NUMERIC_COLUMNS: Tuple[Tuple[str, np.dtype], ...] = (
     ("fid", np.int64),
@@ -260,6 +262,11 @@ class CatalogShard:
     def __init__(self, shard_id: int, strings: StringTable) -> None:
         self.shard_id = shard_id
         self.strings = strings
+        # per-shard change tick: bumped (under the shard lock) by every
+        # mutation that lands in THIS shard, so per-shard derived caches
+        # (Reports' path index, profile cubes) rebuild only the shards
+        # that actually churned — Catalog.version stays the global tick.
+        self.version = 0
         self.lock = threading.RLock()
         self._rows: Dict[int, int] = {}          # fid -> row index
         self._free: List[int] = []
@@ -301,9 +308,10 @@ class CatalogShard:
     # -- entry operations ---------------------------------------------------
     def _row_delta(self, row: int) -> Delta:
         c = self._cols
-        return (int(c["owner"][row]), int(c["group"][row]), int(c["type"][row]),
+        return (int(c["fid"][row]), int(c["owner"][row]),
+                int(c["group"][row]), int(c["type"][row]),
                 int(c["size"][row]), int(c["blocks"][row]),
-                int(c["hsm_state"][row]))
+                int(c["hsm_state"][row]), float(c["atime"][row]))
 
     def upsert(self, e: Entry) -> Tuple[Optional[Delta], Delta]:
         """Insert or update an entry; returns (old_delta|None, new_delta)."""
@@ -339,6 +347,7 @@ class CatalogShard:
             self._paths[row] = e.path
             self._xattrs[row] = dict(e.xattrs) if e.xattrs else None
             self._stripes[row] = tuple(e.stripe_osts)
+            self.version += 1
             return old, self._row_delta(row)
 
     def update_fields(self, fid: int, **fields) -> Optional[Tuple[Delta, Delta]]:
@@ -368,6 +377,7 @@ class CatalogShard:
                     c[k][row] = 1 if v else 0
                 else:
                     c[k][row] = v
+            self.version += 1
             return old, self._row_delta(row)
 
     def remove(self, fid: int) -> Optional[Delta]:
@@ -381,6 +391,7 @@ class CatalogShard:
             self._xattrs[row] = None
             self._stripes[row] = ()
             self._free.append(row)
+            self.version += 1
             return old
 
     def get(self, fid: int) -> Optional[Entry]:
@@ -462,19 +473,28 @@ class CatalogShard:
             return [self.update_fields(f, **fields) for f in fids]
 
     # -- vectorized access ----------------------------------------------------
-    def snapshot(self) -> Tuple[Dict[str, np.ndarray], "_StringSnapshot"]:
+    def snapshot(self, names: Optional[Sequence[str]] = None,
+                 with_strings: bool = True
+                 ) -> Tuple[Dict[str, np.ndarray],
+                            Optional["_StringSnapshot"]]:
         """Consistent columnar snapshot under one lock acquisition.
 
-        Numeric columns are copied; ``_paths``/``_names`` are captured as
+        Numeric columns are copied (restricted to ``names`` when given —
+        aggregation consumers like the profile cube skip the other ~half
+        of the column stack); ``_paths``/``_names`` are captured as
         shallow list copies (a C-level pointer copy — cheap) so the
         expensive per-row gather can happen lazily later while staying
         consistent with the numeric rows (in-place shard mutations after
-        the snapshot cannot be observed).
+        the snapshot cannot be observed). ``with_strings=False`` skips
+        even the pointer copies (the snapshot returns ``None`` strings —
+        purely numeric consumers).
         """
         with self.lock:
             valid = self._valid[: self._n]
             cols = {name: self._cols[name][: self._n][valid].copy()
-                    for name in self._cols}
+                    for name in (names if names is not None else self._cols)}
+            if not with_strings:
+                return cols, None
             snap = _StringSnapshot(np.nonzero(valid)[0],
                                    list(self._names), list(self._paths))
             return cols, snap

@@ -26,6 +26,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from .catalog import Catalog, ColumnBatch
 from .types import Entry, HsmState
 
@@ -68,7 +70,37 @@ def purge_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
 
 @register_plugin("rmdir_empty")
 def rmdir_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
-    """Remove old empty directories (scalar: needs a readdir per entry)."""
+    """Remove old empty directories.
+
+    The scalar path needs a ``readdir`` per entry; the batch path derives
+    a vectorized per-directory child-count column from the catalog's
+    ``parent_fid`` column — the same one-vector groupby as
+    ``Reports.top_dirs_by_count`` — cached per :attr:`Catalog.version`.
+    Within a chunk, directories are processed in plan order with their
+    counts decremented as children are removed, so a parent emptied by a
+    child earlier in the chunk is removed exactly like the scalar
+    readdir path would; one batched catalog commit, no per-directory
+    filesystem listing.
+    """
+
+    # sorted unique parent fids + child counts, rebuilt when the catalog
+    # ticks (removals inside a run can empty ancestors; the next chunk
+    # re-derives)
+    cache = {"version": -1, "parents": None, "counts": None}
+
+    def _child_counts(fids: np.ndarray) -> List[int]:
+        version = catalog.version
+        if cache["version"] != version:
+            col = catalog.arrays()["parent_fid"]
+            cache["parents"], cache["counts"] = np.unique(
+                col[col >= 0], return_counts=True)
+            cache["version"] = version
+        parents, counts = cache["parents"], cache["counts"]
+        if not len(parents):
+            return [0] * len(fids)
+        pos_c = np.clip(np.searchsorted(parents, fids), 0, len(parents) - 1)
+        hit = parents[pos_c] == fids
+        return np.where(hit, counts[pos_c], 0).tolist()
 
     def action(e: Entry, params: dict) -> bool:
         if fs.readdir(e.fid):
@@ -77,6 +109,27 @@ def rmdir_plugin(fs, catalog: Catalog) -> Callable[[Entry, dict], bool]:
         catalog.remove(e.fid)
         return True
 
+    def action_batch(batch: ColumnBatch, params: dict) -> List[bool]:
+        fids = batch.fids.tolist()
+        parent_of = batch.parent_fid.tolist()
+        remaining = dict(zip(fids, _child_counts(batch.fids)))
+        oks = [False] * len(fids)
+        gone = []
+        for i, fid in enumerate(fids):
+            if remaining.get(fid, 0):
+                continue                    # still has children
+            try:
+                fs.unlink(fid)
+            except Exception:
+                continue
+            oks[i] = True
+            gone.append(fid)
+            if parent_of[i] in remaining:   # parent may empty in-chunk
+                remaining[parent_of[i]] -= 1
+        catalog.remove_batch(gone)
+        return oks
+
+    action.action_batch = action_batch
     return action
 
 

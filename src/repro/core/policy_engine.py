@@ -105,6 +105,7 @@ import numpy as np
 
 from .catalog import Catalog, ColumnBatch
 from .changelog import ChangelogHub, ChangelogStream
+from .fidtable import FidTable as _FidTable
 from .policy import (AGE_ATTRS, ALWAYS, Cmp, Expr, GLOB_ATTRS, PolicyError,
                      all_of, any_of, attribute_rules, iter_exprs, parse_expr)
 from .types import Entry, FsType
@@ -216,97 +217,6 @@ class _Plan:
     fids: np.ndarray        # int64
     sizes: np.ndarray       # int64 (match-time snapshot, used for budgets)
     rule_idx: np.ndarray    # int32, -1 = no rule (empty params)
-
-
-class _FidTable:
-    """Fid-keyed parallel numpy columns with O(1) upsert/remove.
-
-    Rows are tombstoned on removal and the storage compacts itself once the
-    dead fraction dominates; ``live()`` snapshots the surviving rows in
-    arbitrary order (callers impose a total order by sorting on content)."""
-
-    def __init__(self, specs: Sequence[Tuple[str, type]], cap: int = 1024
-                 ) -> None:
-        self._specs = tuple(specs)
-        self._reset(cap)
-
-    def _reset(self, cap: int) -> None:
-        cap = max(1, cap)
-        self._pos: Dict[int, int] = {}
-        self._fids = np.zeros(cap, dtype=np.int64)
-        self._cols = {name: np.zeros(cap, dtype=dt)
-                      for name, dt in self._specs}
-        self._alive = np.zeros(cap, dtype=bool)
-        self._n = 0                               # high-water row count
-
-    def __len__(self) -> int:
-        return len(self._pos)
-
-    def _grow(self, need: int) -> None:
-        cap = len(self._alive)
-        while cap < need:
-            cap *= 2
-        for name in self._cols:
-            col = np.zeros(cap, dtype=self._cols[name].dtype)
-            col[: self._n] = self._cols[name][: self._n]
-            self._cols[name] = col
-        fids = np.zeros(cap, dtype=np.int64)
-        fids[: self._n] = self._fids[: self._n]
-        self._fids = fids
-        alive = np.zeros(cap, dtype=bool)
-        alive[: self._n] = self._alive[: self._n]
-        self._alive = alive
-
-    def bulk_load(self, fids: np.ndarray, **cols: np.ndarray) -> None:
-        """Replace the whole table with the given rows."""
-        n = len(fids)
-        self._reset(max(1024, n))
-        self._fids[:n] = fids
-        for name, vals in cols.items():
-            self._cols[name][:n] = vals
-        self._alive[:n] = True
-        self._n = n
-        self._pos = {f: i for i, f in enumerate(fids.tolist())}
-
-    def upsert_many(self, fids: List[int], **cols: np.ndarray) -> None:
-        if not fids:
-            return
-        pos = np.empty(len(fids), dtype=np.int64)
-        for i, f in enumerate(fids):
-            p = self._pos.get(f)
-            if p is None:
-                if self._n >= len(self._alive):
-                    self._grow(self._n + 1)
-                p = self._n
-                self._n += 1
-                self._pos[f] = p
-                self._fids[p] = f
-                self._alive[p] = True
-            pos[i] = p
-        for name, vals in cols.items():
-            self._cols[name][pos] = vals
-
-    def remove_many(self, fids: Iterable[int]) -> None:
-        for f in fids:
-            p = self._pos.pop(f, None)
-            if p is not None:
-                self._alive[p] = False
-
-    def maybe_compact(self) -> None:
-        dead = self._n - len(self._pos)
-        if dead > 1024 and dead > len(self._pos):
-            fids, cols = self.live()
-            self.bulk_load(fids, **cols)
-
-    def live(self) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
-        idx = np.nonzero(self._alive[: self._n])[0]
-        return (self._fids[idx].copy(),
-                {name: col[idx].copy() for name, col in self._cols.items()})
-
-    def select_le(self, col: str, val: float) -> np.ndarray:
-        """Fids of live rows whose ``col`` value is <= ``val``."""
-        sel = self._alive[: self._n] & (self._cols[col][: self._n] <= val)
-        return self._fids[: self._n][sel]
 
 
 def _age_predicates(policy: PolicyDefinition

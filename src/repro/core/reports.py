@@ -1,9 +1,9 @@
 """`rbh-report` / `rbh-find` / `rbh-du` clones (C6, C9) — answer from the DB.
 
-All queries here run against the catalog (vectorized column masks) or the
-pre-aggregated stats — never against the filesystem, which is the paper's
-point: *"all these metadata queries do not generate extra load on the
-filesystem"*.
+All queries here run against the catalog (vectorized column masks), the
+pre-aggregated stats, or the on-device profile cube — never against the
+filesystem, which is the paper's point: *"all these metadata queries do not
+generate extra load on the filesystem"*.
 """
 from __future__ import annotations
 
@@ -14,14 +14,15 @@ import numpy as np
 
 from .catalog import Catalog
 from .policy import Expr, parse_expr
-from .stats import StatsAggregator
+from .profiles import ProfileCube
+from .stats import DirUsage, StatsAggregator
 from .types import FsType, format_size
 
 
 class _PathIndex:
     """Sorted path column + subtree prefix sums for O(log n) ``du``.
 
-    Built once per catalog version: every path under ``prefix/`` is
+    Built once per **shard** version: every path under ``prefix/`` is
     contiguous in the sorted order — bounded below by ``prefix + "/"`` and
     above by ``prefix + "0"`` ('0' is the successor of '/') — so a subtree
     aggregate is two binary searches into precomputed prefix sums instead
@@ -59,27 +60,70 @@ class _PathIndex:
 
 class Reports:
     def __init__(self, catalog: Catalog, stats: Optional[StatsAggregator] = None,
-                 clock=time.time) -> None:
+                 clock=time.time, profiles: Optional[ProfileCube] = None
+                 ) -> None:
         self.catalog = catalog
         self.stats = stats
+        self.profiles = profiles
         self.clock = clock
-        self._pindex: Optional[_PathIndex] = None
-        self._pindex_version = -1
+        # one path index per shard, rebuilt only when THAT shard's version
+        # ticked — churn in one shard leaves the other indexes warm
+        self._pindexes: Dict[int, _PathIndex] = {}
+        self._pversions: Dict[int, int] = {}
+        self.index_rebuilds = 0
 
-    def _path_index(self) -> _PathIndex:
-        """(Re)build the sorted path index when the catalog changed."""
-        version = self.catalog.version
-        if self._pindex is None or self._pindex_version != version:
-            self._pindex = _PathIndex(self.catalog.arrays())
-            self._pindex_version = version
-        return self._pindex
+    def _shard_indexes(self) -> List[_PathIndex]:
+        """(Re)build the per-shard sorted path indexes that went stale.
+
+        A rebuild snapshots only the columns the index reads (type/size/
+        blocks + the path gather) — not the shard's full column stack.
+        """
+        out = []
+        for sid, shard in enumerate(self.catalog.shards):
+            version = shard.version
+            if self._pversions.get(sid) != version:
+                cols, snap = shard.snapshot(names=("type", "size", "blocks"))
+                cols["_paths"] = snap.gather("_paths")  # type: ignore
+                self._pindexes[sid] = _PathIndex(cols)
+                self._pversions[sid] = version
+                self.index_rebuilds += 1
+            out.append(self._pindexes[sid])
+        return out
 
     # -- rbh-report ---------------------------------------------------------------
-    def report_user(self, user: str) -> List[dict]:
-        """O(1) per-user summary (pre-aggregated)."""
+    def _backend(self):
+        if self.profiles is not None:
+            return self.profiles
         if self.stats is None:
-            raise RuntimeError("stats aggregator not attached")
-        return self.stats.report_user(user)
+            raise RuntimeError("no stats aggregator or profile cube attached")
+        return self.stats
+
+    def report_user(self, user: str) -> List[dict]:
+        """O(1) per-user summary (pre-aggregated / profile cube)."""
+        return self._backend().report_user(user)
+
+    def report_group(self, grp: str) -> List[dict]:
+        return self._backend().report_group(grp)
+
+    def report_types(self) -> Dict[str, dict]:
+        return self._backend().report_types()
+
+    def report_hsm(self) -> Dict[str, dict]:
+        return self._backend().report_hsm()
+
+    def user_size_profile(self, user: str) -> Dict[str, int]:
+        return self._backend().user_size_profile(user)
+
+    def top_users(self, by: str = "volume", k: int = 10,
+                  type_: FsType = FsType.FILE) -> List[dict]:
+        return self._backend().top_users(by=by, k=k, type_=type_)
+
+    def age_profile(self, user: Optional[str] = None) -> Dict[str, dict]:
+        """Data-age profile (profile-cube only — the scalar aggregator
+        keeps no age axis)."""
+        if self.profiles is None:
+            raise RuntimeError("age profiles need an attached ProfileCube")
+        return self.profiles.age_profile(user)
 
     def format_user_report(self, user: str) -> str:
         rows = self.report_user(user)
@@ -106,18 +150,28 @@ class Reports:
     def du(self, path_prefix: str) -> dict:
         """DB-backed `du -s`: subtree aggregate via sorted-prefix-range.
 
-        The old implementation ran a per-path Python generator
-        (``np.fromiter`` over ``startswith``) on every call; this one
-        answers from a sorted path index + prefix sums cached per
-        :attr:`Catalog.version` — two binary searches per query, rebuild
-        only after catalog churn (see ``benchmarks/bench_find_du.py``).
+        Answers from per-shard sorted path indexes + prefix sums cached
+        per :attr:`CatalogShard.version` — two binary searches per shard
+        per query, rebuilding only the indexes of shards that churned
+        (see ``benchmarks/bench_find_du.py``).
         """
-        return self._path_index().du(path_prefix)
+        out = {"count": 0, "files": 0, "volume": 0, "spc_used": 0}
+        for index in self._shard_indexes():
+            part = index.du(path_prefix)
+            for k in out:
+                out[k] += part[k]
+        return out
 
     def du_many(self, path_prefixes: List[str]) -> List[dict]:
-        """Batched `du -s`: one index build amortized over many subtrees."""
-        index = self._path_index()
-        return [index.du(p) for p in path_prefixes]
+        """Batched `du -s`: one index refresh amortized over many subtrees."""
+        self._shard_indexes()
+        return [self.du(p) for p in path_prefixes]
+
+    def bind_dir_usage(self, du: DirUsage) -> DirUsage:
+        """Route a :class:`DirUsage`'s deeper-than-``max_depth`` queries to
+        the index-backed :meth:`du` (the documented depth contract)."""
+        du.deep_du = self.du
+        return du
 
     # -- top-N listings (paper SII-B3) ----------------------------------------------
     def top_files(self, by: str = "size", k: int = 10,

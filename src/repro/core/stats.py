@@ -15,6 +15,12 @@ Counter updates can run **synchronously** (paper default; measurably slows
 ingest) or be drained **asynchronously** by a background thread from a
 bounded delta queue (the paper's proposed fix; stats lag slightly but ingest
 is faster) — both modes are benchmarked in ``benchmarks/bench_changelog.py``.
+
+The scalar per-record dict fold here is the **differential oracle** for the
+on-device analytics subsystem (:class:`~repro.core.profiles.ProfileCube`):
+pass ``cube=`` to serve every report from the incrementally-maintained
+profile cube instead (deltas forward to it, reports reduce over it), while
+this scalar path stays available for byte-identical cross-checks.
 """
 from __future__ import annotations
 
@@ -52,9 +58,16 @@ class StatsAggregator:
     """O(1) pre-aggregated stats, keyed per user/group/type/hsm-state/size-bin."""
 
     def __init__(self, strings, async_mode: bool = False,
-                 queue_size: int = 1 << 16) -> None:
+                 queue_size: int = 1 << 16, cube=None) -> None:
         self.strings = strings
         self._lock = threading.Lock()
+        # cube-backed mode: deltas forward to the ProfileCube, reports
+        # reduce over it — the scalar dicts below then stay empty. The
+        # forwarding hook becomes the cube's one delta feed (wiring
+        # attach() as well would double-count; claiming it here raises).
+        self._cube = cube
+        if cube is not None:
+            cube.claim_delta_feed("StatsAggregator(cube=...)")
         # (owner_code, type) -> _Acc ; (group_code, type) -> _Acc ; type -> _Acc
         self.per_user: Dict[Tuple[int, int], _Acc] = defaultdict(_Acc)
         self.per_group: Dict[Tuple[int, int], _Acc] = defaultdict(_Acc)
@@ -62,7 +75,7 @@ class StatsAggregator:
         self.per_hsm: Dict[int, _Acc] = defaultdict(_Acc)
         # (owner_code, size_bucket) -> count : per-user file size profile
         self.size_profile: Dict[Tuple[int, int], int] = defaultdict(int)
-        self.total = _Acc()
+        self._total = _Acc()
         self.async_mode = async_mode
         self._q: Optional[queue.Queue] = None
         self._drainer: Optional[threading.Thread] = None
@@ -99,25 +112,41 @@ class StatsAggregator:
             self._drainer.join(timeout=5)
 
     def _apply(self, old, new) -> None:
+        if self._cube is not None:
+            self._cube.on_delta(old, new)
+            return
         with self._lock:
             if old is not None:
                 self._fold(-1, *old)
             if new is not None:
                 self._fold(+1, *new)
 
-    def _fold(self, sign: int, owner: int, group: int, type_: int,
-              size: int, blocks: int, hsm: int) -> None:
+    def _fold(self, sign: int, fid: int, owner: int, group: int, type_: int,
+              size: int, blocks: int, hsm: int, atime: float) -> None:
+        # fid/atime ride the Delta for the profile cube (shard routing +
+        # age buckets); the flat scalar counters ignore them
         self.per_user[(owner, type_)].add(sign, size, blocks)
         self.per_group[(group, type_)].add(sign, size, blocks)
         self.per_type[type_].add(sign, size, blocks)
         self.per_hsm[hsm].add(sign, size, blocks)
-        self.total.add(sign, size, blocks)
+        self._total.add(sign, size, blocks)
         if type_ == int(FsType.FILE):
             self.size_profile[(owner, size_profile_bucket(size))] += sign
+
+    @property
+    def total(self) -> _Acc:
+        if self._cube is not None:
+            acc = _Acc()
+            count, volume, spc = self._cube.totals()
+            acc.count, acc.volume, acc.spc_used = count, volume, spc
+            return acc
+        return self._total
 
     # -- O(1) report queries -----------------------------------------------------
     def report_user(self, user: str) -> List[dict]:
         """`rbh-report -u user`: per-type count/volume/avg — O(#types)."""
+        if self._cube is not None:
+            return self._cube.report_user(user)
         code = self.strings.code_of(user)
         if code is None:
             return []
@@ -132,6 +161,8 @@ class StatsAggregator:
         return out
 
     def report_group(self, grp: str) -> List[dict]:
+        if self._cube is not None:
+            return self._cube.report_group(grp)
         code = self.strings.code_of(grp)
         if code is None:
             return []
@@ -146,16 +177,22 @@ class StatsAggregator:
         return out
 
     def report_types(self) -> Dict[str, dict]:
+        if self._cube is not None:
+            return self._cube.report_types()
         with self._lock:
             return {FsType(t).name.lower(): a.as_dict()
                     for t, a in self.per_type.items() if a.count}
 
     def report_hsm(self) -> Dict[str, dict]:
+        if self._cube is not None:
+            return self._cube.report_hsm()
         with self._lock:
             return {HsmState(h).name.lower(): a.as_dict()
                     for h, a in self.per_hsm.items() if a.count}
 
     def user_size_profile(self, user: str) -> Dict[str, int]:
+        if self._cube is not None:
+            return self._cube.user_size_profile(user)
         code = self.strings.code_of(user)
         out = {lbl: 0 for lbl in SIZE_PROFILE_LABELS}
         if code is None:
@@ -169,6 +206,8 @@ class StatsAggregator:
     def top_users(self, by: str = "volume", k: int = 10,
                   type_: FsType = FsType.FILE) -> List[dict]:
         """Rank users without scanning entries (aggregates only)."""
+        if self._cube is not None:
+            return self._cube.top_users(by=by, k=k, type_=type_)
         with self._lock:
             rows = []
             for (ucode, t), acc in self.per_user.items():
@@ -216,10 +255,21 @@ class DirUsage:
     Makes ``du`` at shallow namespace levels O(1): each file delta is
     propagated to its ancestor directories (bounded by ``max_depth``).
     Ancestors are resolved from entry paths, so no catalog walk is needed.
+
+    **Depth contract**: attribution stops at ``max_depth`` path components
+    — a directory deeper than that accumulates nothing, so a naive lookup
+    there would silently report zero usage and disagree with the
+    index-backed ``Reports.du``. :meth:`du` therefore routes queries
+    deeper than ``max_depth`` to ``deep_du`` (wire it to ``Reports.du``
+    via :meth:`Reports.bind_dir_usage`) and raises if no deep path is
+    bound, rather than returning a silently-truncated answer.
     """
 
-    def __init__(self, max_depth: int = 3) -> None:
+    def __init__(self, max_depth: int = 3, deep_du=None) -> None:
         self.max_depth = max_depth
+        # fallback for paths deeper than max_depth: callable(path) -> dict
+        # in Reports.du shape ({count, files, volume, spc_used})
+        self.deep_du = deep_du
         self._lock = threading.Lock()
         self.usage: Dict[str, _Acc] = defaultdict(_Acc)
 
@@ -237,7 +287,21 @@ class DirUsage:
                 self.usage[d].add(sign, size, blocks)
 
     def du(self, path: str) -> dict:
-        path = "/" + "/".join(p for p in path.split("/") if p) if path != "/" else "/"
+        parts = [p for p in path.split("/") if p]
+        path = "/" + "/".join(parts) if parts else "/"
+        if len(parts) > self.max_depth:
+            # counters were never attributed this deep — answer from the
+            # sorted-prefix-range index instead of a silent zero
+            if self.deep_du is None:
+                raise ValueError(
+                    f"path {path!r} is deeper than max_depth="
+                    f"{self.max_depth} and no deep_du fallback is bound "
+                    "(see Reports.bind_dir_usage)")
+            deep = self.deep_du(path)
+            files = deep.get("files", deep.get("count", 0))
+            return {"count": files, "volume": deep["volume"],
+                    "spc_used": deep["spc_used"],
+                    "avg_size": deep["volume"] / files if files else 0.0}
         with self._lock:
             return self.usage[path].as_dict() if path in self.usage else \
                 {"count": 0, "volume": 0, "spc_used": 0, "avg_size": 0.0}

@@ -113,6 +113,32 @@ SIZE_PROFILE_LABELS = (
     "32G~1T", "+1T",
 )
 
+# Age-profile buckets (paper: "overall statistics about data ownership, age
+# and size profiles"). Ages are ``now - atime`` seconds; an entry's bucket
+# is the largest i with age >= AGE_PROFILE_EDGES[i] (clipped to bucket 0
+# for future timestamps).
+AGE_PROFILE_EDGES = (
+    0.0, 3600.0, 86400.0, 7 * 86400.0, 30 * 86400.0, 90 * 86400.0,
+    365 * 86400.0,
+)
+AGE_PROFILE_LABELS = (
+    "<1h", "1h~1d", "1d~7d", "7d~30d", "30d~90d", "90d~1y", "+1y",
+)
+
+
+def age_profile_bucket(age: float) -> int:
+    """Index of ``age`` (seconds) in the age-profile histogram.
+
+    Shares the comparison-count formula with the ``profile_cube`` kernel:
+    ``clip(sum(age >= edge) - 1, 0, A-1)`` — future timestamps (negative
+    age) land in bucket 0.
+    """
+    b = -1
+    for e in AGE_PROFILE_EDGES:
+        if age >= e:
+            b += 1
+    return max(b, 0)
+
 
 def size_profile_bucket(size: int) -> int:
     """Index of ``size`` in the robinhood size-profile histogram."""

@@ -12,6 +12,9 @@ Kernels:
 
 * ``policy_scan``     — columnar predicate-program evaluation + aggregation
   (the TPU-native analogue of the paper's DB table scan, C1+C6);
+* ``profile_cube``    — fused bucketize + one-hot-matmul segment reduction
+  producing the ownership/age/size profile cube (the paper's C6 report
+  tables) in a single launch;
 * ``paged_attention`` — decode attention over non-contiguous KV pages (the
   hot tier of the HSM-style KV cache);
 * ``rglru_scan``      — RG-LRU sequential recurrence (recurrentgemma);

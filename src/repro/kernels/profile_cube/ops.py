@@ -1,0 +1,90 @@
+"""Public profile-cube op: packs columns, pads, dispatches kernel/oracle.
+
+``profile_cube`` turns four aligned columns (dense group id, size, blocks,
+age-in-seconds) into the (3, B, S, A) count/volume/spc_used cube in one
+launch. Rows are padded to the tile with an all-invalid pad; the group
+axis is padded to the sublane multiple and sliced back.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import LANE, profile_cube_pallas
+from .ref import A_BUCKETS, N_MEASURES, S_BUCKETS, profile_cube_ref
+
+# The (B, tile) gid one-hot must stay within a sane VMEM budget; catalogs
+# with more distinct (owner, group, type, hsm) combinations take the host
+# groupby path (see core.profiles).
+MAX_GROUPS = 4096
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("n_groups", "use_kernel", "tile",
+                                   "prebucketed"))
+def _profile_cube_jit(cols: jax.Array, n_groups: int, use_kernel: bool,
+                      tile: int, prebucketed: bool) -> jax.Array:
+    """cols: (5|7, N) f32 rows [gid, size, blocks, age, (sb, ab,) valid]."""
+    n = cols.shape[1]
+    valid_col = 6 if prebucketed else 4
+    sb_col, ab_col = (4, 5) if prebucketed else (-1, -1)
+    pad_n = (-n) % tile
+    if pad_n:
+        cols = jnp.pad(cols, ((0, 0), (0, pad_n)))    # pad rows read valid=0
+    pad_b = (-n_groups) % 8                           # f32 sublane multiple
+    bp = n_groups + pad_b
+    if use_kernel:
+        cube = profile_cube_pallas(cols, n_groups=bp, valid_col=valid_col,
+                                   sb_col=sb_col, ab_col=ab_col,
+                                   tile=tile, interpret=not _on_tpu())
+        cube = cube.reshape(N_MEASURES, bp, S_BUCKETS, A_BUCKETS)
+    else:
+        cube = profile_cube_ref(cols, bp, valid_col=valid_col,
+                                sb_col=sb_col, ab_col=ab_col)
+    return cube[:, :n_groups]
+
+
+def profile_cube(gid, size, blocks, age, n_groups: int, valid=None,
+                 sb=None, ab=None, use_kernel: Optional[bool] = None,
+                 tile: int = 8 * LANE) -> np.ndarray:
+    """Fused bucketize + segment-reduce over aligned entry columns.
+
+    Returns the (N_MEASURES, n_groups, S_BUCKETS, A_BUCKETS) f32 cube:
+    measure 0 counts, 1 sums ``size``, 2 sums ``blocks``; rows land in
+    ``[gid, size_profile_bucket(size), age_profile_bucket(age)]``.
+
+    ``sb``/``ab`` (optional) are precomputed bucket-index columns: pass
+    them when raw sizes/ages exceed the f32 integer range (~2**24), where
+    the on-device cast could round a value across a bucket edge —
+    ``core.profiles`` always does, so bucket assignment matches its int64
+    tables exactly. ``use_kernel=None`` selects the Pallas kernel on TPU
+    and the jitted scatter-add oracle elsewhere (the kernel stays
+    exercised off-TPU via interpret mode in tests). Sums are f32 — exact
+    for integer measures up to 2**24 per cell; the incremental host path
+    in ``core.profiles`` keeps int64 precision end-to-end.
+    """
+    if n_groups > MAX_GROUPS:
+        raise ValueError(f"n_groups={n_groups} exceeds the on-device cap "
+                         f"{MAX_GROUPS}; use the host groupby path")
+    n = len(np.asarray(gid))
+    if n_groups <= 0 or n == 0:
+        return np.zeros((N_MEASURES, max(n_groups, 0), S_BUCKETS, A_BUCKETS),
+                        np.float32)
+    if valid is None:
+        valid = np.ones(n, np.float32)
+    prebucketed = sb is not None and ab is not None
+    parts = (gid, size, blocks, age, sb, ab, valid) if prebucketed \
+        else (gid, size, blocks, age, valid)
+    cols = jnp.stack([jnp.asarray(np.asarray(c), jnp.float32)
+                      for c in parts], axis=0)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    return np.asarray(_profile_cube_jit(cols, n_groups, use_kernel, tile,
+                                        prebucketed))

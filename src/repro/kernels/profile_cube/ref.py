@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the fused profile-cube kernel.
+
+The *profile cube* is the paper's "synthetic understanding of file systems
+contents" as one dense tensor: count / volume / spc_used histograms
+bucketed by profile group (a dense code for one (owner, group, type,
+hsm_state) combination) × size-profile bucket × age bucket. One columnar
+pass bucketizes every row and segment-reduces the three measures — the
+on-device replacement for N scalar dict folds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_MEASURES = 3       # count, volume (bytes), spc_used (allocated bytes)
+S_BUCKETS = 10       # size-profile buckets (core.types.SIZE_PROFILE_EDGES)
+A_BUCKETS = 7        # age-profile buckets (core.types.AGE_PROFILE_EDGES)
+
+# bucket edges — static mirrors of core.types.SIZE_PROFILE_EDGES /
+# AGE_PROFILE_EDGES (kernels capture python floats, not arrays)
+SIZE_EDGE_VALS = (0.0, 1.0, 32.0, float(1 << 10), float(32 << 10),
+                  float(1 << 20), float(32 << 20), float(1 << 30),
+                  float(32 << 30), float(1 << 40))
+AGE_EDGE_VALS = (0.0, 3600.0, 86400.0, 7 * 86400.0, 30 * 86400.0,
+                 90 * 86400.0, 365 * 86400.0)
+
+
+def size_buckets(size: jax.Array) -> jax.Array:
+    """(N,) f32 sizes -> (N,) i32 size-profile bucket indices."""
+    b = sum((size >= e).astype(jnp.int32) for e in SIZE_EDGE_VALS) - 1
+    return jnp.clip(b, 0, S_BUCKETS - 1)
+
+
+def age_buckets(age: jax.Array) -> jax.Array:
+    """(N,) f32 ages (seconds) -> (N,) i32 age-profile bucket indices."""
+    b = sum((age >= e).astype(jnp.int32) for e in AGE_EDGE_VALS) - 1
+    return jnp.clip(b, 0, A_BUCKETS - 1)
+
+
+def profile_cube_ref(cols: jax.Array, n_groups: int, gid_col: int = 0,
+                     size_col: int = 1, blocks_col: int = 2,
+                     age_col: int = 3, valid_col: int = -1,
+                     sb_col: int = -1, ab_col: int = -1) -> jax.Array:
+    """Oracle: (N_MEASURES, n_groups, S_BUCKETS, A_BUCKETS) f32 cube.
+
+    cols: (n_cols, N) f32 with rows [gid, size, blocks, age(, valid)].
+    Invalid rows contribute nothing (their gid may be garbage — the 0
+    weight masks them out of the scatter). ``sb_col``/``ab_col`` point at
+    precomputed bucket-index columns (exact host bucketization); -1
+    bucketizes from the raw size/age columns.
+    """
+    gid = cols[gid_col].astype(jnp.int32)
+    size = cols[size_col]
+    blocks = cols[blocks_col]
+    age = cols[age_col]
+    valid = cols[valid_col] if valid_col >= 0 \
+        else jnp.ones_like(size)
+    sb = cols[sb_col].astype(jnp.int32) if sb_col >= 0 else size_buckets(size)
+    sb = jnp.clip(sb, 0, S_BUCKETS - 1)
+    ab = cols[ab_col].astype(jnp.int32) if ab_col >= 0 else age_buckets(age)
+    ab = jnp.clip(ab, 0, A_BUCKETS - 1)
+    flat = (jnp.clip(gid, 0, n_groups - 1) * S_BUCKETS + sb) * A_BUCKETS + ab
+    k = n_groups * S_BUCKETS * A_BUCKETS
+    count = jnp.zeros((k,), jnp.float32).at[flat].add(valid)
+    volume = jnp.zeros((k,), jnp.float32).at[flat].add(valid * size)
+    spc = jnp.zeros((k,), jnp.float32).at[flat].add(valid * blocks)
+    return jnp.stack([count, volume, spc]).reshape(
+        N_MEASURES, n_groups, S_BUCKETS, A_BUCKETS)

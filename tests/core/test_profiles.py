@@ -1,0 +1,345 @@
+"""Profile-cube analytics subsystem: differential + property suites.
+
+The scalar ``StatsAggregator`` dict fold is the oracle: the cube —
+maintained incrementally via signed bucket updates, rebuilt from shard
+snapshots on the host, or rebuilt through the Pallas kernel (interpret
+mode off-TPU) — must produce byte-identical report dicts, across catalog
+churn and age-bucket rollover instants.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AGE_PROFILE_EDGES, Catalog, Entry, FsType, HsmState,
+                        ProfileCube, Reports, StatsAggregator,
+                        age_profile_bucket)
+
+NOW = 1_700_000_000.0
+
+# f32-exact sizes: small ints plus exact powers of two for the top buckets
+# (the kernel path sums in f32; the host paths are int64 end-to-end)
+SIZES = [0, 1, 31, 100, 2048, 50 << 10, 1 << 20, 1 << 25, 1 << 30,
+         1 << 35, 1 << 41]
+OWNERS = [f"u{i}" for i in range(6)]
+GROUPS = [f"g{i}" for i in range(3)]
+
+
+class _Clock:
+    def __init__(self, t=NOW):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def _rand_entry(rng, fid):
+    return Entry(
+        fid=fid, name=f"f{fid}", path=f"/d{fid % 5}/f{fid}",
+        type=FsType(int(rng.integers(0, 3))),
+        size=int(rng.choice(SIZES)), blocks=int(rng.integers(0, 4096)),
+        owner=str(rng.choice(OWNERS)), group=str(rng.choice(GROUPS)),
+        hsm_state=HsmState(int(rng.integers(0, 5))),
+        atime=NOW - float(rng.uniform(-10, 400 * 86400)))
+
+
+def _build(seed, n=600, n_shards=3, churn=0.2):
+    rng = np.random.default_rng(seed)
+    clock = _Clock()
+    cat = Catalog(n_shards=n_shards)
+    scalar = StatsAggregator(cat.strings)
+    cat.add_delta_hook(scalar.on_delta)
+    cube = ProfileCube(cat, clock=clock).attach()   # incremental from empty
+    for i in range(n):
+        cat.upsert(_rand_entry(rng, i + 1))
+    for fid in (rng.choice(n, int(n * churn), replace=False) + 1).tolist():
+        if fid % 3 == 0:
+            cat.remove(fid)
+        else:
+            cat.update_fields(fid, size=int(rng.choice(SIZES)),
+                              atime=NOW - float(rng.uniform(0, 100 * 86400)))
+    return cat, scalar, cube, clock
+
+
+def _assert_reports_equal(a, b):
+    """Byte-identical report dicts across every rbh-report surface."""
+    for u in OWNERS:
+        assert a.report_user(u) == b.report_user(u)
+        assert a.user_size_profile(u) == b.user_size_profile(u)
+    for g in GROUPS:
+        assert a.report_group(g) == b.report_group(g)
+    assert a.report_types() == b.report_types()
+    assert a.report_hsm() == b.report_hsm()
+    top_a = {(d["user"], d["count"], d["volume"], d["spc_used"])
+             for d in a.top_users(k=100)}
+    top_b = {(d["user"], d["count"], d["volume"], d["spc_used"])
+             for d in b.top_users(k=100)}
+    assert top_a == top_b
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_incremental_cube_matches_scalar_oracle(seed):
+    _cat, scalar, cube, _clock = _build(seed)
+    _assert_reports_equal(cube, scalar)
+    assert cube.totals()[0] == scalar.total.count
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_host_rebuild_and_kernel_rebuild_match_incremental(seed):
+    cat, scalar, cube, clock = _build(seed)
+    host = ProfileCube(cat, clock=clock)
+    host.rebuild(use_kernel=False)
+    _assert_reports_equal(host, scalar)
+    kern = ProfileCube(cat, clock=clock)
+    kern.rebuild(use_kernel=True)       # Pallas interpret mode off-TPU
+    _assert_reports_equal(kern, scalar)
+    _assert_reports_equal(kern, cube)
+
+
+def test_age_rollover_matches_fresh_rebuild():
+    """Advancing the clock moves entries across age buckets with no delta
+    arriving — the rollover schedule must agree with a from-scratch
+    rebuild at the same instant, including exact boundary times."""
+    cat, _scalar, cube, clock = _build(4, n=300)
+    base = cube.age_profile(now=clock.t)
+    for dt in (3600.0, 86400.0, 7 * 86400.0 + 1, 300 * 86400.0):
+        at = NOW + dt
+        fresh = ProfileCube(cat, clock=_Clock(at))
+        fresh.rebuild(use_kernel=False)
+        assert cube.age_profile(now=at) == fresh.age_profile(now=at)
+    assert cube.rollovers > 0
+    # volumes conserved across rollovers, only re-bucketed
+    end = cube.age_profile(now=NOW + 300 * 86400.0)
+    assert sum(d["volume"] for d in end.values()) == \
+        sum(d["volume"] for d in base.values())
+
+
+def test_statsaggregator_rebuilt_on_cube():
+    """StatsAggregator(cube=...) serves every report from the cube."""
+    clock = _Clock()
+    cat = Catalog(n_shards=2)
+    oracle = StatsAggregator(cat.strings)
+    cat.add_delta_hook(oracle.on_delta)
+    cube = ProfileCube(cat, clock=clock)
+    cube_stats = StatsAggregator(cat.strings, cube=cube)
+    cat.add_delta_hook(cube_stats.on_delta)
+    rng = np.random.default_rng(5)
+    for i in range(200):
+        cat.upsert(_rand_entry(rng, i + 1))
+    cat.remove(7)
+    _assert_reports_equal(cube_stats, oracle)
+    assert cube_stats.total.count == oracle.total.count
+    assert cube_stats.total.volume == oracle.total.volume
+    rep = Reports(cat, stats=None, profiles=cube, clock=clock)
+    assert rep.report_user("u1") == oracle.report_user("u1")
+    assert "u1" in rep.format_user_report("u1")
+    assert sum(d["count"] for d in rep.age_profile().values()) == \
+        oracle.total.count
+
+
+def test_persistence_and_trend_roundtrip(tmp_path):
+    cat, scalar, cube, clock = _build(6, n=250)
+    path = str(tmp_path / "cat.db.profiles.npz")
+    cube.save(path)
+    restored = ProfileCube(cat, clock=clock).attach(resume=True, path=path)
+    _assert_reports_equal(restored, scalar)
+    # restored state keeps rolling over and folding deltas
+    cat.update_fields(11, size=1 << 20, atime=NOW)
+    later = NOW + 40 * 86400.0
+    fresh = ProfileCube(cat, clock=_Clock(later))
+    fresh.rebuild(use_kernel=False)
+    assert restored.age_profile(now=later) == fresh.age_profile(now=later)
+    # trend snapshots append
+    tpath = str(tmp_path / "trend.npz")
+    cube.record_trend(tpath, now=NOW)
+    cube.record_trend(tpath, now=NOW + 60.0)
+    series = ProfileCube.load_trend(tpath)
+    assert series["time"].shape == (2,)
+    assert int(series["count"][0]) == cube.totals()[0]
+    assert series["age_volume"].shape[1] == len(AGE_PROFILE_EDGES)
+    # missing file / shard mismatch -> clean False
+    assert not ProfileCube(cat, clock=clock).load(str(tmp_path / "no.npz"))
+    other = Catalog(n_shards=4)
+    assert not ProfileCube(other, clock=clock).load(path)
+
+
+def test_kernel_rebuild_with_skewed_shard_group_distribution():
+    """A shard whose rows use fewer groups than the global index must
+    still accept the globally-wide kernel cube (regression: broadcast
+    error on skewed owner distributions)."""
+    clock = _Clock()
+    cat = Catalog(n_shards=2)
+    oracle = StatsAggregator(cat.strings)
+    cat.add_delta_hook(oracle.on_delta)
+    # shard 0 (even fids) sees 20 owners; shard 1 (odd fids) only one
+    for i in range(40):
+        fid = 2 * i + 2
+        cat.upsert(Entry(fid=fid, name=f"e{fid}", path=f"/e{fid}",
+                         type=FsType.FILE, size=1000, blocks=1,
+                         owner=f"u{i % 20}", atime=NOW - 50))
+    cat.upsert(Entry(fid=1, name="o", path="/o", type=FsType.FILE,
+                     size=2000, blocks=2, owner="u0", atime=NOW - 50))
+    cube = ProfileCube(cat, clock=clock, use_kernel=True)
+    cube.rebuild()
+    assert cube.report_user("u0") == oracle.report_user("u0")
+    assert cube.totals()[0] == oracle.total.count
+
+
+def test_kernel_rebuild_exact_at_bucket_boundaries():
+    """Sizes/ages that f32 would round across a bucket edge (e.g.
+    (1<<30)-1 -> 2**30) must land in the host-computed bucket: the kernel
+    receives precomputed bucket-index columns from ProfileCube."""
+    clock = _Clock()
+    cat = Catalog(n_shards=2)
+    oracle = StatsAggregator(cat.strings)
+    cat.add_delta_hook(oracle.on_delta)
+    boundary_sizes = [(1 << 30) - 1, (1 << 20) - 1, (32 << 20) - 1,
+                      (1 << 40) - 1]
+    year = 365 * 86400.0
+    for i, size in enumerate(boundary_sizes):
+        # one entry per owner -> one row per cube cell -> f32 sums exact
+        cat.upsert(Entry(fid=i + 1, name=f"b{i}", path=f"/b{i}",
+                         type=FsType.FILE, size=size, blocks=1,
+                         owner=f"edge{i}", atime=NOW - (year - 1.0)))
+    kern = ProfileCube(cat, clock=clock, use_kernel=True)
+    kern.rebuild()
+    for i in range(len(boundary_sizes)):
+        u = f"edge{i}"
+        # bucket placement and counts are exact (volume sums remain f32 —
+        # the kernel's documented precision envelope)
+        assert kern.user_size_profile(u) == oracle.user_size_profile(u), u
+        ks = [(d["count"], d["spc_used"], d["type"])
+              for d in kern.report_user(u)]
+        os_ = [(d["count"], d["spc_used"], d["type"])
+               for d in oracle.report_user(u)]
+        assert ks == os_, u
+    # all ages sit just under the 1-year edge: none may round into "+1y"
+    assert kern.age_profile()["+1y"]["count"] == 0
+    # and the cube stays consistent with its own tables across churn
+    cat.add_delta_hook(kern.on_delta)
+    cat.remove(1)
+    assert kern.report_user("edge0") == oracle.report_user("edge0") == []
+    assert (kern.cube()[0] >= 0).all()
+
+
+def test_single_delta_feed_guard():
+    """attach() and StatsAggregator(cube=...) are mutually exclusive —
+    both would fold every mutation twice."""
+    cat = Catalog(n_shards=2)
+    cube = ProfileCube(cat, clock=_Clock()).attach()
+    with pytest.raises(ValueError):
+        StatsAggregator(cat.strings, cube=cube)
+    with pytest.raises(ValueError):
+        cube.attach()
+    cube2 = ProfileCube(cat, clock=_Clock())
+    StatsAggregator(cat.strings, cube=cube2)
+    with pytest.raises(ValueError):
+        cube2.attach()
+
+
+def test_fidtable_duplicate_fids_and_gather():
+    """Duplicate fids in one upsert_many share one row (last write wins),
+    matching the dict-based table this replaced."""
+    from repro.core import FidTable
+    t = FidTable((("v", np.float64),))
+    t.upsert_many([5, 5, 9], v=np.array([1.0, 2.0, 3.0]))
+    assert len(t) == 2
+    fids, cols = t.live()
+    assert sorted(fids.tolist()) == [5, 9]
+    assert dict(zip(fids.tolist(), cols["v"].tolist())) == {5: 2.0, 9: 3.0}
+    # bulk base + overlay lookups agree; removal + re-add reuses cleanly
+    t.bulk_load(np.array([1, 2, 3]), v=np.array([0.1, 0.2, 0.3]))
+    t.remove_many([2])
+    t.upsert_many([2, 4, 4], v=np.array([9.0, 7.0, 8.0]))
+    present, cols = t.gather([1, 2, 4, 99])
+    assert present.tolist() == [True, True, True, False]
+    assert cols["v"].tolist() == [0.1, 9.0, 8.0, 0.0]
+    assert len(t) == 4
+    assert sorted(t.select_le("v", 0.3).tolist()) == [1, 3]
+
+
+def test_age_bucket_scalar_vector_parity():
+    from repro.core.profiles import age_buckets_np, size_buckets_np
+    from repro.core.types import size_profile_bucket
+    ages = np.array([-5.0, 0.0, 1.0, 3600.0, 3599.9, 86400.0,
+                     365 * 86400.0, 4e9])
+    assert age_buckets_np(ages).tolist() == \
+        [age_profile_bucket(a) for a in ages.tolist()]
+    sizes = np.array(SIZES + [5, 1 << 42], dtype=np.int64)
+    assert size_buckets_np(sizes).tolist() == \
+        [size_profile_bucket(int(s)) for s in sizes.tolist()]
+
+
+# ---------------------------------------------------------------------------
+# property: incremental signed-delta maintenance == full recompute across
+# random mutation sequences, including age-bucket rollover instants
+# ---------------------------------------------------------------------------
+
+def _run_mutation_sequence(ops):
+    clock = _Clock()
+    cat = Catalog(n_shards=2)
+    scalar = StatsAggregator(cat.strings)
+    cat.add_delta_hook(scalar.on_delta)
+    cube = ProfileCube(cat, clock=clock).attach()
+    live = set()
+    for kind, fseed, sizei, dt in ops:
+        fid = 100 + fseed
+        if kind == "ins" or (kind in ("upd", "del") and not live):
+            live.add(fid)
+            cat.upsert(Entry(fid=fid, name=f"f{fid}", path=f"/p/f{fid}",
+                             type=FsType(fid % 3), size=SIZES[sizei],
+                             blocks=SIZES[sizei],
+                             owner=OWNERS[fid % len(OWNERS)],
+                             group=GROUPS[fid % len(GROUPS)],
+                             atime=clock.t - dt))
+        elif kind == "upd":
+            fid = sorted(live)[fseed % len(live)]
+            cat.update_fields(fid, size=SIZES[sizei], atime=clock.t - dt)
+        elif kind == "del":
+            fid = sorted(live)[fseed % len(live)]
+            live.discard(fid)
+            cat.remove(fid)
+        elif kind == "tick":
+            clock.t += dt
+        else:  # "edge": jump to an exact rollover boundary of a live entry
+            if live:
+                fid = sorted(live)[fseed % len(live)]
+                e = cat.get(fid)
+                if e is not None:
+                    edge = AGE_PROFILE_EDGES[fseed % len(AGE_PROFILE_EDGES)]
+                    clock.t = max(clock.t, e.atime + edge)
+    fresh = ProfileCube(cat, clock=clock)
+    fresh.rebuild(use_kernel=False)
+    _assert_reports_equal(cube, scalar)
+    _assert_reports_equal(cube, fresh)
+    assert cube.age_profile() == fresh.age_profile()
+    assert cube.totals() == fresh.totals()
+
+
+def test_mutation_sequence_with_exact_boundary_instants():
+    """Deterministic rollover-boundary sequence (runs without hypothesis)."""
+    _run_mutation_sequence([
+        ("ins", 0, 5, 10.0), ("ins", 1, 8, 3600.0), ("edge", 0, 0, 0.0),
+        ("tick", 0, 0, 86400.0), ("upd", 1, 3, 0.0), ("edge", 3, 0, 0.0),
+        ("del", 0, 0, 0.0), ("ins", 2, 9, 40 * 86400.0),
+        ("edge", 2, 0, 0.0), ("tick", 0, 0, 400 * 86400.0),
+    ])
+
+
+@pytest.mark.slow
+def test_property_incremental_equals_recompute():
+    st = pytest.importorskip("hypothesis.strategies")
+    from hypothesis import given, settings
+
+    ops_strategy = st.lists(
+        st.tuples(st.sampled_from(["ins", "upd", "del", "tick", "edge"]),
+                  st.integers(0, 39),                    # fid seed
+                  st.integers(0, len(SIZES) - 1),        # size choice
+                  st.floats(0, 100 * 86400,
+                            allow_nan=False)),           # age / advance
+        min_size=1, max_size=60)
+
+    @settings(max_examples=40, deadline=None)
+    @given(ops=ops_strategy)
+    def run(ops):
+        _run_mutation_sequence(ops)
+
+    run()

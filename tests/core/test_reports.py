@@ -1,9 +1,11 @@
 """rbh-report / rbh-find / rbh-du clones + alerts + plugins (C5/C9/C10)."""
 import time
 
-from repro.core import (AlertManager, AlertRule, Catalog, PolicyDefinition,
-                        PolicyEngine, Reports, Scanner, StatsAggregator,
-                        PLUGIN_REGISTRY)
+import pytest
+
+from repro.core import (AlertManager, AlertRule, Catalog, DirUsage, Entry,
+                        FsType, PolicyDefinition, PolicyEngine, Reports,
+                        Scanner, StatsAggregator, PLUGIN_REGISTRY)
 from repro.fs import LustreSim
 
 
@@ -62,6 +64,112 @@ def test_du_index_tracks_catalog_churn():
     assert many[2] == {"count": 0, "files": 0, "volume": 0, "spc_used": 0}
     # prefix is a path-component match, not a string prefix match
     assert rep.du("/proj/lo")["count"] == 0
+
+
+def test_path_index_rebuilds_only_churned_shards():
+    """Per-shard du-index maintenance: churn in one shard leaves the other
+    shards' sorted-prefix-range indexes warm."""
+    cat = Catalog(n_shards=4)
+    for i in range(1, 41):
+        cat.upsert(Entry(fid=i, name=f"f{i}", path=f"/a/f{i}",
+                         type=FsType.FILE, size=100, blocks=100))
+    rep = Reports(cat)
+    assert rep.du("/a")["files"] == 40
+    assert rep.index_rebuilds == 4          # cold build: one per shard
+    # repeat query: all warm
+    rep.du("/a")
+    assert rep.index_rebuilds == 4
+    # mutate one fid -> exactly one shard version ticks -> one rebuild
+    cat.update_fields(8, size=999)
+    assert rep.du("/a")["volume"] == 39 * 100 + 999
+    assert rep.index_rebuilds == 5
+    cat.remove(9)
+    out = rep.du_many(["/a", "/nope"])
+    assert out[0]["files"] == 39 and out[1]["files"] == 0
+    assert rep.index_rebuilds == 6
+
+
+def test_dir_usage_deep_queries_route_to_path_index():
+    """DirUsage.max_depth contract: deeper queries answer from Reports.du
+    instead of a silently-truncated zero."""
+    cat = Catalog(n_shards=2)
+    du = DirUsage(max_depth=2)
+    paths = ["/a/b/c/d/f1", "/a/b/c/f2", "/a/f3"]
+    for i, p in enumerate(paths):
+        cat.upsert(Entry(fid=i + 1, name=p.rsplit("/", 1)[1], path=p,
+                         type=FsType.FILE, size=100, blocks=50))
+        du.on_file(+1, p, 100, 50)
+    rep = Reports(cat)
+    rep.bind_dir_usage(du)
+    # shallow answers stay O(1) from the counters
+    assert du.du("/a")["count"] == 3
+    # deeper than max_depth: routed to the sorted-prefix-range index and
+    # consistent with Reports.du (files == count, volumes agree)
+    deep = du.du("/a/b/c")
+    assert deep["count"] == 2 and deep["volume"] == 200
+    assert deep["volume"] == rep.du("/a/b/c")["volume"]
+    assert du.du("/a/b/c/d")["count"] == 1
+    # unbound DirUsage refuses instead of silently reporting zero
+    with pytest.raises(ValueError):
+        DirUsage(max_depth=2).du("/a/b/c")
+
+
+def test_rmdir_empty_batch_matches_scalar():
+    """The batched rmdir_empty derives emptiness from the parent_fid
+    groupby column — identical outcomes to the per-entry readdir path,
+    including nested empty directories inside one chunk (plan order
+    decides whether a parent emptied mid-chunk is removable, for both
+    plan directions)."""
+    for sort_desc in (False, True):
+        results = {}
+        for execution in ("scalar", "columnar"):
+            fs = LustreSim(n_osts=2)
+            proj = fs.mkdir(fs.root_fid(), "proj")
+            keep = fs.mkdir(proj, "full")       # has a child file
+            f = fs.create(keep, "data.bin", owner="foo")
+            fs.write(f, 100)
+            for i in range(6):
+                fs.mkdir(proj, f"empty{i}")     # removable
+            # nested chain: /proj/nest -> /proj/nest/inner (both empty-able)
+            nest = fs.mkdir(proj, "nest")
+            fs.mkdir(nest, "inner")
+            cat = Catalog()
+            Scanner(fs, cat).scan()
+            eng = PolicyEngine(cat)
+            eng.register(PolicyDefinition.from_config(
+                name="rmdir", action=PLUGIN_REGISTRY["rmdir_empty"](fs, cat),
+                scope="type == dir and (name == 'empty*' or name == 'full'"
+                      " or name == 'nest' or name == 'inner')",
+                sort_by="fid", sort_desc=sort_desc))
+            r = eng.run("rmdir", execution=execution)
+            dirs = sorted(e.path for e in cat.entries()
+                          if e.type == FsType.DIR)
+            results[execution] = (r.succeeded, r.failed, dirs)
+        assert results["scalar"] == results["columnar"], sort_desc
+        succeeded, failed, dirs = results["columnar"]
+        # ascending fid visits parent before child: nest survives this
+        # run; descending empties inner first so nest goes too — either
+        # way identical to scalar
+        assert (succeeded, failed) == ((8, 1) if sort_desc else (7, 2))
+        assert "/proj/full" in dirs             # never empty
+        assert not any("empty" in d for d in dirs)
+        assert ("/proj/nest" in dirs) == (not sort_desc)
+
+
+def test_rmdir_empty_batch_on_parentless_catalog():
+    """A catalog where nothing records a parent (parent_fid=-1 all over)
+    must treat every directory as empty, not crash on the empty groupby."""
+    fs = LustreSim(n_osts=2)
+    d1 = fs.mkdir(fs.root_fid(), "d1")
+    d2 = fs.mkdir(fs.root_fid(), "d2")
+    cat = Catalog()
+    for i, fid in enumerate((d1, d2)):
+        cat.upsert(Entry(fid=fid, name=f"d{i+1}", path=f"/d{i+1}",
+                         type=FsType.DIR))     # default parent_fid=-1
+    action = PLUGIN_REGISTRY["rmdir_empty"](fs, cat)
+    oks = action.action_batch(cat.column_batch([d1, d2]), {})
+    assert oks == [True, True]
+    assert len(cat) == 0
 
 
 def test_checksum_plugin_batch_matches_scalar():
