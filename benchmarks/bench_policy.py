@@ -16,6 +16,14 @@ action, no ``Entry.__init__`` anywhere). All three action the identical
 fid sequence — asserted — as do the numpy / per-rule-launch /
 single-launch matcher backends. ``engine_incremental`` adds the
 changelog-driven dirty-set matching vs a full re-scan at 1% churn.
+
+``engine_mesh`` (the device-resident store): cold full upload vs warm
+delta-scatter refresh of the per-shard-group column stacks, and a warm
+``policy_scan_mesh`` run (resident columns, data-parallel over the
+``("shards",)`` mesh, refresh included) vs the single-device
+``policy_scan`` path that re-concats and re-uploads the full stack every
+run. ``run_mesh_assertion`` is the tier-2 CI entry enforcing the >= 3x
+bar at 1M entries / 1% churn on >= 4 devices.
 """
 from __future__ import annotations
 
@@ -35,10 +43,10 @@ N = 120_000
 N_ENGINE = 1_000_000
 
 
-def _catalog(n):
+def _catalog(n, n_shards=4):
     rng = np.random.default_rng(1)
     now = time.time()
-    cat = Catalog(n_shards=4)
+    cat = Catalog(n_shards=n_shards)
     for lo in range(0, n, 100_000):      # chunked build bounds peak memory
         hi = min(lo + 100_000, n)
         entries = [Entry(fid=i + 1, name=f"f{i}", path=f"/p/f{i}",
@@ -201,6 +209,155 @@ def _bench_engine_incremental(n: int, churn_frac: float = 0.01,
     ]
 
 
+def _bench_engine_mesh(n: int, churn_frac: float = 0.01, rounds: int = 3,
+                       assert_speedup: float = 0.0) -> list:
+    """Device-resident mesh matching vs the re-uploading policy_scan path.
+
+    The tentpole claim: once the column stacks live on the mesh and refresh
+    by delta scatter, a warm policy run stops paying the per-run host
+    concat + f32 restack + host→device upload. Each round churns
+    ``churn_frac`` of the catalog (updates only — the scatter path), then
+    times a warm ``policy_scan_mesh`` run against the single-device
+    ``policy_scan`` run that re-uploads the full stack. Both dry-run (the
+    match path is what differs), both asserted to match the same entries;
+    a separate recording pass asserts the actioned fid sequences are
+    identical across numpy / single-launch / mesh. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise a
+    real shard-group fan-out on CPU hosts.
+
+    ``assert_speedup > 0`` enforces the acceptance bar (tier-2 CI calls
+    this at 1M entries / 1% churn / >= 4 devices with 3.0).
+    """
+    import jax
+
+    from repro.core import DeviceColumnStore
+    from repro.launch.mesh import make_shards_mesh
+
+    n_dev = len(jax.devices())
+    cat = _catalog(n, n_shards=max(8, n_dev))
+    t_now = time.time()
+
+    eng = PolicyEngine(cat, clock=lambda: t_now)
+    eng.register(PolicyDefinition.from_config(
+        name="tier", action=lambda e, p: True, scope="type == file",
+        rules=[("big_cold", "size > 1945MB and last_access > 10d", {})],
+        sort_by="atime", dry_run=True, mutates=False))
+    mesh = make_shards_mesh()
+    store = DeviceColumnStore(cat, mesh)
+    eng.attach_device_store(store)
+
+    # cold upload: snapshot + restack + device_put for every shard group
+    t0 = time.perf_counter()
+    stats = store.refresh()
+    dt_cold = time.perf_counter() - t0
+    assert stats["full"] == store.n_devices
+    rows = [("policy_store_cold_upload", 1e6 * dt_cold / n,
+             f"{n}_rows_full_restack_{store.n_devices}_devices")]
+
+    # warm the jit caches on both paths before timing
+    r = eng.run("tier", evaluator="policy_scan_mesh")
+    assert r.evaluator == "policy_scan_mesh", r.fallback_reason
+    eng.run("tier", evaluator="policy_scan")
+
+    rng = np.random.default_rng(11)
+    all_fids = np.arange(1, n + 1)
+    t_mesh = t_up = t_refresh = 0.0
+    n_churn = max(1, int(n * churn_frac))
+    def _churn():
+        churn = rng.choice(all_fids, size=n_churn, replace=False)
+        half = len(churn) // 2
+        cat.update_fields_batch(churn[:half].tolist(), atime=t_now)
+        cat.update_fields_batch(churn[half:].tolist(),
+                                size=2040 << 20, atime=t_now - 30 * 86400)
+
+    for _ in range(rounds):
+        _churn()
+        deltas0 = store.delta_refreshes
+        t0 = time.perf_counter()
+        stats = store.refresh()              # isolate the scatter upload
+        t_refresh += time.perf_counter() - t0
+        assert stats["full"] == 0 and store.delta_refreshes > deltas0, stats
+
+        _churn()                  # the timed mesh run pays its own refresh
+        t0 = time.perf_counter()
+        r_m = eng.run("tier", evaluator="policy_scan_mesh")
+        t_mesh += time.perf_counter() - t0
+        assert r_m.evaluator == "policy_scan_mesh", r_m.fallback_reason
+
+        t0 = time.perf_counter()
+        r_u = eng.run("tier", evaluator="policy_scan")
+        t_up += time.perf_counter() - t0
+        assert r_u.evaluator == "policy_scan", r_u.fallback_reason
+        assert r_m.matched == r_u.matched and r_m.succeeded == r_u.succeeded
+
+    t_mesh /= rounds
+    t_up /= rounds
+    t_refresh /= rounds
+    speedup = t_up / t_mesh
+    rows += [
+        ("policy_store_warm_refresh", 1e6 * t_refresh / n,
+         f"churn_{churn_frac:.0%}_scattered_{n_churn}_rows"),
+        ("policy_engine_scan_reupload", 1e6 * t_up / n,
+         f"{n/t_up:.0f}_entries_per_s_matched_{r_u.matched}"),
+        ("policy_engine_mesh_warm", 1e6 * t_mesh / n,
+         f"{n/t_mesh:.0f}_entries_per_s_speedup_vs_reupload_"
+         f"{speedup:.1f}x_devices_{store.n_devices}"),
+    ]
+
+    # identical actioned fid sequences across numpy / single-launch / mesh
+    acted: list = []
+    lock = threading.Lock()
+
+    def act(e, params):
+        with lock:
+            acted.append(e.fid)
+        return True
+
+    def act_batch(batch, params):
+        with lock:
+            acted.extend(batch.fids.tolist())
+        return [True] * len(batch)
+
+    act.action_batch = act_batch
+    eng.register(PolicyDefinition.from_config(
+        name="verify", action=act, scope="type == file",
+        rules=[("big_cold", "size > 1945MB and last_access > 10d", {})],
+        sort_by="atime", mutates=False))
+    seqs = {}
+    for ev in ("numpy", "policy_scan", "policy_scan_mesh"):
+        acted.clear()
+        r = eng.run("verify", evaluator=ev)
+        assert not r.fallback_reason, (ev, r.fallback_reason)
+        seqs[ev] = list(acted)
+    assert seqs["numpy"] == seqs["policy_scan"] == seqs["policy_scan_mesh"]
+
+    if assert_speedup:
+        assert speedup >= assert_speedup, (
+            f"warm mesh matching with delta-refresh no longer beats the "
+            f"re-uploading policy_scan path ({speedup:.2f}x < "
+            f"{assert_speedup}x at n={n}, {store.n_devices} devices)")
+    return rows
+
+
+def run_mesh_assertion(n: int = 1_000_000, min_devices: int = 4,
+                       min_speedup: float = 3.0) -> list:
+    """Tier-2 CI entry: the acceptance bar at full size.
+
+    At ``n`` entries / 1% churn on >= ``min_devices`` (host-platform)
+    devices, warm mesh matching with delta-refresh must beat the
+    re-uploading single-device policy_scan path by >= ``min_speedup``,
+    with identical actioned fid sequences across numpy / single-launch /
+    mesh (asserted inside :func:`_bench_engine_mesh`).
+    """
+    import jax
+    n_dev = len(jax.devices())
+    assert n_dev >= min_devices, (
+        f"need >= {min_devices} devices (run under XLA_FLAGS="
+        f"--xla_force_host_platform_device_count=8), have {n_dev}")
+    return _bench_engine_mesh(n, churn_frac=0.01, rounds=3,
+                              assert_speedup=min_speedup)
+
+
 def run(smoke: bool = False) -> list:
     n = 24_000 if smoke else N
     cat = _catalog(n)
@@ -251,4 +408,5 @@ def run(smoke: bool = False) -> list:
 
     rows += _bench_engine(60_000 if smoke else N_ENGINE)
     rows += _bench_engine_incremental(100_000 if smoke else N_ENGINE)
+    rows += _bench_engine_mesh(100_000 if smoke else N_ENGINE)
     return rows

@@ -2,17 +2,22 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract). Run:
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
-                                            [--json OUT]
+                                            [--json OUT] [--trajectory DIR]
 
 ``--smoke`` shrinks problem sizes (CI budget: whole suite < 2 min);
-``--json OUT`` additionally writes a BENCH_*.json-shaped dict so runs can
-be tracked as a perf trajectory over PRs.
+``--json OUT`` additionally writes a BENCH_*.json-shaped dict for one run;
+``--trajectory DIR`` *appends* each module's rows as a dated entry to
+``DIR/BENCH_<module>.json`` (``bench_policy`` -> ``BENCH_policy.json``),
+so numbers accumulate PR over PR and later PRs can diff against earlier
+ones instead of starting an empty trajectory every time.
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import inspect
 import json
+import os
 import sys
 import time
 import traceback
@@ -36,6 +41,36 @@ def _call_run(mod, smoke: bool) -> list:
     return mod.run()
 
 
+def _append_trajectory(traj_dir: str, name: str, rows: list,
+                       smoke: bool, elapsed_s: float) -> str:
+    """Append one dated entry to BENCH_<module>.json (atomic rewrite)."""
+    short = name[len("bench_"):] if name.startswith("bench_") else name
+    os.makedirs(traj_dir, exist_ok=True)
+    path = os.path.join(traj_dir, f"BENCH_{short}.json")
+    payload = {"suite": f"benchmarks.{name}", "entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path, encoding="utf-8") as f:
+                loaded = json.load(f)
+            if isinstance(loaded.get("entries"), list):
+                payload = loaded
+        except (OSError, ValueError):
+            pass                     # corrupt trajectory: restart it
+    payload["entries"].append({
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "smoke": bool(smoke),
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": [{"name": n, "us_per_call": float(us),
+                  "derived": str(derived)} for n, us, derived in rows],
+    })
+    tmp = path + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2)
+    os.replace(tmp, path)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -43,6 +78,10 @@ def main() -> None:
                     help="shrink sizes for a <2 min CI run")
     ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
                     help="also write a BENCH_*.json-shaped result dict")
+    ap.add_argument("--trajectory", default=None, metavar="DIR",
+                    help="append each module's rows as a dated entry to "
+                         "DIR/BENCH_<module>.json (perf trajectory over "
+                         "PRs)")
     args = ap.parse_args()
     if args.only and args.only not in MODULES:
         ap.error(f"unknown module {args.only!r} (choose from {MODULES})")
@@ -54,12 +93,17 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         try:
+            t_mod = time.time()
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for row in _call_run(mod, args.smoke):
+            rows = _call_run(mod, args.smoke)
+            for row in rows:
                 n, us, derived = row
                 print(f"{n},{us:.2f},{derived}", flush=True)
                 results.append({"name": n, "us_per_call": float(us),
                                 "derived": str(derived), "module": name})
+            if args.trajectory:
+                _append_trajectory(args.trajectory, name, rows,
+                                   args.smoke, time.time() - t_mod)
         except Exception as e:
             failed += 1
             print(f"{name},NaN,ERROR_{type(e).__name__}", flush=True)

@@ -10,6 +10,7 @@ from .types import (AGE_PROFILE_EDGES, AGE_PROFILE_LABELS, ChangelogRecord,
                     parse_size, size_profile_bucket)
 from .catalog import Catalog, CatalogShard, ColumnBatch, StringTable
 from .changelog import ChangelogHub, ChangelogStream
+from .device_store import DeviceColumnStore, MeshMatch
 from .fidtable import FidTable
 from .scanner import Scanner, multi_client_scan, prune_missing
 from .pipeline import EventPipeline, PipelineConfig
@@ -31,7 +32,8 @@ __all__ = [
     "age_profile_bucket", "format_size", "parse_duration", "parse_size",
     "size_profile_bucket",
     "Catalog", "CatalogShard", "ColumnBatch", "StringTable",
-    "ChangelogHub", "ChangelogStream", "FidTable",
+    "ChangelogHub", "ChangelogStream", "DeviceColumnStore", "FidTable",
+    "MeshMatch",
     "GroupIndex", "ProfileCube",
     "Scanner", "multi_client_scan", "prune_missing",
     "EventPipeline", "PipelineConfig",

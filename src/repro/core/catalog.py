@@ -574,6 +574,8 @@ class Catalog:
         self._db_lock = threading.Lock()
         self._version = 0
         self._version_lock = threading.Lock()
+        self._arrays_cache: Optional[Tuple[int, "LazyColumns"]] = None
+        self._arrays_lock = threading.Lock()
         if db_path:
             self._open_db(db_path)
 
@@ -653,6 +655,15 @@ class Catalog:
     # -- hooks (stats aggregators, alerts) -------------------------------------
     def add_delta_hook(self, fn: Callable[[Optional[Delta], Optional[Delta]], None]) -> None:
         self._hooks.append(fn)
+
+    def remove_delta_hook(self, fn: Callable[[Optional[Delta], Optional[Delta]], None]) -> None:
+        """Unregister a delta hook (no-op if absent) — long-lived catalogs
+        must not keep feeding consumers that were replaced (e.g. a
+        detached DeviceColumnStore)."""
+        try:
+            self._hooks.remove(fn)
+        except ValueError:
+            pass
 
     def add_entry_hook(self, fn: Callable[[Entry], None]) -> None:
         """Entry-level hook (alerts need names/paths, not just deltas)."""
@@ -862,7 +873,20 @@ class Catalog:
         actually indexes them. The snapshot is still consistent — each
         shard's string lists are pointer-copied under the same lock as its
         numeric columns.
+
+        The result is **cached per catalog version** (invalidated by
+        ``_bump``): two calls with no intervening mutation return the SAME
+        object, so the numpy evaluator, reports and plugins stop paying a
+        full per-run shard concat on a quiet catalog. Callers must treat
+        the returned columns as read-only. The version is read *before*
+        the snapshot, so a racing mutation caches newer data under an
+        older version — one redundant rebuild later, never a stale serve.
         """
+        with self._arrays_lock:
+            cached = self._arrays_cache
+        version = self._version
+        if cached is not None and cached[0] == version:
+            return cached[1]
         cols_and_snaps = [s.snapshot() for s in self.shards]
         out: Dict[str, np.ndarray] = {}
         for name, _ in _NUMERIC_COLUMNS:
@@ -879,8 +903,11 @@ class Catalog:
                 return parts
             return load
 
-        return LazyColumns(out, {"_paths": _loader("_paths"),
-                                 "_names": _loader("_names")})
+        result = LazyColumns(out, {"_paths": _loader("_paths"),
+                                   "_names": _loader("_names")})
+        with self._arrays_lock:
+            self._arrays_cache = (version, result)
+        return result
 
     def query_fids(self, mask_fn: Callable[[Dict[str, np.ndarray]], np.ndarray]) -> np.ndarray:
         """Vectorized query: mask_fn(columns)->bool mask; returns matching fids."""

@@ -1,0 +1,512 @@
+"""Device-resident sharded column store for mesh-parallel policy matching.
+
+The paper's core scaling claim (SII-B1, SIII-B) is that policy runs over
+billions of entries must never re-read the namespace. The engine's kernel
+path used to violate that in two ways every run: ``Catalog.arrays()``
+concatenated every shard's columns on the host, and ``match_programs``
+re-stacked and re-uploaded the full f32 column stack host→device — all of
+it landing on ONE device even though the catalog is already sharded. This
+module keeps the kernel's column stacks *resident* on a device mesh and
+maintains them by deltas, so a warm policy run uploads only the rows that
+actually churned.
+
+Residency model
+---------------
+Catalog shards are folded onto the 1-D ``("shards",)`` mesh (see
+``launch.mesh.make_shards_mesh``): shard ``s`` belongs to **shard group**
+``s % D`` for a D-device mesh, and each group's rows (the concatenation of
+its member shards' valid-row snapshots) live on exactly one device as an
+``(n_cols+1, Rp)`` float32 block — ``KERNEL_COLUMNS`` in kernel order plus
+a trailing 0/1 row-validity column. Every group is padded to the same
+``Rp`` (a kernel-tile multiple, allocated with growth headroom) so the
+per-device blocks assemble zero-copy into one global ``(D, n_cols+1, Rp)``
+array sharded along ``"shards"`` — the operand
+:func:`~repro.kernels.policy_scan.ops.mesh_policy_scan_batch` consumes
+under ``shard_map``. Matching therefore moves **no column data at all**:
+only the (R, P) programs go up, and only the program-0 mask, the
+first-match-wins rule attribution, and the psum-combined (R, N_AGG)
+aggregates come back.
+
+Beside each device block the store keeps a **host mirror** of the group:
+the row-aligned ``fid`` array plus every kernel column in its native dtype.
+The mirror is what translates matched local row indices back to fids and
+serves exact int64/float64 ``size``/sort-key values to the engine's
+planner — it is maintained by the same deltas as the device block, so no
+post-match catalog gather is needed.
+
+Version keying and refresh
+--------------------------
+Freshness is keyed by the existing per-shard change ticks
+(:attr:`CatalogShard.version`): a group is *stale* when any member shard's
+tick moved past the value recorded at its last upload, or when delta hooks
+flagged pending changes. The store registers a
+:meth:`Catalog.add_delta_hook` at attach time and classifies every delta:
+
+* in-place update (old and new both present)  -> the fid joins the group's
+  **dirty set**; refresh scatters just those rows — one
+  :meth:`Catalog.gather_rows` host gather, one vectorized
+  ``block.at[:, rows].set(vals)`` on the owning device (row positions are
+  stable under pure updates, so the scatter is exact);
+* insert or remove (``old is None`` / ``new is None``) -> the group is
+  flagged **structural** and falls back to a full re-upload (snapshot →
+  restack → ``device_put``), because row positions shift;
+* dirty set larger than ``refresh_frac`` of the group's rows -> full
+  re-upload too (documented churn threshold: past it one contiguous upload
+  beats that many scattered rows);
+* shard tick moved with *no* recorded deltas (store attached late, hooks
+  bypassed) -> full re-upload, never a stale serve.
+
+Version ticks are read *before* the snapshot/gather (the catalog's own
+``_bump`` discipline), so a racing mutation can only make the next refresh
+redundant, never leave the device block stale. A group whose row count
+outgrows ``Rp`` forces a global re-pad (all groups re-upload at the new
+``Rp``).
+
+f32 envelope
+------------
+Device blocks are float32, exactly like the single-device kernel path:
+sizes above 2**24 bytes land on the nearest representable f32 (~one part
+in 16M — entries within one ulp of a size cutoff may flip vs the int64
+numpy path) and epoch-second timestamps carry ~64 s resolution. The host
+mirror keeps native dtypes, so fids, budget sizes and sort keys returned
+to the planner are exact; only predicate evaluation lives in the f32
+envelope. Differential tests pin the envelope with f32-exact catalogs.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .catalog import Catalog, Delta
+from .policy import KERNEL_COLUMNS, PolicyError, compile_programs
+
+_VALID_COL = len(KERNEL_COLUMNS)          # trailing 0/1 row-validity column
+
+# columns the host mirror serves to the planner (fids + kernel columns);
+# a policy sorting by anything else (e.g. parent_fid) cannot plan from the
+# store and raises PolicyError -> the engine falls back to a host scan
+PLAN_COLUMNS = ("fid",) + KERNEL_COLUMNS
+
+
+class _RepadNeeded(Exception):
+    """Internal: a group's snapshot outgrew the padded row capacity
+    mid-refresh (concurrent inserts); refresh() re-pads and retries."""
+
+    def __init__(self, rows: int) -> None:
+        super().__init__(rows)
+        self.rows = rows
+
+_SCATTER_FN = None                        # lazily-jitted dirty-row scatter
+
+
+def _scatter_rows(buf, rows: np.ndarray, vals: np.ndarray):
+    """Scatter (C, k) dirty-row values into a resident (1, C+1, Rp) block.
+
+    Jitted with the block donated (in-place on its own device) and k
+    padded to power-of-two buckets by the caller, so XLA compiles one
+    executable per (bucket, device) instead of one per distinct dirty-row
+    count — the scatter itself is O(k), never O(Rp).
+    """
+    global _SCATTER_FN
+    if _SCATTER_FN is None:
+        import jax
+
+        def fn(buf, rows, vals):
+            return buf.at[0, : vals.shape[0], rows].set(vals.T)
+
+        _SCATTER_FN = jax.jit(fn, donate_argnums=(0,))
+    return _SCATTER_FN(buf, rows, vals)
+
+
+def _pad_bucket(rows: np.ndarray, vals: np.ndarray, min_bucket: int = 64
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a scatter to the next power-of-two size with idempotent
+    duplicates of row 0 (same index, same values -> deterministic)."""
+    bucket = min_bucket
+    while bucket < rows.size:
+        bucket *= 2
+    pad = bucket - rows.size
+    if not pad:
+        return rows, vals
+    return (np.concatenate([rows, np.full(pad, rows[0], rows.dtype)]),
+            np.concatenate([vals, np.repeat(vals[:, :1], pad, axis=1)],
+                           axis=1))
+
+
+class MeshMatch:
+    """Result of one mesh-parallel program-batch evaluation.
+
+    Holds the per-group matched local row indices (already nonzero'd on the
+    host from the program-0 mask) plus the store's host mirrors; ``plan``
+    gathers the planner arrays without touching the catalog. A delta
+    refresh mutates the mirrors in place, so ``plan`` takes the store lock
+    and raises :class:`PolicyError` when the store refreshed since this
+    match (a stale plan would mix pre-churn masks with post-churn values)
+    — call it before the next refresh, as the engine does.
+    """
+
+    def __init__(self, store: "DeviceColumnStore", epoch: int,
+                 mirrors: List[Tuple[np.ndarray, Dict[str, np.ndarray]]],
+                 group_idx: List[np.ndarray], group_rule: List[np.ndarray],
+                 agg: dict, reval: int) -> None:
+        self._store = store
+        self._epoch = epoch                # store mutation tick at match
+        self._mirrors = mirrors            # per group: (fids, cols) refs
+        self._group_idx = group_idx        # per group: matched local rows
+        self._group_rule = group_rule      # per group: rule idx at those rows
+        self.agg = agg
+        self.reval = reval                 # valid rows evaluated on-device
+
+    @property
+    def matched(self) -> int:
+        return int(sum(ix.size for ix in self._group_idx))
+
+    def plan(self, sort_by: str) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray, np.ndarray]:
+        """(fids, sizes, sort_keys, rule_idx) of matched rows, native
+        dtypes from the host mirror (exact budgets/ordering)."""
+        if sort_by not in PLAN_COLUMNS:
+            raise PolicyError(
+                f"sort_by {sort_by!r} is not in the device-store host "
+                f"mirror (available: fid + kernel columns)")
+        with self._store._lock:
+            if self._store._epoch != self._epoch:
+                raise PolicyError(
+                    "stale MeshMatch: the device store refreshed since "
+                    "this match — re-match before planning")
+            return self._plan_locked(sort_by)
+
+    def _plan_locked(self, sort_by: str) -> Tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray, np.ndarray]:
+        fids, sizes, keys, rules = [], [], [], []
+        for (gfids, gcols), idx, rl in zip(self._mirrors, self._group_idx,
+                                           self._group_rule):
+            fids.append(gfids[idx])
+            sizes.append(gcols["size"][idx])
+            keys.append(np.asarray(gcols[sort_by][idx], dtype=np.float64))
+            rules.append(rl)
+        return (np.concatenate(fids) if fids else np.zeros(0, np.int64),
+                np.concatenate(sizes) if sizes else np.zeros(0, np.int64),
+                np.concatenate(keys) if keys else np.zeros(0),
+                np.concatenate(rules) if rules else np.zeros(0, np.int32))
+
+
+class _ShardGroup:
+    """One device's slice of the catalog: host mirror + freshness state."""
+
+    __slots__ = ("gid", "shard_ids", "fids", "cols", "rows", "versions",
+                 "dirty", "structural", "uploaded", "_order")
+
+    def __init__(self, gid: int, shard_ids: List[int]) -> None:
+        self.gid = gid
+        self.shard_ids = shard_ids
+        self.fids = np.zeros(0, np.int64)
+        self.cols: Dict[str, np.ndarray] = {}
+        self.rows = 0                      # valid rows (<= Rp)
+        self.versions: Dict[int, int] = {}  # shard id -> tick at last upload
+        self.dirty: set = set()
+        self.structural = False
+        self.uploaded = False
+        self._order: Optional[np.ndarray] = None   # argsort(fids), lazy
+
+    def locate(self, fids: np.ndarray) -> Optional[np.ndarray]:
+        """Local row index per fid; None when any fid is not in the mirror
+        (caller falls back to a full re-upload)."""
+        if not self.rows:
+            return None
+        if self._order is None:
+            self._order = np.argsort(self.fids, kind="stable")
+        sorted_fids = self.fids[self._order]
+        pos = np.searchsorted(sorted_fids, fids)
+        pos = np.clip(pos, 0, sorted_fids.size - 1)
+        rows = self._order[pos]
+        if not (self.fids[rows] == fids).all():
+            return None
+        return rows
+
+
+class DeviceColumnStore:
+    """Per-shard-group kernel column stacks held resident on a jax mesh.
+
+    See the module docstring for the residency / refresh / envelope
+    contracts. Construction registers a delta hook on the catalog and
+    uploads lazily: the first :meth:`refresh` (or :meth:`match`) pays the
+    cold full upload, warm calls scatter only churned rows.
+    """
+
+    def __init__(self, catalog: Catalog, mesh=None,
+                 refresh_frac: float = 0.25, tile: int = 0,
+                 headroom: float = 1.25) -> None:
+        import jax
+        from ..kernels.policy_scan.kernel import LANE
+        if mesh is None:
+            from ..launch.mesh import make_shards_mesh
+            mesh = make_shards_mesh()
+        if "shards" not in mesh.axis_names:
+            raise PolicyError('device store needs a mesh with a "shards" '
+                              f"axis, got {mesh.axis_names}")
+        self.catalog = catalog
+        self.mesh = mesh
+        self.devices = list(np.asarray(mesh.devices).reshape(-1))
+        self.n_devices = len(self.devices)
+        self.refresh_frac = refresh_frac
+        self.tile = tile or 8 * LANE
+        self.headroom = headroom
+        self._lock = threading.RLock()
+        self._groups = [
+            _ShardGroup(g, [s for s in range(catalog.n_shards)
+                            if s % self.n_devices == g])
+            for g in range(self.n_devices)]
+        self._rp = 0                        # padded rows per device block
+        self._bufs: List[Optional["jax.Array"]] = [None] * self.n_devices
+        self._global = None                 # assembled (D, C+1, Rp) array
+        self._epoch = 0                     # bumped by every mirror mutation
+        # perf counters (benchmarks / tests assert the refresh mode taken)
+        self.full_uploads = 0
+        self.delta_refreshes = 0
+        self.rows_scattered = 0
+        catalog.add_delta_hook(self._on_delta)
+
+    def detach(self) -> None:
+        """Unregister from the catalog's delta hooks and drop the device
+        blocks. A store that is replaced (mesh resize, re-attach) must be
+        detached, or the long-lived catalog keeps feeding its dirty sets
+        forever. A detached store can still match, but without delta
+        intake every refresh is a cold full upload (the hook-less
+        version-drift fallback) — detach is for decommissioning."""
+        self.catalog.remove_delta_hook(self._on_delta)
+        with self._lock:
+            self._bufs = [None] * self.n_devices
+            self._global = None
+            self._epoch += 1
+            for group in self._groups:
+                group.uploaded = False
+                group.dirty = set()
+                group.structural = False
+                group.fids = np.zeros(0, np.int64)
+                group.cols = {}
+                group.rows = 0
+            self._rp = 0
+
+    # -- delta intake (catalog mutation hooks) --------------------------------
+    def _on_delta(self, old: Optional[Delta], new: Optional[Delta]) -> None:
+        ref = new if new is not None else old
+        if ref is None:
+            return
+        fid = int(ref[0])
+        group = self._groups[self.catalog._shard_id(fid) % self.n_devices]
+        if old is None or new is None:      # insert / remove: rows shift
+            group.structural = True
+        else:
+            group.dirty.add(fid)
+
+    # -- freshness ------------------------------------------------------------
+    def _shard_versions(self, group: _ShardGroup) -> Dict[int, int]:
+        return {s: self.catalog.shards[s].version for s in group.shard_ids}
+
+    def _stale(self, group: _ShardGroup) -> bool:
+        if not group.uploaded or group.structural or group.dirty:
+            return True
+        return self._shard_versions(group) != group.versions
+
+    # -- upload paths ----------------------------------------------------------
+    def _snapshot_group(self, group: _ShardGroup
+                        ) -> Tuple[Dict[str, int], np.ndarray,
+                                   Dict[str, np.ndarray]]:
+        """(versions-before, fids, native column dict) for a full upload."""
+        versions = self._shard_versions(group)   # BEFORE the snapshot reads
+        names = ("fid",) + KERNEL_COLUMNS
+        parts = [self.catalog.shards[s].snapshot(names=names,
+                                                 with_strings=False)[0]
+                 for s in group.shard_ids]
+        if parts:
+            cols = {n: np.concatenate([p[n] for p in parts]) for n in names}
+        else:
+            cols = {n: np.zeros(0, dtype=np.int64) for n in names}
+        # fid stays IN the mirror dict (it is a valid plan sort key)
+        cols["fid"] = fids = cols["fid"].astype(np.int64, copy=False)
+        return versions, fids, cols
+
+    def _stack_f32(self, group: _ShardGroup, rp: int) -> np.ndarray:
+        """(C+1, rp) f32 device-block staging from the host mirror."""
+        out = np.zeros((len(KERNEL_COLUMNS) + 1, rp), dtype=np.float32)
+        for i, name in enumerate(KERNEL_COLUMNS):
+            out[i, : group.rows] = group.cols[name]
+        out[_VALID_COL, : group.rows] = 1.0
+        return out
+
+    def _full_upload(self, group: _ShardGroup, rp: int) -> None:
+        import jax
+        versions, fids, cols = self._snapshot_group(group)
+        if fids.size > rp:
+            # a concurrent insert grew the group past the capacity check
+            # at the top of refresh(): re-pad and retry instead of serving
+            # a truncated block (or crashing the stack staging)
+            raise _RepadNeeded(fids.size)
+        group.fids, group.cols, group.rows = fids, cols, fids.size
+        group._order = None
+        stack = self._stack_f32(group, rp)
+        self._bufs[group.gid] = jax.device_put(
+            stack[None], self.devices[group.gid])
+        group.versions = versions
+        group.dirty = set()
+        group.structural = False
+        group.uploaded = True
+        self._global = None
+        self._epoch += 1
+        self.full_uploads += 1
+
+    def _delta_refresh(self, group: _ShardGroup) -> bool:
+        """Scatter just the dirty rows into the resident block; returns
+        False when the group needs the full-upload fallback instead."""
+        # swap the dirty set out BEFORE reading versions: a hook landing
+        # after the swap goes to the fresh set and keeps the group stale
+        # (re-scattered next refresh), so a concurrent mutation can delay
+        # a row's upload by one refresh but never lose it — and the
+        # fromiter below never races a growing set
+        dirty_set, group.dirty = group.dirty, set()
+        versions = self._shard_versions(group)   # BEFORE the row gather
+        dirty = np.fromiter(dirty_set, dtype=np.int64, count=len(dirty_set))
+        rows = group.locate(dirty)
+        if rows is None:
+            group.dirty |= dirty_set
+            return False                    # unseen fid: rows shifted
+        cols, present = self.catalog.gather_rows(dirty.tolist(),
+                                                 with_strings=False)
+        if not bool(present.all()):
+            group.dirty |= dirty_set
+            return False                    # raced a remove: restack
+        vals = np.empty((len(KERNEL_COLUMNS), dirty.size), dtype=np.float32)
+        for i, name in enumerate(KERNEL_COLUMNS):
+            group.cols[name][rows] = cols[name]      # host mirror first
+            vals[i] = cols[name]
+        # release the assembled global BEFORE the scatter: it holds the
+        # only other reference to the block, which must drop for the
+        # donated in-place update to actually donate
+        self._global = None
+        # the scatter runs on the block's own device (donated buffer); the
+        # validity row is untouched (pure updates never change which rows
+        # exist) and the op is bucket-padded for executable reuse
+        prows, pvals = _pad_bucket(rows.astype(np.int32), vals)
+        self._bufs[group.gid] = _scatter_rows(self._bufs[group.gid],
+                                              prows, pvals)
+        group.versions = versions
+        self._epoch += 1
+        self.delta_refreshes += 1
+        self.rows_scattered += int(dirty.size)
+        return True
+
+    def _round_up(self, n: int) -> int:
+        return -(-max(n, 1) // self.tile) * self.tile
+
+    def refresh(self) -> Dict[str, int]:
+        """Bring every stale shard group up to date; returns counters of
+        the refresh modes taken (``full``/``delta``/``fresh`` groups)."""
+        with self._lock:
+            stats = {"full": 0, "delta": 0, "fresh": 0}
+            stale = [g for g in self._groups if self._stale(g)]
+            stats["fresh"] = self.n_devices - len(stale)
+            if not stale:
+                return stats
+            # a grown group forces a global re-pad: every block re-uploads
+            # at the new Rp so the global array stays rectangular
+            need = max((sum(self.catalog.shards[s].count()
+                            for s in g.shard_ids) for g in self._groups),
+                       default=1)
+            repad = need > self._rp or self._rp == 0
+            if repad:
+                self._rp = self._round_up(int(need * self.headroom))
+            # bounded retry: a concurrent insert can outgrow the capacity
+            # check mid-refresh (_full_upload raises _RepadNeeded) — re-pad
+            # and re-upload everything rather than serve a truncated block
+            for _attempt in range(8):
+                if repad:
+                    stale = list(self._groups)
+                    stats = {"full": 0, "delta": 0, "fresh": 0}
+                try:
+                    for group in stale:
+                        churn_ok = (not repad and group.uploaded
+                                    and not group.structural and group.dirty
+                                    and len(group.dirty)
+                                    <= self.refresh_frac
+                                    * max(1, group.rows))
+                        if churn_ok and self._delta_refresh(group):
+                            stats["delta"] += 1
+                        else:
+                            self._full_upload(group, self._rp)
+                            stats["full"] += 1
+                    return stats
+                except _RepadNeeded as grown:
+                    self._rp = self._round_up(
+                        int(grown.rows * self.headroom))
+                    repad = True
+            raise PolicyError(
+                "device store could not settle a refresh: the catalog "
+                "grew on every re-pad attempt")
+
+    # -- matching --------------------------------------------------------------
+    def _assemble(self):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if self._global is None:
+            shape = (self.n_devices, len(KERNEL_COLUMNS) + 1, self._rp)
+            self._global = jax.make_array_from_single_device_arrays(
+                shape, NamedSharding(self.mesh, P("shards")), self._bufs)
+        return self._global
+
+    def match(self, exprs: Sequence, now: float,
+              use_kernel: Optional[bool] = None,
+              with_agg: bool = True) -> MeshMatch:
+        """Evaluate ``[combined criteria] + per-rule conditions`` over the
+        resident mesh; see :class:`MeshMatch`. Raises PolicyError on glob
+        (host-only) predicates — callers fall back to the numpy path.
+        ``with_agg=False`` skips the fused size-profile aggregation (the
+        engine's match path needs only mask + attribution; ``.agg`` then
+        reads all-zero)."""
+        import jax
+        from ..kernels.policy_scan.ops import (_agg_dict, _on_tpu,
+                                               _program_tuples,
+                                               mesh_policy_scan_batch)
+        ops, colidx, operands = compile_programs(exprs, self.catalog.strings,
+                                                 now)
+        ops_t, colidx_t = _program_tuples(ops, colidx)
+        if use_kernel is None:
+            use_kernel = _on_tpu()
+        # the lock is held for the WHOLE match (launch included): a
+        # concurrent refresh would donate the resident blocks out from
+        # under the in-flight launch and mutate the host mirrors this
+        # match translates through — concurrent matches serialize instead
+        with self._lock:
+            self.refresh()
+            global_cols = self._assemble()
+            snap = [(g.gid, g.fids, g.cols, g.rows) for g in self._groups]
+            mask, rule, agg = mesh_policy_scan_batch(
+                global_cols, operands, mesh=self.mesh, ops_t=ops_t,
+                colidx_t=colidx_t, size_col=KERNEL_COLUMNS.index("size"),
+                blocks_col=KERNEL_COLUMNS.index("blocks"),
+                valid_col=_VALID_COL, use_kernel=bool(use_kernel),
+                tile=self.tile, with_agg=with_agg)
+            # only mask + attribution cross device→host, never the columns
+            mask_np = np.asarray(jax.device_get(mask))
+            rule_np = np.asarray(jax.device_get(rule))
+            per_rule = np.asarray(jax.device_get(agg))
+            mirrors, group_idx, group_rule = [], [], []
+            for gid, gfids, gcols, grows in snap:
+                idx = np.nonzero(mask_np[gid, :grows] > 0.5)[0]
+                mirrors.append((gfids, gcols))
+                group_idx.append(idx)
+                group_rule.append(rule_np[gid, idx].astype(np.int32))
+            reval = int(sum(s[3] for s in snap))
+            return MeshMatch(self, self._epoch, mirrors, group_idx,
+                             group_rule, _agg_dict(per_rule[0], per_rule),
+                             reval)
+
+    def scan(self, expr, now: float,
+             use_kernel: Optional[bool] = None) -> Tuple[np.ndarray, dict]:
+        """Single-expression mesh scan: (matching fids, aggregate dict) —
+        the device-resident analogue of ``ops.scan_catalog``."""
+        match = self.match([expr], now, use_kernel=use_kernel)
+        fids, _sizes, _sort, _ridx = match.plan("size")
+        return fids, match.agg

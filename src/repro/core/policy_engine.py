@@ -17,13 +17,20 @@ The hot path never constructs a per-entry Python object and never launches
 more than one kernel per shard batch:
 
 * **matching** goes through a pluggable evaluator backend — ``"numpy"``
-  (vectorized column masks) or ``"policy_scan"`` (the Pallas TPU kernel,
-  falling back to its jitted oracle off-TPU). The kernel backend evaluates
-  the policy's whole (R, P) rule-program batch in a SINGLE launch that
-  writes the (R, N) mask tile with first-match-wins rule **attribution**
-  and per-rule size/blocks reductions fused on-device (the per-rule-launch
-  path survives inside ``match_programs`` as a fallback and differential
-  oracle);
+  (vectorized column masks), ``"policy_scan"`` (the Pallas TPU kernel,
+  falling back to its jitted oracle off-TPU) or ``"policy_scan_mesh"``
+  (the same program batch evaluated data-parallel over a device-resident
+  :class:`~repro.core.device_store.DeviceColumnStore` — see
+  :meth:`PolicyEngine.attach_device_store`; no per-run host concat or
+  host→device re-upload, stale shard groups refresh by delta scatter).
+  The kernel backends evaluate the policy's whole (R, P) rule-program
+  batch in a SINGLE launch (per device) that writes the (R, N) mask tile
+  with first-match-wins rule **attribution** and per-rule size/blocks
+  reductions fused on-device (the per-rule-launch path survives inside
+  ``match_programs`` as a fallback and differential oracle). Evaluator
+  downgrades (mesh without a store, glob predicates) are recorded on
+  ``RunReport.fallback_reason`` so callers can assert the requested
+  backend really ran;
 * **budgets** (target volume / max actions) are planned on batch
   boundaries over the match-time column snapshot — no entry objects: the
   engine takes the minimal prefix of the sorted candidate list whose
@@ -118,7 +125,7 @@ Action = Callable[[Entry, dict], bool]   # returns True on success
 # passes List[Entry] instead.
 BatchAction = Callable[[ColumnBatch, dict], List[bool]]
 
-EVALUATORS = ("numpy", "policy_scan")
+EVALUATORS = ("numpy", "policy_scan", "policy_scan_mesh")
 MATCHING_MODES = ("auto", "full", "incremental")
 EXECUTION_MODES = ("columnar", "batched", "scalar")
 
@@ -181,6 +188,10 @@ class RunReport:
     mode: str = "full"       # matching path: "full" scan or "incremental"
     reval: int = 0           # rows (re-)evaluated to produce the match set
     execution: str = "columnar"   # execution path that applied the actions
+    # why the run did NOT match on the evaluator that was requested ("" =
+    # the requested backend ran): benchmarks/CI assert the kernel / mesh
+    # path really executed instead of silently degrading to numpy
+    fallback_reason: str = ""
 
 
 class UsageWatermarkTrigger:
@@ -403,6 +414,17 @@ class PolicyEngine:
         self._inc_enabled = False
         self._streams: List[Tuple[ChangelogStream, str]] = []
         self._sub_name: Optional[str] = None
+        self.device_store = None         # attach_device_store wires the mesh
+
+    def attach_device_store(self, store) -> None:
+        """Wire a :class:`~repro.core.device_store.DeviceColumnStore` so the
+        ``policy_scan_mesh`` evaluator can match data-parallel over the
+        device-resident sharded column stacks (no per-run host concat, no
+        host→device re-upload — warm runs refresh churned rows by scatter).
+        The store must wrap this engine's catalog."""
+        if store.catalog is not self.catalog:
+            raise PolicyError("device store wraps a different catalog")
+        self.device_store = store
 
     def register(self, policy: PolicyDefinition) -> None:
         self.policies[policy.name] = policy
@@ -612,35 +634,67 @@ class PolicyEngine:
             mask = mask & extra.mask(cols, strings, now)
         return mask, self._attribute(mask, rule_masks)
 
+    @staticmethod
+    def _programs(policy: PolicyDefinition, extra: Optional[Expr]
+                  ) -> List[Expr]:
+        """[combined criteria] + per-rule conditions, the kernel-path
+        program batch shared by the single-launch and mesh evaluators."""
+        rule_exprs = [r.condition for r in policy.rules]
+        full = all_of([policy.scope]
+                      + ([any_of(rule_exprs)] if rule_exprs else [])
+                      + ([extra] if extra else []))
+        return [full] + rule_exprs
+
     def _match(self, policy: PolicyDefinition, extra: Optional[Expr],
                now: float, evaluator: str = "numpy"
-               ) -> Tuple[np.ndarray, np.ndarray, Dict[str, np.ndarray], str]:
+               ) -> Tuple[np.ndarray, np.ndarray, Dict[str, np.ndarray],
+                          str, str]:
         """One columnar pass: final mask + vectorized rule attribution.
 
-        Returns (mask, rule_idx, cols, evaluator_used). ``rule_idx[i]`` is
-        the index of the first (highest-priority) rule matching row i, or -1
-        when the policy has no rules. The ``policy_scan`` backend evaluates
-        the whole program batch in a single kernel launch with attribution
-        fused on-device; it silently falls back to numpy for host-only
-        (glob) predicates.
+        Returns (mask, rule_idx, cols, evaluator_used, fallback_reason).
+        ``rule_idx[i]`` is the index of the first (highest-priority) rule
+        matching row i, or -1 when the policy has no rules. The
+        ``policy_scan`` backend evaluates the whole program batch in a
+        single kernel launch with attribution fused on-device; it falls
+        back to numpy for host-only (glob) predicates, recording why.
         """
         if evaluator not in EVALUATORS:
             raise PolicyError(f"unknown evaluator {evaluator!r}")
         cols = self.catalog.arrays()
-        rule_exprs = [r.condition for r in policy.rules]
-        if evaluator == "policy_scan":
+        reason = ""
+        if evaluator in ("policy_scan", "policy_scan_mesh"):
             try:
                 from ..kernels.policy_scan.ops import match_programs
-                full = all_of([policy.scope]
-                              + ([any_of(rule_exprs)] if rule_exprs else [])
-                              + ([extra] if extra else []))
                 masks, _agg, rule_idx = match_programs(
-                    cols, [full] + rule_exprs, self.catalog.strings, now)
-                return masks[0], rule_idx, cols, "policy_scan"
-            except PolicyError:
-                pass          # glob predicates run on the host
+                    cols, self._programs(policy, extra),
+                    self.catalog.strings, now)
+                return masks[0], rule_idx, cols, "policy_scan", reason
+            except PolicyError as e:
+                # glob predicates run on the host
+                reason = f"policy_scan->numpy: {e}"
         mask, rule_idx = self._eval_cols(policy, cols, extra, now)
-        return mask, rule_idx, cols, "numpy"
+        return mask, rule_idx, cols, "numpy", reason
+
+    def _match_mesh(self, policy: PolicyDefinition, extra: Optional[Expr],
+                    now: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                         np.ndarray, int]:
+        """Mesh-parallel full match over the attached device store.
+
+        Each device evaluates the (R, P) program batch over its resident
+        shard-group column block (stale groups refresh by delta scatter
+        first); only matched local rows come back and are translated to
+        (fids, sizes, sort_keys, rule_idx) through the store's host
+        mirrors — the catalog columns are never concatenated or
+        re-uploaded. Raises PolicyError when no store is attached or the
+        criteria hold host-only (glob) predicates.
+        """
+        if self.device_store is None:
+            raise PolicyError("no device store attached "
+                              "(PolicyEngine.attach_device_store)")
+        match = self.device_store.match(self._programs(policy, extra), now,
+                                        with_agg=False)
+        fids, sizes, sort_keys, rule_idx = match.plan(policy.sort_by)
+        return fids, sizes, sort_keys, rule_idx, match.reval
 
     def _match_incremental(self, policy: PolicyDefinition,
                            state: _IncrementalState, extra: Optional[Expr],
@@ -749,34 +803,60 @@ class PolicyEngine:
         mode = self._resolve_matching(matching, policy, state,
                                       has_extra=extra_criteria is not None)
 
+        fallback = ""
         if mode == "incremental":
             fids, sizes, sort_keys, ridx, reval = self._match_incremental(
                 policy, state, extra_criteria, now)
             used_eval = "numpy"
+            want = evaluator or policy.evaluator
+            if want != "numpy":
+                # not a degradation — the cached match table beat a full
+                # scan on ANY backend — but still recorded so callers
+                # asserting "the kernel path ran" see why it did not
+                fallback = (f"{want}->incremental: cached match table "
+                            "served the run (force matching=\"full\" to "
+                            "exercise the evaluator)")
         else:
-            rebuild = state is not None and extra_criteria is None
-            if rebuild:
-                state.begin_rebuild()   # before the snapshot: no lost deltas
-            try:
-                mask, rule_idx, cols, used_eval = self._match(
-                    policy, extra_criteria, now, evaluator or policy.evaluator)
-                fids = cols["fid"][mask]
-                sizes = cols["size"][mask]
-                ridx = rule_idx[mask]
-                sort_keys = np.asarray(cols[policy.sort_by][mask],
-                                       dtype=np.float64)
-                reval = int(mask.size)
+            want = evaluator or policy.evaluator
+            mesh_done = False
+            if want == "policy_scan_mesh":
+                try:
+                    fids, sizes, sort_keys, ridx, reval = self._match_mesh(
+                        policy, extra_criteria, now)
+                    used_eval = "policy_scan_mesh"
+                    mesh_done = True
+                    # the mesh path never materializes host columns, so the
+                    # incremental cache is left as-is (still coherent: its
+                    # dirty set keeps accumulating deltas) instead of being
+                    # rebuilt in passing like the host-columnar scans below
+                except PolicyError as e:
+                    fallback = f"policy_scan_mesh->policy_scan: {e}"
+            if not mesh_done:
+                rebuild = state is not None and extra_criteria is None
                 if rebuild:
-                    state.rebuild(cols, mask, rule_idx, now)
-            except Exception:
-                # never leave a half-built cache marked valid (a bad
-                # sort_by would otherwise silently match nothing forever)
-                if rebuild:
-                    state.invalidate()
-                raise
+                    state.begin_rebuild()   # before snapshot: no lost deltas
+                try:
+                    mask, rule_idx, cols, used_eval, reason = self._match(
+                        policy, extra_criteria, now, want)
+                    fallback = "; ".join(r for r in (fallback, reason) if r)
+                    fids = cols["fid"][mask]
+                    sizes = cols["size"][mask]
+                    ridx = rule_idx[mask]
+                    sort_keys = np.asarray(cols[policy.sort_by][mask],
+                                           dtype=np.float64)
+                    reval = int(mask.size)
+                    if rebuild:
+                        state.rebuild(cols, mask, rule_idx, now)
+                except Exception:
+                    # never leave a half-built cache marked valid (a bad
+                    # sort_by would otherwise silently match nothing forever)
+                    if rebuild:
+                        state.invalidate()
+                    raise
         report = RunReport(policy=policy_name, matched=int(fids.size),
                            trigger=trigger, evaluator=used_eval,
                            mode=mode, reval=reval, execution=execution,
+                           fallback_reason=fallback,
                            matched_volume=int(sizes.sum()) if fids.size else 0)
 
         executed = 0

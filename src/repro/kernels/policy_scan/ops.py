@@ -9,7 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import LANE, policy_scan_batch_pallas, policy_scan_pallas
-from .ref import (N_AGG, policy_scan_batch_ref, policy_scan_multi_ref,
+from .ref import (N_AGG, OP_AND, OP_NOP, OP_NOT, OP_OR, aggregate_multi,
+                  policy_scan_batch_ref, policy_scan_multi_ref,
                   policy_scan_ref)
 
 
@@ -106,6 +107,173 @@ def policy_scan_batch(cols: jax.Array, ops: jax.Array, colidx: jax.Array,
     return masks[:, :n], rule[:n], agg
 
 
+def _eval_unrolled(cols: jax.Array, ops: Tuple[int, ...],
+                   colidx: Tuple[int, ...], operands: jax.Array) -> jax.Array:
+    """Postfix program evaluation with the *program* static.
+
+    The scan/kernel evaluators treat the program as data: every
+    instruction materializes a (6, N) comparison stack and a dynamically
+    indexed (max_stack, N) value stack — ~10 full passes over the column
+    tile per instruction, all memory bandwidth. A policy's opcode/column
+    sequence is fixed per definition though (only the *operands* move with
+    ``now``), so this path unrolls the program in Python: each instruction
+    lowers to exactly the one comparison it needs, the stack lives in
+    tracer-land, and booleans (1 byte) replace f32 masks until the end.
+    Bit-identical to :func:`repro.kernels.policy_scan.ref.eval_program` on
+    {0, 1} masks — differential-tested.
+    """
+    stack: List[jax.Array] = []
+    for i, op in enumerate(ops):
+        if op == OP_NOP:
+            continue
+        if op < 6:
+            vec = cols[colidx[i]]
+            val = operands[i]
+            # select the lambda BEFORE applying: one comparison traced per
+            # instruction, not six
+            cmp = (lambda a, b: a == b, lambda a, b: a != b,
+                   lambda a, b: a > b, lambda a, b: a >= b,
+                   lambda a, b: a < b, lambda a, b: a <= b)[op]
+            stack.append(cmp(vec, val))
+        elif op == OP_AND:
+            b, a = stack.pop(), stack.pop()
+            stack.append(a & b)
+        elif op == OP_OR:
+            b, a = stack.pop(), stack.pop()
+            stack.append(a | b)
+        elif op == OP_NOT:
+            stack.append(~stack.pop())
+    if not stack:
+        return jnp.zeros(cols.shape[1], bool)
+    return stack[-1]
+
+
+def _unrolled_masks(cols: jax.Array, ops_t, colidx_t, operands: jax.Array,
+                    valid_col: int) -> Tuple[List[jax.Array], jax.Array]:
+    """Shared core of the unrolled paths: (bool program masks,
+    first-match-wins rule_idx). Single semantics authority for the
+    single-device oracle and the lean mesh branch — fix either behaviour
+    here, never in a caller."""
+    masks_b = []
+    for r in range(len(ops_t)):
+        m = _eval_unrolled(cols, ops_t[r], colidx_t[r], operands[r])
+        if valid_col >= 0:
+            m = m & (cols[valid_col] > 0.5)
+        masks_b.append(m)
+    if len(masks_b) > 1:
+        rules = jnp.stack(masks_b[1:])
+        first = jnp.argmax(rules, axis=0).astype(jnp.int32)
+        rule = jnp.where(jnp.any(rules, axis=0), first, -1)
+    else:
+        rule = jnp.full(cols.shape[1], -1, jnp.int32)
+    return masks_b, rule
+
+
+@partial(jax.jit, static_argnames=("ops_t", "colidx_t", "size_col",
+                                   "blocks_col", "valid_col"))
+def policy_scan_batch_unrolled(cols: jax.Array, operands: jax.Array, *,
+                               ops_t: Tuple[Tuple[int, ...], ...],
+                               colidx_t: Tuple[Tuple[int, ...], ...],
+                               size_col: int = 0, blocks_col: int = 1,
+                               valid_col: int = -1
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Static-program batch matcher: the fast off-TPU single-launch path.
+
+    Same contract as :func:`policy_scan_batch` — (masks (R, N) f32,
+    rule_idx (N,) i32, agg (R, N_AGG) f32) — but the (R, P) opcode/column
+    arrays are hashable tuples baked into the compilation (recompiles per
+    policy *shape*, not per run: operand values, which carry ``now``-
+    relative thresholds, stay dynamic). Needs no tile padding: there is no
+    kernel grid, any N works.
+    """
+    masks_b, rule = _unrolled_masks(cols, ops_t, colidx_t, operands,
+                                    valid_col)
+    masks = jnp.stack(masks_b).astype(jnp.float32)
+    agg = aggregate_multi(masks, cols[size_col], cols[blocks_col])
+    return masks, rule, agg
+
+
+def _program_tuples(ops: np.ndarray, colidx: np.ndarray
+                    ) -> Tuple[Tuple[Tuple[int, ...], ...],
+                               Tuple[Tuple[int, ...], ...]]:
+    return (tuple(tuple(int(o) for o in row) for row in np.asarray(ops)),
+            tuple(tuple(int(c) for c in row) for row in np.asarray(colidx)))
+
+
+@partial(jax.jit, static_argnames=("mesh", "ops_t", "colidx_t", "size_col",
+                                   "blocks_col", "valid_col", "use_kernel",
+                                   "tile", "with_agg"))
+def mesh_policy_scan_batch(global_cols: jax.Array, operands: jax.Array, *,
+                           mesh, ops_t: Tuple[Tuple[int, ...], ...],
+                           colidx_t: Tuple[Tuple[int, ...], ...],
+                           size_col: int = 0, blocks_col: int = 1,
+                           valid_col: int = -1, use_kernel: bool = False,
+                           tile: int = 8 * LANE, with_agg: bool = True
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Data-parallel batch matcher over a device-resident sharded table.
+
+    ``global_cols`` is (D, n_cols, Rp) f32, sharded along axis 0 over the
+    1-D ``("shards",)`` mesh — one shard group's padded column stack per
+    device, resident in device memory (see ``core.device_store``). Rp must
+    be a tile multiple and ``valid_col`` must point at a 0/1 row-validity
+    column (the store appends one), so no per-launch padding happens. The
+    (R, P) opcode/column program structure rides as static tuples (only
+    the replicated operand values are data — ``now``-relative thresholds
+    change per run without recompiling).
+
+    Under ``shard_map`` each device evaluates the whole program batch over
+    its local (n_cols, Rp) block — the Pallas kernel
+    (:func:`policy_scan_batch`) when ``use_kernel`` else the unrolled
+    static-program evaluator — with masks, first-match-wins attribution
+    and per-program size/blocks reductions fused on-device; the
+    per-program aggregates then combine across the mesh via ``psum``
+    (``pmax`` for the any_match slot). Returns (mask0 (D, Rp) f32 and
+    rule_idx (D, Rp) i32, both still sharded along ``"shards"``; agg
+    (R, N_AGG) f32, replicated): only the combined-criteria mask and the
+    attribution ever leave the devices — the column stack itself is never
+    re-uploaded or gathered.
+
+    ``with_agg=False`` takes a leaner unrolled path that skips the fused
+    size-profile aggregation and the (R, N) f32 mask materialization
+    entirely (returns a bool mask0 and a zero agg) — the policy engine's
+    match path, which only consumes mask + attribution.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def _device_scan(cols, operands_):
+        if not with_agg and not use_kernel:
+            masks_b, rule = _unrolled_masks(cols[0], ops_t, colidx_t,
+                                            operands_, valid_col)
+            agg = jnp.zeros((len(ops_t), N_AGG), jnp.float32)
+            return masks_b[0][None], rule[None], agg
+        if use_kernel:
+            masks, rule, agg = policy_scan_batch(
+                cols[0], jnp.asarray(np.asarray(ops_t), jnp.int32),
+                jnp.asarray(np.asarray(colidx_t), jnp.int32), operands_,
+                size_col=size_col, blocks_col=blocks_col,
+                valid_col=valid_col, use_kernel=True, tile=tile)
+        else:
+            masks, rule, agg = policy_scan_batch_unrolled(
+                cols[0], operands_, ops_t=ops_t, colidx_t=colidx_t,
+                size_col=size_col, blocks_col=blocks_col,
+                valid_col=valid_col)
+        sums = jax.lax.psum(agg[:, : N_AGG - 1], "shards")
+        anym = jax.lax.pmax(agg[:, N_AGG - 1:], "shards")
+        return (masks[0][None], rule[None],
+                jnp.concatenate([sums, anym], axis=1))
+
+    # check_rep=False: the program-eval scan/argmax trips shard_map's
+    # replication checker (jax#mismatched-replication-types); the agg
+    # output IS replicated — psum/pmax above combine it across the mesh
+    return shard_map(
+        _device_scan, mesh=mesh,
+        in_specs=(P("shards"), P()),
+        out_specs=(P("shards"), P("shards"), P()),
+        check_rep=False,
+    )(global_cols, operands.astype(jnp.float32))
+
+
 def column_stack(arrays) -> jax.Array:
     """Stack a Catalog.arrays() dict into the (n_cols, N) f32 kernel layout."""
     from ...core.policy import KERNEL_COLUMNS
@@ -168,10 +336,18 @@ def match_programs(arrays, exprs, strings, now: float,
     if single_launch is None:
         single_launch = True
     if single_launch:
-        m, rule, agg = policy_scan_batch(
-            kcols, jnp.asarray(ops), jnp.asarray(colidx),
-            jnp.asarray(operands), size_col=size_col, blocks_col=blocks_col,
-            use_kernel=use_kernel)
+        if use_kernel:
+            m, rule, agg = policy_scan_batch(
+                kcols, jnp.asarray(ops), jnp.asarray(colidx),
+                jnp.asarray(operands), size_col=size_col,
+                blocks_col=blocks_col, use_kernel=True)
+        else:
+            # off-TPU oracle: the unrolled static-program evaluator (same
+            # outputs, ~an order of magnitude less memory traffic)
+            ops_t, colidx_t = _program_tuples(ops, colidx)
+            m, rule, agg = policy_scan_batch_unrolled(
+                kcols, jnp.asarray(operands), ops_t=ops_t,
+                colidx_t=colidx_t, size_col=size_col, blocks_col=blocks_col)
         m = np.asarray(m) > 0.5
         masks = [m[r] for r in range(m.shape[0])]
         per_rule = np.asarray(agg)
@@ -192,14 +368,43 @@ def match_programs(arrays, exprs, strings, now: float,
     return masks, _agg_dict(per_rule[0], per_rule), _attribute_np(masks)
 
 
-def scan_catalog(catalog, expr, now: float, use_kernel: bool = True
-                 ) -> Tuple[np.ndarray, dict]:
+def match_programs_mesh(store, exprs, now: float,
+                        use_kernel: Optional[bool] = None):
+    """Mesh-parallel sibling of :func:`match_programs`: evaluate the (R, P)
+    program batch over a :class:`~repro.core.device_store.DeviceColumnStore`
+    instead of a freshly uploaded column stack.
+
+    The store refreshes stale shard groups by delta scatter (or full
+    re-upload), launches :func:`mesh_policy_scan_batch` over the resident
+    (D, n_cols, Rp) global array, and pulls back only the program-0 mask
+    and the rule attribution. Returns a ``MeshMatch`` (see device_store):
+    ``.plan(sort_by)`` yields the matched (fids, sizes, sort_keys,
+    rule_idx) arrays and ``.agg`` the fused aggregate dict — same
+    semantics as :func:`match_programs`, differential-tested equal.
+    Raises PolicyError on host-only (glob) predicates.
+    """
+    return store.match(exprs, now, use_kernel=use_kernel)
+
+
+def scan_catalog(catalog, expr, now: float, use_kernel: bool = True,
+                 store=None) -> Tuple[np.ndarray, dict]:
     """Run a core.policy expression over a Catalog via the kernel path.
 
     Only numeric/categorical predicates compile to the kernel program;
     glob predicates raise PolicyError (callers fall back to Expr.mask).
-    Returns (matching fids, aggregate dict).
+    Returns (matching fids, aggregate dict). When ``store`` (a
+    :class:`~repro.core.device_store.DeviceColumnStore` over the same
+    catalog) is given, the scan runs mesh-parallel over the device-resident
+    column stacks — no host-side concat, no host→device re-upload.
     """
+    if store is not None:
+        if store.catalog is not catalog:
+            from ...core.policy import PolicyError
+            raise PolicyError("device store wraps a different catalog "
+                              "than the one passed to scan_catalog")
+        match = store.match([expr], now, use_kernel=use_kernel)
+        fids, _sizes, _sort, _ridx = match.plan("size")
+        return fids, match.agg
     from ...core.policy import KERNEL_COLUMNS, compile_program
     arrays = catalog.arrays()
     ops, colidx, operands = compile_program(expr, catalog.strings, now)

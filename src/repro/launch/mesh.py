@@ -42,3 +42,23 @@ def make_mesh(shape, axes):
         return jax.make_mesh(shape, axes)
     from jax.sharding import Mesh
     return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_shards_mesh(n_devices: int = 0):
+    """1-D ``("shards",)`` mesh for the sharded catalog data plane.
+
+    The device-resident column store (``core.device_store``) and the
+    mesh-parallel ``policy_scan`` launch partition catalog shard groups
+    along this axis — one shard group per device. ``n_devices=0`` takes
+    every visible device (run CPU hosts under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to fake N).
+    """
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n > len(devs):
+        raise RuntimeError(
+            f"need {n} devices for a ({n},)-shards mesh, have {len(devs)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n}")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]), ("shards",))

@@ -187,3 +187,24 @@ def test_arrays_lazy_paths_still_correct():
     assert len(paths) == len(cols["fid"])
     for fid, p in zip(cols["fid"].tolist(), paths):
         assert p == f"/a/f{fid}"
+
+
+def test_arrays_cached_per_version():
+    """Two arrays() calls at the same catalog version return the SAME
+    cached object (no per-run shard concat); any mutation invalidates."""
+    cat = Catalog(n_shards=3)
+    for i in range(1, 21):
+        cat.upsert(_entry(i))
+    a = cat.arrays()
+    b = cat.arrays()
+    assert a is b
+    # lazy string materialization does not invalidate the cache
+    _ = a["_paths"]
+    assert cat.arrays() is a
+    cat.update_fields(3, size=123)
+    c = cat.arrays()
+    assert c is not a
+    assert c["size"][np.nonzero(c["fid"] == 3)[0][0]] == 123
+    assert cat.arrays() is c
+    cat.remove(5)
+    assert cat.arrays() is not c

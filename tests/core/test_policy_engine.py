@@ -318,3 +318,29 @@ def test_dry_run_counts_without_calling_actions():
     assert rec.calls == []
     assert r.succeeded == r.matched == len(cat)
     assert r.volume == r.matched_volume == sum(e.size for e in cat.entries())
+
+
+def test_fallback_reason_records_evaluator_downgrades():
+    """RunReport carries the evaluator actually used AND why a requested
+    kernel/mesh backend degraded, so benchmarks/CI can assert the fast
+    path really ran instead of silently timing numpy."""
+    cat = _catalog(300)
+    rec = Recorder()
+    # numeric-only criteria: the kernel path runs, nothing to report
+    eng = _engine(cat, rec, rules=[("big", "size > 30k", {})])
+    r = eng.run("p", evaluator="policy_scan")
+    assert r.evaluator == "policy_scan" and r.fallback_reason == ""
+    # glob predicate: silently-swallowed PolicyError is now on the report
+    eng2 = _engine(cat, rec, rules=[("glob", "path == '/p/d1/*'", {})])
+    r2 = eng2.run("p", evaluator="policy_scan")
+    assert r2.evaluator == "numpy"
+    assert "policy_scan->numpy" in r2.fallback_reason
+    assert "glob" in r2.fallback_reason
+    # mesh without a store downgrades through the whole chain
+    r3 = eng2.run("p", evaluator="policy_scan_mesh")
+    assert r3.evaluator == "numpy"
+    assert "policy_scan_mesh->policy_scan" in r3.fallback_reason
+    assert "no device store attached" in r3.fallback_reason
+    # numpy asked for explicitly: no fallback to report
+    r4 = eng.run("p", evaluator="numpy")
+    assert r4.evaluator == "numpy" and r4.fallback_reason == ""
