@@ -28,6 +28,7 @@ MODULES = [
     "bench_stats",       # SII-B3: O(1) pre-aggregated reports
     "bench_policy",      # SII-B1: policy matching (4 evaluators + engine)
     "bench_find_du",     # SII-B4: find/du clones vs POSIX walk
+    "bench_reports",     # PR6: mesh-resident reports vs host folds
     "bench_kvtier",      # adapted C7/C8: KV-page tiering + paged serving
     "roofline_report",   # SRoofline summary rows from the dry-run artifacts
 ]

@@ -576,6 +576,10 @@ class Catalog:
         self._version_lock = threading.Lock()
         self._arrays_cache: Optional[Tuple[int, "LazyColumns"]] = None
         self._arrays_lock = threading.Lock()
+        # observability: how often the full host column concat was asked
+        # for — the mesh-resident report/profile paths assert this stays
+        # flat on warm queries (tests/core/test_mesh_reports.py)
+        self.arrays_calls = 0
         if db_path:
             self._open_db(db_path)
 
@@ -882,6 +886,7 @@ class Catalog:
         the snapshot, so a racing mutation caches newer data under an
         older version — one redundant rebuild later, never a stale serve.
         """
+        self.arrays_calls += 1
         with self._arrays_lock:
             cached = self._arrays_cache
         version = self._version

@@ -62,6 +62,60 @@ redundant, never leave the device block stale. A group whose row count
 outgrows ``Rp`` forces a global re-pad (all groups re-upload at the new
 ``Rp``).
 
+Analytics planes (mesh-resident reports + profile cube)
+-------------------------------------------------------
+Beyond the kernel columns, each device block can carry extra **analytics
+rows** maintained by the very same upload/scatter paths:
+
+* **reports plane** (:meth:`DeviceColumnStore.enable_reports_plane`):
+  one ``ord`` row — each row's rank in its group's *sorted-path* order.
+  ``rbh-du`` becomes two host binary searches into the group's sorted
+  path mirror plus one fused on-device range aggregate
+  (:func:`~repro.kernels.policy_scan.ops.mesh_range_aggregate`);
+  ``rbh-find`` is a mesh program match whose winners translate to paths
+  through the mirror; top-N listings run a two-pass on-device top-k
+  (:func:`~repro.kernels.policy_scan.ops.mesh_column_topk` to find the
+  exact k-th-best threshold, then a threshold mask to recover every
+  boundary tie). A *rename* (path change on a pure update) shifts the
+  sorted order, so it degrades that group to a full re-upload exactly
+  like a structural change.
+* **cube plane** (:meth:`DeviceColumnStore.enable_cube_plane`): three
+  rows — dense profile group id (``core.profiles.GroupIndex``), size
+  bucket and age bucket (bucketized exactly on the host at scatter
+  time). Each device additionally keeps a flat **partial profile cube**
+  of its resident rows, built in one
+  :func:`~repro.kernels.profile_cube.ops.mesh_profile_cube` launch and
+  maintained by O(dirty) *signed* scatter-adds from the same delta
+  batches that refresh the columns; queries psum-combine the resident
+  partials (:func:`~repro.kernels.profile_cube.ops.mesh_cube_combine`)
+  — after the cold build no profile query re-reads host columns. Age
+  buckets reference the store-wide ``_cube_ref`` instant; per-row flip
+  schedules (mirroring ``core.profiles._ShardCube``) advance only the
+  due rows when queries move ``now`` forward.
+
+Shared delta fan-out contract
+-----------------------------
+One catalog mutation fans out to every derived structure through
+*independent* :meth:`Catalog.add_delta_hook` subscriptions, and each
+consumer must apply it **exactly once**:
+
+* this store's hook feeds the per-group dirty sets; a refresh drains a
+  dirty *set* (duplicate updates to one fid collapse) and applies the
+  column scatter, the analytics-row scatter and the signed cube move in
+  the same drain — never separately;
+* the cube's signed move subtracts the *mirror* state (what the resident
+  cube actually holds) and adds the freshly gathered state, so collapsed
+  multi-updates net out exactly;
+* a :class:`~repro.core.profiles.ProfileCube` that attached this store
+  (``ProfileCube.attach_device_store``) claims the cube's single delta
+  feed and makes its own ``on_delta`` a no-op — wiring both its host
+  hook and the store plane would double-count every mutation (the same
+  single-feed contract as ``ProfileCube.attach`` vs a cube-backed
+  ``StatsAggregator``);
+* the policy engine's incremental state consumes the same deltas via
+  ``note_touched``; a mesh full scan primes that cache through
+  :meth:`MeshMatch.cache_arrays` (mirror-served, no catalog re-read).
+
 f32 envelope
 ------------
 Device blocks are float32, exactly like the single-device kernel path:
@@ -70,7 +124,11 @@ in 16M — entries within one ulp of a size cutoff may flip vs the int64
 numpy path) and epoch-second timestamps carry ~64 s resolution. The host
 mirror keeps native dtypes, so fids, budget sizes and sort keys returned
 to the planner are exact; only predicate evaluation lives in the f32
-envelope. Differential tests pin the envelope with f32-exact catalogs.
+envelope. The same envelope bounds the analytics planes: partial-cube
+cells and ``du`` aggregates accumulate in f32 (exact for integer sums
+below 2**24 times the value granularity), and path ranks are exact below
+2**24 rows per group. Differential tests pin the envelope with f32-exact
+catalogs; the host folds remain the differential oracles.
 """
 from __future__ import annotations
 
@@ -83,6 +141,14 @@ from .catalog import Catalog, Delta
 from .policy import KERNEL_COLUMNS, PolicyError, compile_programs
 
 _VALID_COL = len(KERNEL_COLUMNS)          # trailing 0/1 row-validity column
+
+# analytics rows appended after the validity row when a plane is enabled
+# (all four are allocated together; a disabled plane's rows stay zero)
+_ORD_COL = _VALID_COL + 1                 # sorted-path rank (reports plane)
+_GID_COL = _VALID_COL + 2                 # dense profile group id (cube)
+_SB_COL = _VALID_COL + 3                  # size-profile bucket (cube)
+_AB_COL = _VALID_COL + 4                  # age bucket as of _cube_ref (cube)
+_N_ANALYTICS = 4
 
 # columns the host mirror serves to the planner (fids + kernel columns);
 # a policy sorting by anything else (e.g. parent_fid) cannot plan from the
@@ -123,7 +189,12 @@ def _scatter_rows(buf, rows: np.ndarray, vals: np.ndarray):
 def _pad_bucket(rows: np.ndarray, vals: np.ndarray, min_bucket: int = 64
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """Pad a scatter to the next power-of-two size with idempotent
-    duplicates of row 0 (same index, same values -> deterministic)."""
+    duplicates of row 0 (same index, same values -> deterministic).
+
+    Safe for scatter-SET only: duplicated (index, value) pairs write the
+    same value twice. A scatter-ADD must pad with *zero-valued* deltas
+    instead (:func:`_pad_zero`) or padding would double-apply.
+    """
     bucket = min_bucket
     while bucket < rows.size:
         bucket *= 2
@@ -133,6 +204,59 @@ def _pad_bucket(rows: np.ndarray, vals: np.ndarray, min_bucket: int = 64
     return (np.concatenate([rows, np.full(pad, rows[0], rows.dtype)]),
             np.concatenate([vals, np.repeat(vals[:, :1], pad, axis=1)],
                            axis=1))
+
+
+def _pad_zero(flat: np.ndarray, vals: np.ndarray, min_bucket: int = 64
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Power-of-two padding for scatter-ADD: pad cells target index 0
+    with all-zero deltas (adding 0 is the idempotent no-op here)."""
+    bucket = min_bucket
+    while bucket < flat.size:
+        bucket *= 2
+    pad = bucket - flat.size
+    if not pad:
+        return flat, vals
+    return (np.concatenate([flat, np.zeros(pad, flat.dtype)]),
+            np.concatenate([vals, np.zeros((vals.shape[0], pad),
+                                           vals.dtype)], axis=1))
+
+
+_SCATTER_ROW_FN = None                    # lazily-jitted single-row scatter
+
+
+def _scatter_row(buf, row: int, rows: np.ndarray, vals: np.ndarray):
+    """Scatter values into ONE block row (age-bucket rollovers touch only
+    the ``_AB_COL`` row). Donated + bucket-padded like :func:`_scatter_rows`;
+    the row index is static (one executable per analytics row)."""
+    global _SCATTER_ROW_FN
+    if _SCATTER_ROW_FN is None:
+        import jax
+
+        def fn(buf, rows, vals, *, row):
+            return buf.at[0, row, rows].set(vals)
+
+        _SCATTER_ROW_FN = jax.jit(fn, static_argnames=("row",),
+                                  donate_argnums=(0,))
+    return _SCATTER_ROW_FN(buf, rows, vals, row=row)
+
+
+_CUBE_SCATTER_FN = None                   # lazily-jitted cube scatter-add
+
+
+def _cube_scatter(buf, flat: np.ndarray, vals: np.ndarray):
+    """Signed scatter-add of (3, k) measure deltas into a resident
+    (1, 3, M) flat partial cube at flat cell indices ``flat``. Donated
+    (in-place on the partial's own device); callers pad with
+    :func:`_pad_zero` so duplicate pad cells add nothing."""
+    global _CUBE_SCATTER_FN
+    if _CUBE_SCATTER_FN is None:
+        import jax
+
+        def fn(buf, flat, vals):
+            return buf[0].at[:, flat].add(vals)[None]
+
+        _CUBE_SCATTER_FN = jax.jit(fn, donate_argnums=(0,))
+    return _CUBE_SCATTER_FN(buf, flat, vals)
 
 
 class MeshMatch:
@@ -192,12 +316,66 @@ class MeshMatch:
                 np.concatenate(keys) if keys else np.zeros(0),
                 np.concatenate(rules) if rules else np.zeros(0, np.int32))
 
+    def cache_arrays(self, sort_by: str, age_preds, now: float
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray, np.ndarray, np.ndarray]:
+        """Plan arrays + the age-flip schedule that primes the engine's
+        incremental match cache from this mesh full scan.
+
+        Returns ``(fids, sizes, sort_keys, rule_idx, flip_fids, flips)``:
+        the first four are :meth:`plan`'s exact output; the last two cover
+        **every** mirrored row whose age predicates flip at a finite
+        future instant (``time_col + threshold``, boundary kept — the
+        same semantics as ``policy_engine._next_flips`` over a host
+        snapshot), so a currently-unmatched row that ages into scope is
+        still re-evaluated on time. Everything is served from the host
+        mirrors — the catalog columns are never touched.
+        """
+        if sort_by not in PLAN_COLUMNS:
+            raise PolicyError(
+                f"sort_by {sort_by!r} is not in the device-store host "
+                f"mirror (available: fid + kernel columns)")
+        with self._store._lock:
+            if self._store._epoch != self._epoch:
+                raise PolicyError(
+                    "stale MeshMatch: the device store refreshed since "
+                    "this match — re-match before planning")
+            fids, sizes, keys, rules = self._plan_locked(sort_by)
+            ffids, flips = [], []
+            for gfids, gcols in self._mirrors:
+                if not gfids.size or not age_preds:
+                    continue
+                nxt = np.full(gfids.size, np.inf)
+                for time_col, thr in age_preds:
+                    cand = np.asarray(gcols[time_col],
+                                      dtype=np.float64) + thr
+                    np.minimum(nxt, np.where(cand >= now, cand, np.inf),
+                               out=nxt)
+                keep = np.isfinite(nxt)
+                ffids.append(gfids[keep])
+                flips.append(nxt[keep])
+            return (fids, sizes, keys, rules,
+                    np.concatenate(ffids) if ffids
+                    else np.zeros(0, np.int64),
+                    np.concatenate(flips) if flips else np.zeros(0))
+
 
 class _ShardGroup:
-    """One device's slice of the catalog: host mirror + freshness state."""
+    """One device's slice of the catalog: host mirror + freshness state.
+
+    Beside the kernel-column mirror, a group carries the analytics-plane
+    mirrors: ``offsets`` (member-shard row starts — find/top-N results
+    re-emit in catalog ``arrays()`` order through them), the reports
+    plane's row-aligned ``paths`` / sorted ``spaths`` / rank ``ord``, and
+    the cube plane's per-row group id / size bucket / age bucket / next
+    flip instant (``cgid``/``csb``/``cab``/``cflip``, ``cmin_flip`` the
+    cheap due-rollover bound).
+    """
 
     __slots__ = ("gid", "shard_ids", "fids", "cols", "rows", "versions",
-                 "dirty", "structural", "uploaded", "_order")
+                 "dirty", "structural", "uploaded", "_order",
+                 "offsets", "paths", "spaths", "ord",
+                 "cgid", "csb", "cab", "cflip", "cmin_flip")
 
     def __init__(self, gid: int, shard_ids: List[int]) -> None:
         self.gid = gid
@@ -210,6 +388,15 @@ class _ShardGroup:
         self.structural = False
         self.uploaded = False
         self._order: Optional[np.ndarray] = None   # argsort(fids), lazy
+        self.offsets = np.zeros(1, np.int64)       # member-shard row starts
+        self.paths: Optional[list] = None          # row-aligned (reports)
+        self.spaths: Optional[np.ndarray] = None   # sorted paths (reports)
+        self.ord: Optional[np.ndarray] = None      # row -> sorted-path rank
+        self.cgid: Optional[np.ndarray] = None     # cube: dense group id
+        self.csb: Optional[np.ndarray] = None      # cube: size bucket
+        self.cab: Optional[np.ndarray] = None      # cube: age bucket @ ref
+        self.cflip: Optional[np.ndarray] = None    # cube: next flip instant
+        self.cmin_flip = np.inf
 
     def locate(self, fids: np.ndarray) -> Optional[np.ndarray]:
         """Local row index per fid; None when any fid is not in the mirror
@@ -263,11 +450,75 @@ class DeviceColumnStore:
         self._bufs: List[Optional["jax.Array"]] = [None] * self.n_devices
         self._global = None                 # assembled (D, C+1, Rp) array
         self._epoch = 0                     # bumped by every mirror mutation
+        # analytics planes (see module docstring): off until enabled
+        self._plane_reports = False
+        self._plane_cube = False
+        self._cube_groups = None            # shared core.profiles.GroupIndex
+        self._cube_clock = None
+        self._cube_ref = 0.0                # age reference of resident cab
+        self._cube_bp = 0                   # padded group capacity on device
+        self._cube_bufs = None              # per-device (1, 3, bp*S*A) f32
+        self._cube_partials = None          # assembled (D, 3, bp*S*A) array
+        self._cube_cache = None             # host int64 (3, bp, S, A) cache
+        self._cube_stale = True             # partials need a full rebuild
         # perf counters (benchmarks / tests assert the refresh mode taken)
         self.full_uploads = 0
         self.delta_refreshes = 0
         self.rows_scattered = 0
+        self.cube_rebuilds = 0
+        self.rollovers = 0                  # age-bucket moves served on-device
+        self.store_queries = 0              # report queries served resident
         catalog.add_delta_hook(self._on_delta)
+
+    # -- analytics planes ------------------------------------------------------
+    def _block_rows(self) -> int:
+        """Device-block row count: kernel columns + validity, plus the
+        analytics rows once any plane is enabled."""
+        extra = _N_ANALYTICS if (self._plane_reports or self._plane_cube) \
+            else 0
+        return len(KERNEL_COLUMNS) + 1 + extra
+
+    def _drop_device_state(self) -> None:
+        """Invalidate every resident block (block layout changed): the
+        next refresh re-uploads at the new row count. Lock held."""
+        self._bufs = [None] * self.n_devices
+        self._global = None
+        self._cube_bufs = None
+        self._cube_partials = None
+        self._cube_cache = None
+        self._cube_stale = True
+        self._epoch += 1
+        for group in self._groups:
+            group.uploaded = False
+
+    def enable_reports_plane(self) -> None:
+        """Add the sorted-path-rank row + path mirrors to every block so
+        ``find``/``top_files``/``du`` serve from the resident mesh.
+        Idempotent; the next refresh pays one full re-upload."""
+        with self._lock:
+            if self._plane_reports:
+                return
+            self._plane_reports = True
+            self._drop_device_state()
+
+    def enable_cube_plane(self, groups, clock) -> None:
+        """Add the gid/size-bucket/age-bucket rows plus the per-device
+        partial profile cubes. ``groups`` is the shared
+        :class:`~repro.core.profiles.GroupIndex` (report masks read its
+        key columns) and ``clock`` supplies the age reference. Idempotent
+        for the same index; a different index raises."""
+        with self._lock:
+            if self._plane_cube:
+                if groups is not self._cube_groups:
+                    raise PolicyError(
+                        "cube plane already enabled with a different "
+                        "GroupIndex")
+                return
+            self._plane_cube = True
+            self._cube_groups = groups
+            self._cube_clock = clock
+            self._cube_ref = float(clock())
+            self._drop_device_state()
 
     def detach(self) -> None:
         """Unregister from the catalog's delta hooks and drop the device
@@ -278,16 +529,17 @@ class DeviceColumnStore:
         version-drift fallback) — detach is for decommissioning."""
         self.catalog.remove_delta_hook(self._on_delta)
         with self._lock:
-            self._bufs = [None] * self.n_devices
-            self._global = None
-            self._epoch += 1
+            self._drop_device_state()
             for group in self._groups:
-                group.uploaded = False
                 group.dirty = set()
                 group.structural = False
                 group.fids = np.zeros(0, np.int64)
                 group.cols = {}
                 group.rows = 0
+                group.offsets = np.zeros(1, np.int64)
+                group.paths = group.spaths = group.ord = None
+                group.cgid = group.csb = group.cab = group.cflip = None
+                group.cmin_flip = np.inf
             self._rp = 0
 
     # -- delta intake (catalog mutation hooks) --------------------------------
@@ -314,32 +566,77 @@ class DeviceColumnStore:
     # -- upload paths ----------------------------------------------------------
     def _snapshot_group(self, group: _ShardGroup
                         ) -> Tuple[Dict[str, int], np.ndarray,
-                                   Dict[str, np.ndarray]]:
-        """(versions-before, fids, native column dict) for a full upload."""
+                                   Dict[str, np.ndarray], list, np.ndarray]:
+        """(versions-before, fids, native column dict, paths, offsets)
+        for a full upload. Paths are gathered only when the reports plane
+        is on; ``offsets`` records each member shard's row start (the
+        group's row order is the concat of member-shard snapshots, so
+        results re-emit in catalog ``arrays()`` order through it)."""
         versions = self._shard_versions(group)   # BEFORE the snapshot reads
         names = ("fid",) + KERNEL_COLUMNS
-        parts = [self.catalog.shards[s].snapshot(names=names,
-                                                 with_strings=False)[0]
-                 for s in group.shard_ids]
+        with_paths = self._plane_reports
+        parts, paths, counts = [], [], []
+        for s in group.shard_ids:
+            cols_s, snap = self.catalog.shards[s].snapshot(
+                names=names, with_strings=with_paths)
+            parts.append(cols_s)
+            counts.append(cols_s["fid"].size)
+            if with_paths:
+                paths.extend(snap.gather("_paths"))
         if parts:
             cols = {n: np.concatenate([p[n] for p in parts]) for n in names}
         else:
             cols = {n: np.zeros(0, dtype=np.int64) for n in names}
         # fid stays IN the mirror dict (it is a valid plan sort key)
         cols["fid"] = fids = cols["fid"].astype(np.int64, copy=False)
-        return versions, fids, cols
+        offsets = np.concatenate([[0], np.cumsum(np.asarray(counts,
+                                                            np.int64))])
+        return versions, fids, cols, paths, offsets
+
+    def _refresh_plane_mirrors(self, group: _ShardGroup,
+                               paths: list) -> None:
+        """Recompute a group's analytics mirrors after a full snapshot."""
+        n = group.rows
+        if self._plane_reports:
+            group.paths = paths
+            parr = np.asarray(paths) if paths else np.zeros(0, dtype="<U1")
+            order = np.argsort(parr, kind="stable")
+            group.spaths = parr[order]
+            rank = np.empty(n, np.int64)
+            rank[order] = np.arange(n)
+            group.ord = rank
+        if self._plane_cube:
+            from .profiles import (_FLIP_EDGES, age_buckets_np,
+                                   size_buckets_np)
+            cols = group.cols
+            group.cgid = self._cube_groups.get_or_add_many(
+                cols["owner"], cols["group"], cols["type"],
+                cols["hsm_state"])
+            group.csb = size_buckets_np(np.asarray(cols["size"], np.int64))
+            stamps = np.asarray(cols["atime"], np.float64)
+            group.cab = age_buckets_np(self._cube_ref - stamps)
+            group.cflip = stamps + _FLIP_EDGES[group.cab]
+            finite = np.isfinite(group.cflip)
+            group.cmin_flip = float(group.cflip[finite].min()) \
+                if finite.any() else np.inf
 
     def _stack_f32(self, group: _ShardGroup, rp: int) -> np.ndarray:
-        """(C+1, rp) f32 device-block staging from the host mirror."""
-        out = np.zeros((len(KERNEL_COLUMNS) + 1, rp), dtype=np.float32)
+        """(n_rows, rp) f32 device-block staging from the host mirror."""
+        out = np.zeros((self._block_rows(), rp), dtype=np.float32)
         for i, name in enumerate(KERNEL_COLUMNS):
             out[i, : group.rows] = group.cols[name]
         out[_VALID_COL, : group.rows] = 1.0
+        if self._plane_reports and group.ord is not None:
+            out[_ORD_COL, : group.rows] = group.ord
+        if self._plane_cube and group.cgid is not None:
+            out[_GID_COL, : group.rows] = group.cgid
+            out[_SB_COL, : group.rows] = group.csb
+            out[_AB_COL, : group.rows] = group.cab
         return out
 
     def _full_upload(self, group: _ShardGroup, rp: int) -> None:
         import jax
-        versions, fids, cols = self._snapshot_group(group)
+        versions, fids, cols, paths, offsets = self._snapshot_group(group)
         if fids.size > rp:
             # a concurrent insert grew the group past the capacity check
             # at the top of refresh(): re-pad and retry instead of serving
@@ -347,6 +644,8 @@ class DeviceColumnStore:
             raise _RepadNeeded(fids.size)
         group.fids, group.cols, group.rows = fids, cols, fids.size
         group._order = None
+        group.offsets = offsets
+        self._refresh_plane_mirrors(group, paths)
         stack = self._stack_f32(group, rp)
         self._bufs[group.gid] = jax.device_put(
             stack[None], self.devices[group.gid])
@@ -357,6 +656,11 @@ class DeviceColumnStore:
         self._global = None
         self._epoch += 1
         self.full_uploads += 1
+        if self._plane_cube:
+            # row positions changed: this group's resident partial cube
+            # no longer matches the block — rebuild on next cube query
+            self._cube_stale = True
+            self._cube_cache = None
 
     def _delta_refresh(self, group: _ShardGroup) -> bool:
         """Scatter just the dirty rows into the resident block; returns
@@ -373,25 +677,95 @@ class DeviceColumnStore:
         if rows is None:
             group.dirty |= dirty_set
             return False                    # unseen fid: rows shifted
-        cols, present = self.catalog.gather_rows(dirty.tolist(),
-                                                 with_strings=False)
+        cols, present = self.catalog.gather_rows(
+            dirty.tolist(), with_strings=self._plane_reports)
         if not bool(present.all()):
             group.dirty |= dirty_set
             return False                    # raced a remove: restack
-        vals = np.empty((len(KERNEL_COLUMNS), dirty.size), dtype=np.float32)
+        if self._plane_reports:
+            # a rename shifts the group's sorted-path order (every rank
+            # after the move changes): degrade to a full re-upload, the
+            # same fallback as a structural change
+            if any(group.paths[r] != p
+                   for r, p in zip(rows.tolist(), cols["_paths"])):
+                group.dirty |= dirty_set
+                group.structural = True
+                return False
+        cube_live = (self._plane_cube and self._cube_bufs is not None
+                     and not self._cube_stale)
+        if cube_live:
+            # capture the OLD cube cells before the mirror updates — the
+            # signed move subtracts exactly what the resident cube holds
+            old_cells = (group.cgid[rows].copy(), group.csb[rows].copy(),
+                         group.cab[rows].copy(),
+                         np.asarray(group.cols["size"][rows], np.float32),
+                         np.asarray(group.cols["blocks"][rows], np.float32))
+        vals = np.zeros((self._block_rows(), dirty.size), dtype=np.float32)
         for i, name in enumerate(KERNEL_COLUMNS):
             group.cols[name][rows] = cols[name]      # host mirror first
             vals[i] = cols[name]
+        vals[_VALID_COL] = 1.0               # pure updates: rows stay valid
+        if self._plane_reports:
+            vals[_ORD_COL] = group.ord[rows]  # paths unchanged: ranks stay
+        if self._plane_cube:
+            from .profiles import (_FLIP_EDGES, age_buckets_np,
+                                   size_buckets_np)
+            ngid = self._cube_groups.get_or_add_many(
+                cols["owner"], cols["group"], cols["type"],
+                cols["hsm_state"])
+            nsb = size_buckets_np(np.asarray(cols["size"], np.int64))
+            stamps = np.asarray(cols["atime"], np.float64)
+            nab = age_buckets_np(self._cube_ref - stamps)
+            nflip = stamps + _FLIP_EDGES[nab]
+            group.cgid[rows] = ngid
+            group.csb[rows] = nsb
+            group.cab[rows] = nab
+            group.cflip[rows] = nflip
+            finite = np.isfinite(nflip)
+            if finite.any():
+                group.cmin_flip = min(group.cmin_flip,
+                                      float(nflip[finite].min()))
+            vals[_GID_COL] = ngid
+            vals[_SB_COL] = nsb
+            vals[_AB_COL] = nab
         # release the assembled global BEFORE the scatter: it holds the
         # only other reference to the block, which must drop for the
         # donated in-place update to actually donate
         self._global = None
         # the scatter runs on the block's own device (donated buffer); the
-        # validity row is untouched (pure updates never change which rows
-        # exist) and the op is bucket-padded for executable reuse
+        # validity row is re-asserted to 1 (pure updates never change
+        # which rows exist) and the op is bucket-padded for executable
+        # reuse
         prows, pvals = _pad_bucket(rows.astype(np.int32), vals)
         self._bufs[group.gid] = _scatter_rows(self._bufs[group.gid],
                                               prows, pvals)
+        if self._plane_cube and cube_live:
+            if len(self._cube_groups) > self._cube_bp:
+                # a delta minted more groups than the partials can hold:
+                # full cube rebuild on the next query
+                self._cube_stale = True
+                self._cube_cache = None
+            else:
+                ogid, osb, oab, osize, oblocks = old_cells
+                from .profiles import A as _A, S as _S
+                flat = np.concatenate([
+                    (ogid * _S + osb) * _A + oab,
+                    (ngid * _S + nsb) * _A + nab]).astype(np.int32)
+                ones = np.ones(dirty.size, np.float32)
+                cvals = np.stack([
+                    np.concatenate([-ones, ones]),
+                    np.concatenate([-osize,
+                                    np.asarray(cols["size"], np.float32)]),
+                    np.concatenate([-oblocks,
+                                    np.asarray(cols["blocks"],
+                                               np.float32)])])
+                # drop the assembled partials (same donation discipline
+                # as the column global above)
+                self._cube_partials = None
+                self._cube_cache = None
+                pflat, pcvals = _pad_zero(flat, cvals)
+                self._cube_bufs[group.gid] = _cube_scatter(
+                    self._cube_bufs[group.gid], pflat, pcvals)
         group.versions = versions
         self._epoch += 1
         self.delta_refreshes += 1
@@ -451,7 +825,7 @@ class DeviceColumnStore:
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         if self._global is None:
-            shape = (self.n_devices, len(KERNEL_COLUMNS) + 1, self._rp)
+            shape = (self.n_devices, self._block_rows(), self._rp)
             self._global = jax.make_array_from_single_device_arrays(
                 shape, NamedSharding(self.mesh, P("shards")), self._bufs)
         return self._global
@@ -465,6 +839,16 @@ class DeviceColumnStore:
         ``with_agg=False`` skips the fused size-profile aggregation (the
         engine's match path needs only mask + attribution; ``.agg`` then
         reads all-zero)."""
+        # the lock is held for the WHOLE match (launch included): a
+        # concurrent refresh would donate the resident blocks out from
+        # under the in-flight launch and mutate the host mirrors this
+        # match translates through — concurrent matches serialize instead
+        with self._lock:
+            return self._match_locked(exprs, now, use_kernel, with_agg)
+
+    def _match_locked(self, exprs: Sequence, now: float,
+                      use_kernel: Optional[bool] = None,
+                      with_agg: bool = True) -> MeshMatch:
         import jax
         from ..kernels.policy_scan.ops import (_agg_dict, _on_tpu,
                                                _program_tuples,
@@ -474,34 +858,29 @@ class DeviceColumnStore:
         ops_t, colidx_t = _program_tuples(ops, colidx)
         if use_kernel is None:
             use_kernel = _on_tpu()
-        # the lock is held for the WHOLE match (launch included): a
-        # concurrent refresh would donate the resident blocks out from
-        # under the in-flight launch and mutate the host mirrors this
-        # match translates through — concurrent matches serialize instead
-        with self._lock:
-            self.refresh()
-            global_cols = self._assemble()
-            snap = [(g.gid, g.fids, g.cols, g.rows) for g in self._groups]
-            mask, rule, agg = mesh_policy_scan_batch(
-                global_cols, operands, mesh=self.mesh, ops_t=ops_t,
-                colidx_t=colidx_t, size_col=KERNEL_COLUMNS.index("size"),
-                blocks_col=KERNEL_COLUMNS.index("blocks"),
-                valid_col=_VALID_COL, use_kernel=bool(use_kernel),
-                tile=self.tile, with_agg=with_agg)
-            # only mask + attribution cross device→host, never the columns
-            mask_np = np.asarray(jax.device_get(mask))
-            rule_np = np.asarray(jax.device_get(rule))
-            per_rule = np.asarray(jax.device_get(agg))
-            mirrors, group_idx, group_rule = [], [], []
-            for gid, gfids, gcols, grows in snap:
-                idx = np.nonzero(mask_np[gid, :grows] > 0.5)[0]
-                mirrors.append((gfids, gcols))
-                group_idx.append(idx)
-                group_rule.append(rule_np[gid, idx].astype(np.int32))
-            reval = int(sum(s[3] for s in snap))
-            return MeshMatch(self, self._epoch, mirrors, group_idx,
-                             group_rule, _agg_dict(per_rule[0], per_rule),
-                             reval)
+        self.refresh()
+        global_cols = self._assemble()
+        snap = [(g.gid, g.fids, g.cols, g.rows) for g in self._groups]
+        mask, rule, agg = mesh_policy_scan_batch(
+            global_cols, operands, mesh=self.mesh, ops_t=ops_t,
+            colidx_t=colidx_t, size_col=KERNEL_COLUMNS.index("size"),
+            blocks_col=KERNEL_COLUMNS.index("blocks"),
+            valid_col=_VALID_COL, use_kernel=bool(use_kernel),
+            tile=self.tile, with_agg=with_agg)
+        # only mask + attribution cross device→host, never the columns
+        mask_np = np.asarray(jax.device_get(mask))
+        rule_np = np.asarray(jax.device_get(rule))
+        per_rule = np.asarray(jax.device_get(agg))
+        mirrors, group_idx, group_rule = [], [], []
+        for gid, gfids, gcols, grows in snap:
+            idx = np.nonzero(mask_np[gid, :grows] > 0.5)[0]
+            mirrors.append((gfids, gcols))
+            group_idx.append(idx)
+            group_rule.append(rule_np[gid, idx].astype(np.int32))
+        reval = int(sum(s[3] for s in snap))
+        return MeshMatch(self, self._epoch, mirrors, group_idx,
+                         group_rule, _agg_dict(per_rule[0], per_rule),
+                         reval)
 
     def scan(self, expr, now: float,
              use_kernel: Optional[bool] = None) -> Tuple[np.ndarray, dict]:
@@ -510,3 +889,278 @@ class DeviceColumnStore:
         match = self.match([expr], now, use_kernel=use_kernel)
         fids, _sizes, _sort, _ridx = match.plan("size")
         return fids, match.agg
+
+    # -- resident profile cube -------------------------------------------------
+    def _assemble_cube(self):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..kernels.profile_cube.ref import (A_BUCKETS, N_MEASURES,
+                                                S_BUCKETS)
+        if self._cube_partials is None:
+            shape = (self.n_devices, N_MEASURES,
+                     self._cube_bp * S_BUCKETS * A_BUCKETS)
+            self._cube_partials = jax.make_array_from_single_device_arrays(
+                shape, NamedSharding(self.mesh, P("shards")),
+                self._cube_bufs)
+        return self._cube_partials
+
+    def _advance_cube_ref(self, now: float,
+                          update_partials: bool = True) -> int:
+        """Advance the age reference: re-bucket only the rows whose next
+        flip instant passed (block ``_AB_COL`` scatter + mirror update;
+        when the partials are live, a signed cube move too). Mirrors
+        ``core.profiles._ShardCube.sweep``. Lock held."""
+        if now <= self._cube_ref:
+            return 0
+        from .profiles import _FLIP_EDGES, age_buckets_np, A as _A, S as _S
+        moved = 0
+        for group in self._groups:
+            if not group.rows or group.cflip is None \
+                    or group.cmin_flip > now:
+                continue
+            due = np.nonzero(group.cflip <= now)[0]
+            if due.size:
+                stamps = np.asarray(group.cols["atime"][due], np.float64)
+                new_ab = age_buckets_np(now - stamps)
+                if update_partials and self._cube_bufs is not None \
+                        and not self._cube_stale:
+                    gid, sb = group.cgid[due], group.csb[due]
+                    flat = np.concatenate([
+                        (gid * _S + sb) * _A + group.cab[due],
+                        (gid * _S + sb) * _A + new_ab]).astype(np.int32)
+                    ones = np.ones(due.size, np.float32)
+                    size = np.asarray(group.cols["size"][due], np.float32)
+                    blocks = np.asarray(group.cols["blocks"][due],
+                                        np.float32)
+                    cvals = np.stack([
+                        np.concatenate([-ones, ones]),
+                        np.concatenate([-size, size]),
+                        np.concatenate([-blocks, blocks])])
+                    self._cube_partials = None
+                    self._cube_cache = None
+                    pflat, pcvals = _pad_zero(flat, cvals)
+                    self._cube_bufs[group.gid] = _cube_scatter(
+                        self._cube_bufs[group.gid], pflat, pcvals)
+                group.cab[due] = new_ab
+                group.cflip[due] = stamps + _FLIP_EDGES[new_ab]
+                # scatter the new age buckets into the resident block so a
+                # later full cube rebuild reads current codes
+                self._global = None
+                prows, pvals = _pad_bucket(
+                    due.astype(np.int32),
+                    new_ab[None].astype(np.float32))
+                self._bufs[group.gid] = _scatter_row(
+                    self._bufs[group.gid], _AB_COL, prows, pvals[0])
+                moved += int(due.size)
+            finite = np.isfinite(group.cflip)
+            group.cmin_flip = float(group.cflip[finite].min()) \
+                if finite.any() else np.inf
+        self._cube_ref = now
+        self.rollovers += moved
+        return moved
+
+    def _rebuild_cube(self, now: float) -> None:
+        """Cold/fallback path: one ``mesh_profile_cube`` launch rebuilds
+        every device's partial from its resident block. Lock held; blocks
+        must be fresh (call after :meth:`refresh`)."""
+        import jax
+        from ..kernels.profile_cube.ops import mesh_profile_cube
+        self._advance_cube_ref(now, update_partials=False)
+        b = max(len(self._cube_groups), 1)
+        # group-axis capacity: headroom + f32 sublane multiple, so newly
+        # minted groups keep scatter-adding without an immediate rebuild
+        self._cube_bp = max(-(-int(b * self.headroom) // 8) * 8, 8)
+        partials, combined = mesh_profile_cube(
+            self._assemble(), mesh=self.mesh, n_groups=self._cube_bp,
+            gid_col=_GID_COL, size_col=KERNEL_COLUMNS.index("size"),
+            blocks_col=KERNEL_COLUMNS.index("blocks"), sb_col=_SB_COL,
+            ab_col=_AB_COL, valid_col=_VALID_COL, use_kernel=False,
+            tile=self.tile)
+        by_dev = {s.device: s.data for s in partials.addressable_shards}
+        self._cube_bufs = [by_dev[d] for d in self.devices]
+        self._cube_partials = partials
+        self._cube_cache = np.rint(
+            np.asarray(jax.device_get(combined))).astype(np.int64)
+        self._cube_stale = False
+        self.cube_rebuilds += 1
+
+    def _ensure_cube(self, now: float) -> None:
+        if not self._plane_cube:
+            raise PolicyError("cube plane not enabled "
+                              "(DeviceColumnStore.enable_cube_plane)")
+        if (self._cube_bufs is None or self._cube_stale
+                or len(self._cube_groups) > self._cube_bp):
+            self._rebuild_cube(now)
+        else:
+            self._advance_cube_ref(now, update_partials=True)
+
+    def invalidate_cube(self) -> None:
+        """Force a full on-device cube rebuild on the next query (the
+        store-backed analogue of ``ProfileCube.rebuild``)."""
+        with self._lock:
+            self._cube_stale = True
+            self._cube_cache = None
+
+    def analytics_cube(self, now: Optional[float] = None) -> np.ndarray:
+        """Merged (N_MEASURES, B, S, A) int64 cube as of ``now``, served
+        from the resident partials: refresh scatters churned rows, due
+        age rollovers move on-device, and the only cross-device traffic
+        is the psum of the partial cubes."""
+        import jax
+        from ..kernels.profile_cube.ops import mesh_cube_combine
+        from ..kernels.profile_cube.ref import (A_BUCKETS, N_MEASURES,
+                                                S_BUCKETS)
+        with self._lock:
+            if not self._plane_cube:
+                raise PolicyError("cube plane not enabled "
+                                  "(DeviceColumnStore.enable_cube_plane)")
+            now = float(self._cube_clock()) if now is None else float(now)
+            self.refresh()
+            self._ensure_cube(now)
+            self.store_queries += 1
+            if self._cube_cache is None:
+                combined = mesh_cube_combine(self._assemble_cube(),
+                                             mesh=self.mesh)
+                self._cube_cache = np.rint(
+                    np.asarray(jax.device_get(combined))).astype(
+                        np.int64).reshape(N_MEASURES, self._cube_bp,
+                                          S_BUCKETS, A_BUCKETS)
+            b = min(len(self._cube_groups), self._cube_bp)
+            return self._cube_cache[:, :b]
+
+    # -- resident report queries (rbh-find / top-N / rbh-du) -------------------
+    def _require_reports_plane(self) -> None:
+        if not self._plane_reports:
+            raise PolicyError("reports plane not enabled "
+                              "(DeviceColumnStore.enable_reports_plane)")
+
+    def _arrays_positions(self, group: _ShardGroup,
+                          idx: np.ndarray) -> np.ndarray:
+        """Map group-local row indices to catalog ``arrays()`` positions
+        (the host oracle's row order) for tie-exact result ordering."""
+        counts = {}
+        for g in self._groups:
+            for p, sid in enumerate(g.shard_ids):
+                counts[sid] = int(g.offsets[p + 1] - g.offsets[p])
+        base = np.concatenate(
+            [[0], np.cumsum([counts.get(s, 0)
+                             for s in range(self.catalog.n_shards)])])
+        seg = np.searchsorted(group.offsets, idx, side="right") - 1
+        sids = np.asarray(group.shard_ids, np.int64)[seg]
+        return base[sids] + (idx - group.offsets[seg])
+
+    def find_paths(self, expr, now: float, limit: int = 0) -> List[str]:
+        """``rbh-find`` from the resident mesh: one program match, then
+        winning rows translate to paths through the host path mirrors —
+        emitted in catalog ``arrays()`` order (byte-identical to the host
+        fold). Raises PolicyError on glob predicates (host fallback)."""
+        with self._lock:
+            self._require_reports_plane()
+            match = self._match_locked([expr], now, with_agg=False)
+            self.store_queries += 1
+            out: List[str] = []
+            for sid in range(self.catalog.n_shards):
+                group = self._groups[sid % self.n_devices]
+                p = sid // self.n_devices
+                lo = int(group.offsets[p])
+                hi = int(group.offsets[p + 1])
+                idx = match._group_idx[group.gid]
+                seg = idx[(idx >= lo) & (idx < hi)]
+                out.extend(group.paths[i] for i in seg.tolist())
+                if limit and len(out) >= limit:
+                    return out[:limit]
+            return out
+
+    def top_files(self, by: str = "size", k: int = 10, desc: bool = True,
+                  now: float = 0.0) -> List[dict]:
+        """Top-N listing from the resident mesh, two passes: per-device
+        top-k finds the exact global k-th-best value (the union of
+        per-device top-k's contains the global top-k), then a threshold
+        mask recovers every candidate incl. cross-device ties; the final
+        order sorts candidates by native mirror values with the host
+        oracle's exact tie semantics (stable argsort + reversal)."""
+        import jax
+        from .types import FsType
+        from ..kernels.policy_scan.ops import (mesh_column_topk,
+                                               mesh_threshold_rows)
+        if by not in KERNEL_COLUMNS:
+            raise PolicyError(f"top_files by {by!r} is not a kernel column")
+        with self._lock:
+            self._require_reports_plane()
+            self.refresh()
+            self.store_queries += 1
+            if k <= 0 or not any(g.rows for g in self._groups):
+                return []
+            global_cols = self._assemble()
+            col = KERNEL_COLUMNS.index(by)
+            type_col = KERNEL_COLUMNS.index("type")
+            file_code = float(int(FsType.FILE))
+            kd = min(k, self._rp)
+            vals, _idx = mesh_column_topk(
+                global_cols, mesh=self.mesh, col=col, k=kd, desc=desc,
+                valid_col=_VALID_COL, type_col=type_col,
+                file_code=file_code)
+            merged = np.asarray(jax.device_get(vals)).ravel()
+            merged = merged[np.isfinite(merged)]
+            if merged.size == 0:
+                return []
+            merged.sort()                     # ascending
+            kk = min(k, merged.size)
+            thr = float(merged[-kk] if desc else merged[kk - 1])
+            mask = mesh_threshold_rows(
+                global_cols, thr, mesh=self.mesh, col=col, ge=desc,
+                valid_col=_VALID_COL, type_col=type_col,
+                file_code=file_code)
+            mask_np = np.asarray(jax.device_get(mask))
+            cand_vals, cand_pos, cand_paths, cand_fids = [], [], [], []
+            for group in self._groups:
+                rows = np.nonzero(mask_np[group.gid, :group.rows] > 0.5)[0]
+                if not rows.size:
+                    continue
+                cand_vals.append(group.cols[by][rows])
+                cand_pos.append(self._arrays_positions(group, rows))
+                cand_fids.append(group.fids[rows])
+                cand_paths.extend(group.paths[i] for i in rows.tolist())
+            values = np.concatenate(cand_vals)
+            pos = np.concatenate(cand_pos)
+            fids = np.concatenate(cand_fids)
+            # host tie semantics: stable ascending argsort (ties by
+            # arrays position), reversed wholesale for descending
+            order = np.lexsort((pos, values))
+            order = order[::-1][:kk] if desc else order[:kk]
+            return [{"path": cand_paths[o], by: float(values[o]),
+                     "fid": int(fids[o])} for o in order.tolist()]
+
+    def du(self, path_prefix: str) -> dict:
+        """``rbh-du -s`` from the resident mesh: two host binary searches
+        per group into the sorted path mirror produce rank bounds; one
+        fused on-device range aggregate psum-combines
+        [count, files, volume, spc_used] — no row leaves a device."""
+        import jax
+        from .types import FsType
+        from ..kernels.policy_scan.ops import mesh_range_aggregate
+        with self._lock:
+            self._require_reports_plane()
+            self.refresh()
+            self.store_queries += 1
+            prefix = path_prefix.rstrip("/")
+            bounds = np.zeros((self.n_devices, 4), np.float32)
+            for group in self._groups:
+                sp = group.spaths if group.spaths is not None \
+                    else np.zeros(0, dtype="<U1")
+                bounds[group.gid] = (
+                    np.searchsorted(sp, prefix + "/", side="left"),
+                    np.searchsorted(sp, prefix + "0", side="left"),
+                    np.searchsorted(sp, prefix, side="left"),
+                    np.searchsorted(sp, prefix, side="right"))
+            agg = mesh_range_aggregate(
+                self._assemble(), bounds, mesh=self.mesh,
+                ord_col=_ORD_COL, type_col=KERNEL_COLUMNS.index("type"),
+                size_col=KERNEL_COLUMNS.index("size"),
+                blocks_col=KERNEL_COLUMNS.index("blocks"),
+                valid_col=_VALID_COL, file_code=float(int(FsType.FILE)))
+            r = np.asarray(jax.device_get(agg))
+            return {"count": int(round(float(r[0]))),
+                    "files": int(round(float(r[1]))),
+                    "volume": int(round(float(r[2]))),
+                    "spc_used": int(round(float(r[3])))}

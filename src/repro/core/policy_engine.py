@@ -337,6 +337,22 @@ class _IncrementalState:
                                  flip=np.zeros(0))
         self.full_rebuilds += 1
 
+    def rebuild_arrays(self, fids: np.ndarray, sizes: np.ndarray,
+                       sorts: np.ndarray, rules: np.ndarray,
+                       flip_fids: np.ndarray, flips: np.ndarray) -> None:
+        """Load the cached match table from pre-extracted flat arrays —
+        the mesh full scan's output (``MeshMatch.cache_arrays``), where
+        the host columns were never materialized. Same postcondition as
+        :meth:`rebuild`: table + flip schedule valid as of the scan."""
+        self.matched.bulk_load(
+            np.asarray(fids, dtype=np.int64),
+            size=np.asarray(sizes, dtype=np.int64),
+            sort=np.asarray(sorts, dtype=np.float64),
+            rule=np.asarray(rules, dtype=np.int32))
+        self.flips.bulk_load(np.asarray(flip_fids, dtype=np.int64),
+                             flip=np.asarray(flips, dtype=np.float64))
+        self.full_rebuilds += 1
+
     def due_flips(self, now: float) -> Set[int]:
         return set(self.flips.select_le("flip", now).tolist())
 
@@ -676,25 +692,24 @@ class PolicyEngine:
         return mask, rule_idx, cols, "numpy", reason
 
     def _match_mesh(self, policy: PolicyDefinition, extra: Optional[Expr],
-                    now: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                         np.ndarray, int]:
+                    now: float):
         """Mesh-parallel full match over the attached device store.
 
         Each device evaluates the (R, P) program batch over its resident
         shard-group column block (stale groups refresh by delta scatter
-        first); only matched local rows come back and are translated to
-        (fids, sizes, sort_keys, rule_idx) through the store's host
-        mirrors — the catalog columns are never concatenated or
-        re-uploaded. Raises PolicyError when no store is attached or the
-        criteria hold host-only (glob) predicates.
+        first); only matched local rows come back and are translated
+        through the store's host mirrors — the catalog columns are never
+        concatenated or re-uploaded. Returns the live
+        :class:`~repro.core.device_store.MeshMatch` (``plan`` for the
+        action plan, ``cache_arrays`` to prime the incremental cache).
+        Raises PolicyError when no store is attached or the criteria hold
+        host-only (glob) predicates.
         """
         if self.device_store is None:
             raise PolicyError("no device store attached "
                               "(PolicyEngine.attach_device_store)")
-        match = self.device_store.match(self._programs(policy, extra), now,
-                                        with_agg=False)
-        fids, sizes, sort_keys, rule_idx = match.plan(policy.sort_by)
-        return fids, sizes, sort_keys, rule_idx, match.reval
+        return self.device_store.match(self._programs(policy, extra), now,
+                                       with_agg=False)
 
     def _match_incremental(self, policy: PolicyDefinition,
                            state: _IncrementalState, extra: Optional[Expr],
@@ -820,17 +835,35 @@ class PolicyEngine:
             want = evaluator or policy.evaluator
             mesh_done = False
             if want == "policy_scan_mesh":
+                # the mesh full scan primes the incremental cache without
+                # touching host columns: matched rows + age-flip instants
+                # extract from the store's host mirrors (cache_arrays),
+                # same no-lost-deltas bracket as the host scans below
+                rebuild = state is not None and extra_criteria is None
+                if rebuild:
+                    state.begin_rebuild()
                 try:
-                    fids, sizes, sort_keys, ridx, reval = self._match_mesh(
-                        policy, extra_criteria, now)
+                    match = self._match_mesh(policy, extra_criteria, now)
+                    if rebuild:
+                        (fids, sizes, sort_keys, ridx, flip_fids,
+                         flips) = match.cache_arrays(
+                            policy.sort_by, state.age_preds, now)
+                        state.rebuild_arrays(fids, sizes, sort_keys, ridx,
+                                             flip_fids, flips)
+                    else:
+                        fids, sizes, sort_keys, ridx = match.plan(
+                            policy.sort_by)
+                    reval = match.reval
                     used_eval = "policy_scan_mesh"
                     mesh_done = True
-                    # the mesh path never materializes host columns, so the
-                    # incremental cache is left as-is (still coherent: its
-                    # dirty set keeps accumulating deltas) instead of being
-                    # rebuilt in passing like the host-columnar scans below
                 except PolicyError as e:
+                    if rebuild:
+                        state.invalidate()
                     fallback = f"policy_scan_mesh->policy_scan: {e}"
+                except Exception:
+                    if rebuild:
+                        state.invalidate()
+                    raise
             if not mesh_done:
                 rebuild = state is not None and extra_criteria is None
                 if rebuild:

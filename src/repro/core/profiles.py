@@ -39,6 +39,17 @@ Maintenance is **incremental and shard-partitioned**:
 The scalar :class:`~repro.core.stats.StatsAggregator` fold survives as
 the differential oracle; pass ``cube=`` to it to serve its reports from
 here instead.
+
+**Shared delta fan-out contract.** A ProfileCube consumes exactly ONE
+delta feed, claimed via :meth:`ProfileCube.claim_delta_feed`. Three
+mutually exclusive wirings exist: (a) :meth:`ProfileCube.attach` hooks
+the catalog directly; (b) a cube-backed ``StatsAggregator`` forwards its
+own hook; (c) :meth:`ProfileCube.attach_device_store` hands maintenance
+to the :class:`~repro.core.device_store.DeviceColumnStore` cube plane —
+the store's single catalog hook then fans one dirty batch out to the
+resident columns, the partial cubes, and the plane mirrors in the same
+scatter pass, and :meth:`ProfileCube.on_delta` becomes a no-op so a fid
+dirtied in a pipeline batch is applied exactly once.
 """
 from __future__ import annotations
 
@@ -360,6 +371,12 @@ class ProfileCube:
         # to the catalog directly, or a cube-backed StatsAggregator
         # forwards its hook — never both (updates would double-count)
         self._attached = False
+        # mesh-resident serving: attach_device_store() hands maintenance
+        # to the DeviceColumnStore's cube plane (same dirty-row scatter
+        # path that refreshes the resident columns); cube() then answers
+        # from the on-device partials and this object's per-shard host
+        # cubes go quiet
+        self.device_store = None
 
     # -- wiring ---------------------------------------------------------------
     def attach(self, resume: bool = False, path: Optional[str] = None
@@ -392,6 +409,24 @@ class ProfileCube:
             self.rebuild()
         return self
 
+    def attach_device_store(self, store) -> "ProfileCube":
+        """Serve this cube from a :class:`~.device_store.DeviceColumnStore`.
+
+        Claims this cube's single delta feed (shared fan-out contract:
+        the store's catalog hook is the one consumer — its warm-scatter
+        refresh updates resident columns, the cube partials, and the
+        plane mirrors from the same dirty batch, so no mutation ever
+        folds twice). After attaching, :meth:`cube` answers from the
+        mesh-resident partial cubes (``store.analytics_cube``) and every
+        report method rides on it — host columns are never re-read.
+        """
+        if store.catalog is not self.catalog:
+            raise ValueError("device store is bound to a different catalog")
+        self.claim_delta_feed("ProfileCube.attach_device_store")
+        store.enable_cube_plane(self.groups, self.clock)
+        self.device_store = store
+        return self
+
     def claim_delta_feed(self, who: str) -> None:
         """Mark this cube's single delta feed as taken (attach() or a
         cube-backed StatsAggregator); a second claim raises."""
@@ -404,6 +439,8 @@ class ProfileCube:
 
     def on_delta(self, old: Optional[tuple], new: Optional[tuple]) -> None:
         """Catalog delta hook: buffer a signed update on the owning shard."""
+        if self.device_store is not None:
+            return            # store's refresh path maintains the cube plane
         src = new if new is not None else old
         if src is None:
             return
@@ -424,6 +461,12 @@ class ProfileCube:
         deltas are kept; the next flush reconciles anything that raced
         the snapshot.
         """
+        if self.device_store is not None:
+            # store-backed cube: a "rebuild" is just an invalidation — the
+            # next query re-launches mesh_profile_cube over the resident
+            # blocks (host columns are never re-read)
+            self.device_store.invalidate_cube()
+            return
         now = float(self.clock()) if now is None else float(now)
         use_kernel = self.use_kernel if use_kernel is None else use_kernel
         kernel_fn = None
@@ -464,8 +507,14 @@ class ProfileCube:
         """Merged (N_MEASURES, B, S, A) int64 cube as of ``now``.
 
         Flushes each shard's pending deltas and processes due age-bucket
-        rollovers first; merging is plain per-shard array addition."""
+        rollovers first; merging is plain per-shard array addition. With
+        a device store attached the merge is served entirely from the
+        mesh-resident partial cubes instead."""
         now = float(self.clock()) if now is None else float(now)
+        if self.device_store is not None:
+            cube = self.device_store.analytics_cube(now)
+            self.rollovers = self.device_store.rollovers
+            return cube
         for shard in self._shards:            # sweeps may grow the index
             with shard.lock:
                 self.rollovers += shard.sweep(now, self.groups)

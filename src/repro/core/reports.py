@@ -4,6 +4,17 @@ All queries here run against the catalog (vectorized column masks), the
 pre-aggregated stats, or the on-device profile cube — never against the
 filesystem, which is the paper's point: *"all these metadata queries do not
 generate extra load on the filesystem"*.
+
+With :meth:`Reports.attach_device_store`, ``find``/``top_files``/``du``
+additionally go **mesh-resident**: predicates evaluate and top-k/range
+aggregates reduce over the device store's sharded column blocks under
+``shard_map``, and only the winning rows' paths come back through the
+store's host mirrors — a warm query never calls ``Catalog.arrays()``.
+Queries the resident plane cannot serve (glob predicates, non-kernel
+columns) raise :class:`~repro.core.policy.PolicyError` inside the store
+and fall back to the host folds below, which also stay on as the
+byte-identical differential oracle (``tests/core/test_mesh_reports.py``).
+The fallback is recorded in :attr:`Reports.last_fallback_reason`.
 """
 from __future__ import annotations
 
@@ -13,7 +24,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from .catalog import Catalog
-from .policy import Expr, parse_expr
+from .policy import Expr, KERNEL_COLUMNS, PolicyError, parse_expr
 from .profiles import ProfileCube
 from .stats import DirUsage, StatsAggregator
 from .types import FsType, format_size
@@ -71,6 +82,29 @@ class Reports:
         self._pindexes: Dict[int, _PathIndex] = {}
         self._pversions: Dict[int, int] = {}
         self.index_rebuilds = 0
+        # mesh-resident serving (attach_device_store): counters mirror the
+        # engine's RunReport telemetry — store_served / host_served tally
+        # where each query answered, last_fallback_reason says why the
+        # most recent query fell back to the host fold (None = none did)
+        self.device_store = None
+        self.store_served = 0
+        self.host_served = 0
+        self.last_fallback_reason: Optional[str] = None
+
+    def attach_device_store(self, store) -> "Reports":
+        """Serve ``find``/``top_files``/``du`` from a
+        :class:`~repro.core.device_store.DeviceColumnStore`.
+
+        Enables the store's reports plane (sorted-path rank row + host
+        path mirrors beside the resident columns). Host folds stay
+        available as the automatic fallback for queries the plane cannot
+        express — and as the differential oracle.
+        """
+        if store.catalog is not self.catalog:
+            raise ValueError("device store is bound to a different catalog")
+        store.enable_reports_plane()
+        self.device_store = store
+        return self
 
     def _shard_indexes(self) -> List[_PathIndex]:
         """(Re)build the per-shard sorted path indexes that went stale.
@@ -136,8 +170,22 @@ class Reports:
 
     # -- rbh-find -----------------------------------------------------------------
     def find(self, criteria: str, limit: int = 0) -> List[str]:
-        """DB-backed `find`: returns matching paths."""
+        """DB-backed `find`: returns matching paths.
+
+        Store-backed when a device store is attached: the predicate runs
+        as one mesh program over the resident columns and only winning
+        rows' paths return (same order as the host fold). Predicates the
+        kernel can't compile (e.g. name globs) fall back to the host."""
         expr = parse_expr(criteria)
+        if self.device_store is not None:
+            try:
+                out = self.device_store.find_paths(expr, self.clock(),
+                                                   limit=limit)
+                self.store_served += 1
+                return out
+            except PolicyError as exc:
+                self.last_fallback_reason = f"find: {exc}"
+        self.host_served += 1
         cols = self.catalog.arrays()
         mask = expr.mask(cols, self.catalog.strings, self.clock())
         idx = np.nonzero(mask)[0]
@@ -154,7 +202,18 @@ class Reports:
         per :attr:`CatalogShard.version` — two binary searches per shard
         per query, rebuilding only the indexes of shards that churned
         (see ``benchmarks/bench_find_du.py``).
+
+        Store-backed when a device store is attached: rank bounds from
+        the host path mirrors, one fused on-device range-aggregate psum.
         """
+        if self.device_store is not None:
+            try:
+                out = self.device_store.du(path_prefix)
+                self.store_served += 1
+                return out
+            except PolicyError as exc:
+                self.last_fallback_reason = f"du: {exc}"
+        self.host_served += 1
         out = {"count": 0, "files": 0, "volume": 0, "spc_used": 0}
         for index in self._shard_indexes():
             part = index.du(path_prefix)
@@ -163,8 +222,10 @@ class Reports:
         return out
 
     def du_many(self, path_prefixes: List[str]) -> List[dict]:
-        """Batched `du -s`: one index refresh amortized over many subtrees."""
-        self._shard_indexes()
+        """Batched `du -s`: one index refresh amortized over many subtrees
+        (the store-backed path needs no host index prefetch)."""
+        if self.device_store is None:
+            self._shard_indexes()
         return [self.du(p) for p in path_prefixes]
 
     def bind_dir_usage(self, du: DirUsage) -> DirUsage:
@@ -176,6 +237,21 @@ class Reports:
     # -- top-N listings (paper SII-B3) ----------------------------------------------
     def top_files(self, by: str = "size", k: int = 10,
                   desc: bool = True) -> List[dict]:
+        """Top-N files by any kernel column (size/atime/...), exact ties.
+
+        Store-backed when a device store is attached: per-device top-k
+        establishes the global threshold, a mask pass recovers every
+        candidate (incl. cross-device ties), and only those rows' paths
+        come back — ordering matches the host fold byte-for-byte."""
+        if self.device_store is not None and by in KERNEL_COLUMNS:
+            try:
+                out = self.device_store.top_files(by=by, k=k, desc=desc,
+                                                  now=self.clock())
+                self.store_served += 1
+                return out
+            except PolicyError as exc:
+                self.last_fallback_reason = f"top_files: {exc}"
+        self.host_served += 1
         cols = self.catalog.arrays()
         fidx = np.nonzero(cols["type"] == int(FsType.FILE))[0]
         vals = cols[by][fidx]

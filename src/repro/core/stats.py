@@ -21,6 +21,15 @@ on-device analytics subsystem (:class:`~repro.core.profiles.ProfileCube`):
 pass ``cube=`` to serve every report from the incrementally-maintained
 profile cube instead (deltas forward to it, reports reduce over it), while
 this scalar path stays available for byte-identical cross-checks.
+
+**Shared delta fan-out contract.** Each consumer of catalog deltas claims
+exactly one feed. A cube-backed aggregator forwards its own hook into the
+cube (claiming the cube's feed); when the cube is instead served by the
+:class:`~repro.core.device_store.DeviceColumnStore` cube plane
+(``ProfileCube.attach_device_store``), the *store's* hook is the single
+consumer and fans one dirty batch out to resident columns, partial cubes
+and plane mirrors in the same scatter pass — so one pipeline delta batch
+is applied exactly once everywhere (see :mod:`repro.core.profiles`).
 """
 from __future__ import annotations
 

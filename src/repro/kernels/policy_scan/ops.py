@@ -274,6 +274,115 @@ def mesh_policy_scan_batch(global_cols: jax.Array, operands: jax.Array, *,
     )(global_cols, operands.astype(jnp.float32))
 
 
+# -- mesh report ops (device-store-backed rbh-find / top-N / du) -------------
+#
+# These consume the same resident (D, n_cols, Rp) global column array as
+# mesh_policy_scan_batch; only per-device top-k candidates, a row mask, or
+# psum-combined aggregates ever leave the devices.
+
+@partial(jax.jit, static_argnames=("mesh", "col", "k", "desc", "valid_col",
+                                   "type_col", "file_code"))
+def mesh_column_topk(global_cols: jax.Array, *, mesh, col: int, k: int,
+                     desc: bool = True, valid_col: int = -1,
+                     type_col: int = -1, file_code: float = 0.0
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-device top-k over one column, restricted to valid FILE rows.
+
+    Returns ``(vals (D, k) f32, idx (D, k) i32)``, both sharded along
+    ``"shards"``: each device's k best (largest when ``desc``) column
+    values and their local row indices. Rows failing the valid/type filter
+    carry a ∓inf sentinel (callers drop non-finite candidates). The global
+    top-k is a subset of the union of per-device top-k's, so the merged
+    k-th best candidate value is an exact selection threshold for a
+    follow-up :func:`mesh_threshold_rows` pass (which recovers boundary
+    ties a per-device truncation could hide).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def _device(cols):
+        c = cols[0]
+        sel = c[valid_col] > 0.5
+        if type_col >= 0:
+            sel = sel & (c[type_col] == file_code)
+        sentinel = -jnp.inf if desc else jnp.inf
+        key = jnp.where(sel, c[col], sentinel)
+        vals, idx = jax.lax.top_k(key if desc else -key, k)
+        vals = vals if desc else -vals
+        return vals[None], idx[None].astype(jnp.int32)
+
+    return shard_map(_device, mesh=mesh, in_specs=(P("shards"),),
+                     out_specs=(P("shards"), P("shards")),
+                     check_rep=False)(global_cols)
+
+
+@partial(jax.jit, static_argnames=("mesh", "col", "ge", "valid_col",
+                                   "type_col", "file_code"))
+def mesh_threshold_rows(global_cols: jax.Array, thr: jax.Array, *, mesh,
+                        col: int, ge: bool = True, valid_col: int = -1,
+                        type_col: int = -1, file_code: float = 0.0
+                        ) -> jax.Array:
+    """0/1 mask of valid FILE rows whose column value passes ``thr``.
+
+    ``thr`` is a traced f32 scalar (no recompile per threshold). Returns
+    the (D, Rp) f32 mask sharded along ``"shards"`` — the winning-row
+    selection of the two-pass on-device top-k (see
+    :func:`mesh_column_topk`); callers gather only the nonzero rows.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def _device(cols, t):
+        c = cols[0]
+        sel = c[valid_col] > 0.5
+        if type_col >= 0:
+            sel = sel & (c[type_col] == file_code)
+        cmp = (c[col] >= t) if ge else (c[col] <= t)
+        return (sel & cmp).astype(jnp.float32)[None]
+
+    return shard_map(_device, mesh=mesh, in_specs=(P("shards"), P()),
+                     out_specs=P("shards"),
+                     check_rep=False)(global_cols,
+                                      jnp.asarray(thr, jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("mesh", "ord_col", "type_col", "size_col",
+                                   "blocks_col", "valid_col", "file_code"))
+def mesh_range_aggregate(global_cols: jax.Array, bounds: jax.Array, *, mesh,
+                         ord_col: int, type_col: int, size_col: int,
+                         blocks_col: int, valid_col: int,
+                         file_code: float = 0.0) -> jax.Array:
+    """Fused subtree aggregate over sorted-path rank ranges, psum-combined.
+
+    ``bounds`` is (D, 4) f32 sharded along ``"shards"``: per device the
+    two half-open [lo, hi) ∪ [lo2, hi2) rank ranges (host binary searches
+    into that group's sorted path mirror — the device-resident ``ord_col``
+    holds each row's rank in that order). Returns the replicated (4,) f32
+    ``[count, files, volume, spc_used]`` — ``du`` without any row leaving
+    a device.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def _device(cols, b):
+        c = cols[0]
+        lo, hi, lo2, hi2 = b[0, 0], b[0, 1], b[0, 2], b[0, 3]
+        o = c[ord_col]
+        m = (c[valid_col] > 0.5) & (((o >= lo) & (o < hi))
+                                    | ((o >= lo2) & (o < hi2)))
+        f = m & (c[type_col] == file_code)
+        parts = jnp.stack([
+            m.astype(jnp.float32).sum(),
+            f.astype(jnp.float32).sum(),
+            jnp.where(f, c[size_col], 0.0).sum(),
+            jnp.where(f, c[blocks_col], 0.0).sum()])
+        return jax.lax.psum(parts, "shards")
+
+    return shard_map(_device, mesh=mesh, in_specs=(P("shards"), P("shards")),
+                     out_specs=P(), check_rep=False)(
+                         global_cols, bounds.astype(jnp.float32))
+
+
 def column_stack(arrays) -> jax.Array:
     """Stack a Catalog.arrays() dict into the (n_cols, N) f32 kernel layout."""
     from ...core.policy import KERNEL_COLUMNS

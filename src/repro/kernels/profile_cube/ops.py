@@ -4,6 +4,15 @@
 age-in-seconds) into the (3, B, S, A) count/volume/spc_used cube in one
 launch. Rows are padded to the tile with an all-invalid pad; the group
 axis is padded to the sublane multiple and sliced back.
+
+``mesh_profile_cube`` is the mesh-resident analogue: it consumes the
+device store's sharded ``(D, n_cols, Rp)`` global column array under
+``shard_map``, builds one partial cube per device from that device's
+resident block (Pallas kernel or jnp oracle — no column ever moves), and
+``psum``-combines the partials into the replicated merged cube. Both the
+sharded partials (which stay resident for warm scatter-add maintenance)
+and the combined cube come back; ``mesh_cube_combine`` re-runs just the
+psum over already-resident partials after in-place updates.
 """
 from __future__ import annotations
 
@@ -88,3 +97,73 @@ def profile_cube(gid, size, blocks, age, n_groups: int, valid=None,
         use_kernel = _on_tpu()
     return np.asarray(_profile_cube_jit(cols, n_groups, use_kernel, tile,
                                         prebucketed))
+
+
+# -- mesh-resident partial cubes (device-store analytics plane) --------------
+
+@partial(jax.jit, static_argnames=("mesh", "n_groups", "gid_col", "size_col",
+                                   "blocks_col", "sb_col", "ab_col",
+                                   "valid_col", "use_kernel", "tile"))
+def mesh_profile_cube(global_cols: jax.Array, *, mesh, n_groups: int,
+                      gid_col: int, size_col: int, blocks_col: int,
+                      sb_col: int, ab_col: int, valid_col: int,
+                      use_kernel: bool = False, tile: int = 8 * LANE
+                      ) -> tuple:
+    """Per-device partial cubes + psum-combined merge, all under shard_map.
+
+    ``global_cols`` is the store's assembled ``(D, n_cols, Rp)`` f32 array
+    sharded along ``"shards"`` — each device builds the cube of its own
+    resident rows (gid/sb/ab ride as extra analytics rows of the block,
+    bucketized exactly on the host at scatter time), then the partials
+    combine via ``psum``. Returns ``(partials, combined)``:
+
+    * ``partials``: (D, N_MEASURES, n_groups * S * A) f32, sharded along
+      ``"shards"`` — one flat partial cube resident per device, kept by
+      the store for O(dirty) signed scatter-add maintenance;
+    * ``combined``: (N_MEASURES, n_groups, S, A) f32, replicated — the
+      merged cube (callers round to int64; exactness holds while per-cell
+      sums stay inside the f32 integer envelope, like the single-device
+      kernel path).
+
+    ``n_groups`` must be a multiple of 8 (the f32 sublane — the store
+    allocates the group axis padded) and ``Rp`` a multiple of ``tile``.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    def _device(cols):
+        c = cols[0]                              # (n_cols, Rp) local block
+        if use_kernel:
+            cube = profile_cube_pallas(
+                c, n_groups=n_groups, gid_col=gid_col, size_col=size_col,
+                blocks_col=blocks_col, age_col=size_col, valid_col=valid_col,
+                sb_col=sb_col, ab_col=ab_col, tile=tile,
+                interpret=not _on_tpu())
+            cube = cube.reshape(N_MEASURES, n_groups, S_BUCKETS, A_BUCKETS)
+        else:
+            cube = profile_cube_ref(
+                c, n_groups, gid_col=gid_col, size_col=size_col,
+                blocks_col=blocks_col, age_col=size_col, valid_col=valid_col,
+                sb_col=sb_col, ab_col=ab_col)
+        combined = jax.lax.psum(cube, "shards")
+        return cube.reshape(N_MEASURES, -1)[None], combined
+
+    return shard_map(_device, mesh=mesh, in_specs=(P("shards"),),
+                     out_specs=(P("shards"), P()),
+                     check_rep=False)(global_cols)
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def mesh_cube_combine(partials: jax.Array, *, mesh) -> jax.Array:
+    """psum the resident (D, N_MEASURES, B*S*A) sharded partial cubes into
+    the replicated merged cube — the only data that moves is the cube
+    itself (columns stay put), so a warm query after scatter-add updates
+    costs one small collective."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    def _device(p):
+        return jax.lax.psum(p[0], "shards")
+
+    return shard_map(_device, mesh=mesh, in_specs=(P("shards"),),
+                     out_specs=P(), check_rep=False)(partials)

@@ -1,0 +1,379 @@
+"""Mesh-resident analytics plane: store-backed reports == host oracle.
+
+Differential contract (ISSUE 6 / PR 6): with a DeviceColumnStore attached,
+``Reports.find``/``top_files``/``du`` and every ``ProfileCube`` report
+answer from device-resident tensors — byte-identical to the host folds,
+across churn rounds and age rollovers, without calling
+``Catalog.arrays()`` on the warm path. A mesh full scan must also leave
+the engine's incremental match cache valid (primed, not invalidated).
+"""
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.core import (Catalog, DeviceColumnStore, Entry, FsType, HsmState,
+                        PolicyDefinition, PolicyEngine)
+from repro.core.profiles import ProfileCube
+from repro.core.reports import Reports
+
+NOW = float(2 ** 20)          # f32-exact "now"
+
+
+def _shards_mesh():
+    from repro.launch.mesh import make_shards_mesh
+    return make_shards_mesh()
+
+
+def _entry(rng, i, **over):
+    kw = dict(
+        fid=i + 1, name=f"f{i + 1}", path=f"/p/d{i % 5}/f{i + 1}",
+        type=FsType.FILE if rng.random() < 0.9 else FsType.DIR,
+        size=int(rng.integers(0, 2 ** 12)) * 1024,       # narrow: many ties
+        blocks=int(rng.integers(0, 2 ** 10)),
+        owner=f"user{int(rng.integers(0, 4))}",
+        group=f"grp{int(rng.integers(0, 3))}",
+        hsm_state=HsmState(int(rng.integers(0, 5))),
+        atime=NOW - float(rng.integers(0, 10_000)),      # f32-exact
+        mtime=NOW - float(rng.integers(0, 10_000)))
+    kw.update(over)
+    return Entry(**kw)
+
+
+def _random_catalog(rng, n, n_shards=8):
+    cat = Catalog(n_shards=n_shards)
+    cat.upsert_batch([_entry(rng, i) for i in range(n)])
+    return cat
+
+
+def _churn(cat, rng, n_total, k):
+    for f in rng.choice(np.arange(1, n_total + 1), size=k, replace=False):
+        cat.upsert(_entry(rng, int(f) - 1,
+                          size=int(rng.integers(0, 2 ** 12)) * 1024,
+                          atime=NOW - float(rng.integers(0, 10_000))))
+
+
+class _Clock:
+    def __init__(self, t=NOW):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# -- find / top_files / du: store == host oracle ------------------------------
+
+FIND_CRITERIA = [
+    "size > 2M",
+    "size <= 1M and owner == 'user1'",
+    "type == file and last_access > 1000s",
+    "hsm_state == archived or size > 3M",
+    "not (size <= 1M or last_access <= 500s)",
+]
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_reports_differential_across_churn_rounds(seed):
+    rng = np.random.default_rng(seed)
+    cat = _random_catalog(rng, 400)
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r_store = Reports(cat, clock=clock).attach_device_store(store)
+    r_host = Reports(cat, clock=clock)
+    for round_ in range(3):
+        for crit in FIND_CRITERIA:
+            assert r_store.find(crit) == r_host.find(crit), crit
+        assert r_store.find("size > 1M", limit=7) \
+            == r_host.find("size > 1M", limit=7)
+        for by in ("size", "atime"):
+            for desc in (True, False):
+                for k in (1, 10, 64):
+                    assert r_store.top_files(by=by, k=k, desc=desc) \
+                        == r_host.top_files(by=by, k=k, desc=desc), (by, k)
+        for p in ("/p/d0", "/p/d1/", "/p", "/nope", "/p/d4"):
+            assert r_store.du(p) == r_host.du(p), p
+        assert r_store.du_many(["/p/d0", "/p/d2"]) \
+            == r_host.du_many(["/p/d0", "/p/d2"])
+        _churn(cat, rng, 400, 40)
+    assert r_store.last_fallback_reason is None
+    assert r_store.host_served == 0 and r_store.store_served > 0
+
+
+def test_top_files_tie_storm_matches_host_order():
+    """Every file the same size: candidate recovery crosses all devices
+    and ordering falls back to the host's stable-argsort tie semantics."""
+    rng = np.random.default_rng(7)
+    cat = Catalog(n_shards=8)
+    cat.upsert_batch([_entry(rng, i, type=FsType.FILE, size=1024 * 1024)
+                      for i in range(100)])
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r_store = Reports(cat, clock=clock).attach_device_store(store)
+    r_host = Reports(cat, clock=clock)
+    for desc in (True, False):
+        assert r_store.top_files(k=10, desc=desc) \
+            == r_host.top_files(k=10, desc=desc)
+
+
+def test_find_glob_predicate_falls_back_to_host():
+    rng = np.random.default_rng(3)
+    cat = _random_catalog(rng, 60)
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r_store = Reports(cat, clock=clock).attach_device_store(store)
+    out = r_store.find("name == 'f7'")
+    assert out == Reports(cat, clock=clock).find("name == 'f7'")
+    assert r_store.last_fallback_reason is not None
+    assert "find" in r_store.last_fallback_reason
+    assert r_store.host_served == 1
+
+
+def test_warm_reports_never_touch_host_columns():
+    """The acceptance counter: after the cold upload, serving find/
+    top_files/du + profile reports does not call Catalog.arrays()."""
+    rng = np.random.default_rng(5)
+    cat = _random_catalog(rng, 300)
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r_store = Reports(cat, clock=clock).attach_device_store(store)
+    pc = ProfileCube(cat, clock=clock).attach_device_store(store)
+    r_store.find("size > 2M")                     # cold upload happens here
+    baseline = cat.arrays_calls
+    for _ in range(2):
+        r_store.find("size > 1M")
+        r_store.top_files(k=5)
+        r_store.du("/p/d1")
+        pc.report_user("user1", NOW)
+        pc.top_users("volume", 3, NOW)
+        _churn(cat, rng, 300, 10)                 # warm scatter, not arrays()
+    assert cat.arrays_calls == baseline
+    assert store.store_queries > 0
+
+
+# -- profile cube plane -------------------------------------------------------
+
+def test_profile_reports_differential_with_rollovers():
+    rng = np.random.default_rng(11)
+    cat = _random_catalog(rng, 350)
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    pc = ProfileCube(cat, clock=clock).attach_device_store(store)
+
+    def oracle(now):
+        o = ProfileCube(cat, clock=lambda: now)
+        o.rebuild(now=now)
+        return o
+
+    for dt in (0.0, 5000.0, 50_000.0):            # crosses age-bucket edges
+        now = NOW + dt
+        clock.t = now
+        o = oracle(now)
+        for u in ("user0", "user1", "user2", "user3"):
+            assert pc.report_user(u, now) == o.report_user(u, now)
+            assert pc.user_size_profile(u, now) == o.user_size_profile(u, now)
+        assert pc.report_types(now) == o.report_types(now)
+        assert pc.report_hsm(now) == o.report_hsm(now)
+        assert pc.age_profile(now=now) == o.age_profile(now=now)
+        assert pc.top_users("volume", 5, now) == o.top_users("volume", 5, now)
+        assert pc.totals() == o.totals()
+        _churn(cat, rng, 350, 30)
+    assert store.cube_rebuilds == 1               # warm rounds scatter-add
+    assert store.rollovers > 0
+
+
+def test_cube_rebuild_is_invalidation_and_group_growth_rebuilds():
+    rng = np.random.default_rng(13)
+    cat = _random_catalog(rng, 200)
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    pc = ProfileCube(cat, clock=clock).attach_device_store(store)
+    pc.cube(NOW)
+    assert store.cube_rebuilds == 1
+    pc.rebuild()                                  # = invalidate, not host work
+    pc.cube(NOW)
+    assert store.cube_rebuilds == 2
+    # minting more groups than the padded axis forces a resized rebuild
+    cat.upsert_batch([_entry(rng, 200 + i, owner=f"newuser{i}")
+                      for i in range(len(pc.groups) + 8)])
+    o = ProfileCube(cat, clock=clock)
+    o.rebuild(now=NOW)
+    assert pc.totals() == o.totals()
+    assert store.cube_rebuilds >= 3
+
+
+def test_delta_feed_claimed_once():
+    """One pipeline delta batch updates columns + cube + mirrors exactly
+    once: the store owns the single catalog hook, the cube's own hook is
+    dead, and a second feed claim raises."""
+    rng = np.random.default_rng(17)
+    cat = _random_catalog(rng, 120)
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    pc = ProfileCube(cat, clock=clock).attach_device_store(store)
+    with pytest.raises(ValueError):
+        pc.attach()                               # feed already claimed
+    pc.cube(NOW)
+    # exactly one delta application: totals track a batch that rewrites
+    # the same fid twice in one pipeline flush (no double-fold)
+    cat.upsert(_entry(rng, 0, size=2048 * 1024, type=FsType.FILE))
+    cat.upsert(_entry(rng, 0, size=1024 * 1024, type=FsType.FILE))
+    o = ProfileCube(cat, clock=clock)
+    o.rebuild(now=NOW)
+    assert pc.totals() == o.totals()
+    # cube's own shard buffers stayed empty: the store path fed the plane
+    assert all(len(s.pending) == 0 if hasattr(s, "pending") else True
+               for s in pc._shards)
+
+
+# -- mesh full scan primes the incremental cache ------------------------------
+
+def test_mesh_scan_primes_incremental_cache():
+    rng = np.random.default_rng(19)
+    cat = _random_catalog(rng, 300)
+    clock = _Clock()
+    pol = PolicyDefinition.from_config(
+        name="p", action=lambda e, p: True, scope="type == file",
+        rules=[("r0", "size > 2M and last_access > 1000s", {})],
+        sort_by="atime", n_threads=1, batch_size=64, mutates=False,
+        dry_run=True)
+    eng = PolicyEngine(cat, clock=clock)
+    eng.register(pol)
+    eng.enable_incremental()
+    eng.attach_device_store(DeviceColumnStore(cat, _shards_mesh()))
+    r1 = eng.run("p", evaluator="policy_scan_mesh")
+    assert r1.evaluator == "policy_scan_mesh" and r1.mode == "full"
+    assert not r1.fallback_reason
+    r2 = eng.run("p")                             # primed: no rebuild
+    assert r2.mode == "incremental"
+    assert r2.matched == r1.matched
+    assert eng._inc["p"].full_rebuilds == 1
+
+
+def test_mesh_primed_cache_identical_to_host_primed():
+    """The cache a mesh full scan leaves behind matches what a host full
+    scan of the same state builds — same matched table, same flips."""
+    def scenario(prime_mesh):
+        rng = np.random.default_rng(23)
+        cat = _random_catalog(rng, 300)
+        clock = _Clock()
+        pol = PolicyDefinition.from_config(
+            name="p", action=lambda e, p: True, scope="type == file",
+            rules=[("r0", "size > 2M and last_access > 1000s", {})],
+            sort_by="atime", n_threads=1, batch_size=64, mutates=False,
+            dry_run=True)
+        eng = PolicyEngine(cat, clock=clock)
+        eng.register(pol)
+        eng.enable_incremental()
+        if prime_mesh:
+            eng.attach_device_store(DeviceColumnStore(cat, _shards_mesh()))
+            eng.run("p", evaluator="policy_scan_mesh")
+        else:
+            eng.run("p", evaluator="numpy", matching="full")
+        st = eng._inc["p"]
+        fids, sizes, sorts, rules = st.plan_arrays()
+        ffids, fcols = st.flips.live()
+        order, forder = np.argsort(fids), np.argsort(ffids)
+        return (fids[order].tolist(), sizes[order].tolist(),
+                sorts[order].tolist(), rules[order].tolist(),
+                ffids[forder].tolist(), fcols["flip"][forder].tolist())
+
+    assert scenario(True) == scenario(False)
+
+
+def test_mesh_scan_with_extra_criteria_does_not_corrupt_cache():
+    from repro.core import parse_expr
+    rng = np.random.default_rng(29)
+    cat = _random_catalog(rng, 200)
+    clock = _Clock()
+    pol = PolicyDefinition.from_config(
+        name="p", action=lambda e, p: True, scope="type == file",
+        rules=[("r0", "size > 1M", {})], sort_by="size", n_threads=1,
+        batch_size=64, mutates=False, dry_run=True)
+    eng = PolicyEngine(cat, clock=clock)
+    eng.register(pol)
+    eng.enable_incremental()
+    eng.attach_device_store(DeviceColumnStore(cat, _shards_mesh()))
+    eng.run("p", evaluator="policy_scan_mesh")    # primes
+    rebuilds = eng._inc["p"].full_rebuilds
+    r = eng.run("p", evaluator="policy_scan_mesh", matching="full",
+                extra_criteria=parse_expr("size > 2M"))
+    assert r.evaluator == "policy_scan_mesh"
+    assert eng._inc["p"].full_rebuilds == rebuilds   # no partial-scope prime
+    r3 = eng.run("p")
+    assert r3.mode == "incremental"               # cache still valid
+
+
+# -- structural fallbacks -----------------------------------------------------
+
+def test_rename_degrades_to_full_reupload_and_stays_correct():
+    """A path change shifts sorted-path ranks: the warm scatter must not
+    serve stale du ranges — the group re-uploads instead."""
+    rng = np.random.default_rng(31)
+    cat = _random_catalog(rng, 150)
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r_store = Reports(cat, clock=clock).attach_device_store(store)
+    r_host = Reports(cat, clock=clock)
+    assert r_store.du("/p/d1") == r_host.du("/p/d1")
+    e = cat.get(7)
+    cat.upsert(Entry(fid=7, name=e.name, path="/q/moved/f7", type=e.type,
+                     size=e.size, blocks=e.blocks, owner=e.owner,
+                     group=e.group, hsm_state=e.hsm_state, atime=e.atime,
+                     mtime=e.mtime))
+    assert r_store.du("/q/moved") == r_host.du("/q/moved")
+    assert r_store.du("/p/d2") == r_host.du("/p/d2")
+
+
+# -- multi-device (subprocess: 8 fake XLA devices) ----------------------------
+
+@pytest.mark.slow
+def test_mesh_reports_differential_on_eight_devices():
+    out = run_subprocess("""
+import numpy as np
+from repro.core import (Catalog, DeviceColumnStore, Entry, FsType, HsmState)
+from repro.core.profiles import ProfileCube
+from repro.core.reports import Reports
+from repro.launch.mesh import make_shards_mesh
+
+NOW = float(2 ** 20)
+rng = np.random.default_rng(0)
+cat = Catalog(n_shards=16)
+cat.upsert_batch([Entry(
+    fid=i + 1, name=f"f{i + 1}", path=f"/p/d{i % 7}/f{i + 1}",
+    type=FsType.FILE if rng.random() < 0.9 else FsType.DIR,
+    size=int(rng.integers(0, 2 ** 12)) * 1024,
+    blocks=int(rng.integers(0, 2 ** 10)),
+    owner=f"user{i % 4}", group=f"grp{i % 3}",
+    hsm_state=HsmState(int(rng.integers(0, 5))),
+    atime=NOW - float(rng.integers(0, 10_000)),
+    mtime=NOW - float(rng.integers(0, 10_000))) for i in range(3000)])
+clock = lambda: NOW
+mesh = make_shards_mesh(8)
+assert mesh.devices.size == 8
+store = DeviceColumnStore(cat, mesh)
+rs = Reports(cat, clock=clock).attach_device_store(store)
+rh = Reports(cat, clock=clock)
+pc = ProfileCube(cat, clock=clock).attach_device_store(store)
+oracle = ProfileCube(cat, clock=clock)
+oracle.rebuild(now=NOW)
+assert rs.find("size > 2M") == rh.find("size > 2M")
+assert rs.top_files(k=25) == rh.top_files(k=25)
+assert rs.top_files(by="atime", k=25, desc=False) \\
+    == rh.top_files(by="atime", k=25, desc=False)
+for p in ("/p/d0", "/p/d3", "/nope"):
+    assert rs.du(p) == rh.du(p)
+for u in ("user0", "user1"):
+    assert pc.report_user(u, NOW) == oracle.report_user(u, NOW)
+assert pc.totals() == oracle.totals()
+# warm churn touching every device's group, then re-verify
+cat.update_fields_batch(list(range(1, 3000, 31)), size=3 << 20)
+assert rs.find("size > 2M") == rh.find("size > 2M")
+assert rs.top_files(k=25) == rh.top_files(k=25)
+assert rs.du("/p/d5") == rh.du("/p/d5")
+oracle2 = ProfileCube(cat, clock=clock)
+oracle2.rebuild(now=NOW)
+assert pc.totals() == oracle2.totals()
+assert store.delta_refreshes >= 8 and store.cube_rebuilds == 1
+assert rs.last_fallback_reason is None and rs.host_served == 0
+print("OK", len(rs.find("size > 2M")))
+""")
+    assert "OK" in out
