@@ -1,0 +1,229 @@
+"""Multi-tenant report serving (PR 7): permission-bitmap plane vs host folds.
+
+The workload is the multi-tenant monitoring loop: a churning catalog
+queried continuously by MANY subjects (users scoped to their own files,
+group auditors, subtree auditors), every query answered only over what
+that subject may see. The store path ANDs the subject's packed
+permission bitset into the mesh kernels (one fused AND at serving time);
+the host baseline re-folds the catalog columns through
+``GrantTable.visible_mask`` for every query. Rows report warm scoped
+latency (p50/p99 across the subject mix), the speedup over the
+host-filtered folds, and the scoped/unscoped store throughput ratio —
+the "tenant scoping is one AND, not a second scan" claim.
+
+``run_serving_assertion`` is the tier-2 CI entry: at bench size on >= 4
+(host-platform) devices every scoped answer must be byte-identical to
+the grant-filtered host oracle, warm scoped serving must beat the
+host-filtered folds by ``min_speedup``, and scoped store throughput must
+stay within ``min_scoped_ratio`` of unscoped store throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (Catalog, DeviceColumnStore, Entry, FsType,
+                        GrantTable, HsmState)
+from repro.core.profiles import ProfileCube
+from repro.core.reports import Reports
+
+NOW = float(2 ** 20)
+FIND_EXPR = "type == file and size > 3900k and last_access > 1000s"
+
+# rows accumulate into the serving trajectory of BENCH_reports.json —
+# this suite extends the PR6 report-serving story, not a new table
+TRAJECTORY = "reports"
+
+
+def _catalog(n: int, n_shards: int = 16) -> Catalog:
+    rng = np.random.default_rng(0)
+    cat = Catalog(n_shards=n_shards)
+    for lo in range(0, n, 100_000):
+        hi = min(lo + 100_000, n)
+        cat.upsert_batch([Entry(
+            fid=i + 1, name=f"f{i + 1}", path=f"/fs/d{i % 64}/f{i + 1}",
+            type=FsType.FILE if (i % 10) else FsType.DIR,
+            size=int(rng.integers(0, 2 ** 12)) * 1024,
+            blocks=int(rng.integers(0, 2 ** 10)),
+            owner=f"user{i % 8}", group=f"grp{i % 4}",
+            hsm_state=HsmState(int(rng.integers(0, 5))),
+            atime=NOW - float(rng.integers(0, 10_000)),
+            mtime=NOW - float(rng.integers(0, 10_000)),
+        ) for i in range(lo, hi)])
+    return cat
+
+
+def _grants() -> GrantTable:
+    """A realistic tenant mix: self-owners, a group auditor, a subtree
+    auditor and a combined service account."""
+    g = GrantTable()
+    for u in range(4):
+        g.add_subject(f"user{u}")                      # own-files tenants
+    g.add_subject("grp-aud", owners=(), groups=("grp1",))
+    g.add_subject("tree-aud", owners=(), subtrees=("/fs/d7", "/fs/d21"))
+    g.add_subject("svc", owners=("user5",), groups=("grp2",),
+                  subtrees=("/fs/d3",))
+    return g
+
+
+SUBJECT_MIX = ["user0", "user1", "user2", "user3", "grp-aud", "tree-aud",
+               "svc"]
+
+
+def _churn(cat: Catalog, n: int, frac: float, round_: int) -> None:
+    # same steady-state shape as bench_reports: equal dirty count per
+    # shard, rotating fids, so warm scatter executables compile once
+    per_shard = max(int(n * frac) // cat.n_shards, 1)
+    span = n // cat.n_shards
+    fids = [s + cat.n_shards * ((round_ * per_shard + j) % span)
+            for s in range(cat.n_shards) for j in range(per_shard)]
+    cat.update_fields_batch([f if f else cat.n_shards for f in fids],
+                            size=(3 + round_) << 20)
+
+
+def _kernel_queries(r, subject):
+    """The fused-AND family: same kernels scoped and unscoped, so the
+    scoped/unscoped throughput ratio is like-for-like."""
+    return (r.find(FIND_EXPR, subject=subject),
+            r.top_files(k=25, subject=subject),
+            r.du("/fs/d7", subject=subject))
+
+
+def _profile_query(pc, subject):
+    # scoped: a full mesh_scoped_cube launch (+ the per-subject burst
+    # cache); unscoped: a read of the cached psum-combined cube —
+    # different computation classes, so timed and reported separately
+    return pc.top_users("volume", 5, NOW, subject=subject)
+
+
+def _bench_serving(n: int, churn_frac: float, rounds: int,
+                   assert_identity: bool = False,
+                   assert_speedup: float = 0.0,
+                   assert_scoped_ratio: float = 0.0) -> list:
+    cat = _catalog(n)
+    clock = lambda: NOW                                      # noqa: E731
+    grants = _grants()
+    store = DeviceColumnStore(cat, mesh=None)                # default mesh
+    pc = ProfileCube(cat, clock=clock).attach_device_store(store)
+    pc.attach_grants(grants)
+    r_store = Reports(cat, clock=clock, profiles=pc) \
+        .attach_device_store(store).attach_grants(grants)
+    pc_host = ProfileCube(cat, clock=clock)                  # scoped folds
+    pc_host.attach_grants(grants)
+    r_host = Reports(cat, clock=clock, profiles=pc_host) \
+        .attach_grants(grants)
+
+    t0 = time.perf_counter()
+    r_store.find(FIND_EXPR, subject="user0")     # cold upload + perm plane
+    dt_cold = time.perf_counter() - t0
+
+    # warm every query shape (store scoped + unscoped) so the timed
+    # rounds measure steady-state serving, not XLA compilation
+    _churn(cat, n, churn_frac, rounds)
+    for s in SUBJECT_MIX:
+        _kernel_queries(r_store, s)
+        _profile_query(pc, s)
+    _kernel_queries(r_store, None)
+    _profile_query(pc, None)
+
+    lat_scoped, lat_unscoped, lat_host = [], [], []
+    lat_prof_s, lat_prof_h = [], []
+    dt_refresh = 0.0
+    for round_ in range(rounds):
+        _churn(cat, n, churn_frac, round_)
+        t0 = time.perf_counter()
+        store.refresh()                  # shared delta + perm word scatter
+        dt_refresh += time.perf_counter() - t0
+
+        for s in SUBJECT_MIX:
+            t0 = time.perf_counter()
+            got = _kernel_queries(r_store, s)
+            lat_scoped.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            got_p = _profile_query(pc, s)
+            lat_prof_s.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            want = _kernel_queries(r_host, s)
+            lat_host.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            want_p = _profile_query(pc_host, s)
+            lat_prof_h.append(time.perf_counter() - t0)
+            if assert_identity:
+                assert got == want and got_p == want_p, (
+                    f"scoped serving diverged from the grant-filtered "
+                    f"host oracle for subject {s!r}")
+        t0 = time.perf_counter()
+        _kernel_queries(r_store, None)             # unscoped store suite
+        lat_unscoped.append(time.perf_counter() - t0)
+
+    n_q = len(_kernel_queries(r_store, None))      # queries per suite call
+    scoped = np.asarray(lat_scoped) / n_q          # per query, seconds
+    unscoped = np.asarray(lat_unscoped) / n_q
+    host = np.asarray(lat_host) / n_q
+    prof_s, prof_h = np.asarray(lat_prof_s), np.asarray(lat_prof_h)
+    speedup = host.mean() / max(scoped.mean(), 1e-9)
+    ratio = unscoped.mean() / max(scoped.mean(), 1e-9)
+    qps = 1.0 / max(scoped.mean(), 1e-9)
+
+    rows = [
+        ("serving_scoped_cold_upload", 1e6 * dt_cold,
+         f"{n}_rows_{len(SUBJECT_MIX)}_subjects_{store.n_devices}_devices"),
+        ("serving_refresh_warm", 1e6 * dt_refresh / rounds,
+         f"churn_{churn_frac:.0%}_incl_perm_word_scatter"),
+        ("serving_scoped_query_p50", 1e6 * float(np.percentile(scoped, 50)),
+         f"{qps:.0f}_qps_warm"),
+        ("serving_scoped_query_p99", 1e6 * float(np.percentile(scoped, 99)),
+         f"subject_mix_{len(SUBJECT_MIX)}"),
+        ("serving_scoped_query_warm", 1e6 * float(scoped.mean()),
+         f"speedup_{speedup:.2f}x_vs_host_filtered_fold"),
+        ("serving_unscoped_query_warm", 1e6 * float(unscoped.mean()),
+         f"scoped_over_unscoped_throughput_{ratio:.2f}"),
+        ("serving_host_filtered_fold", 1e6 * float(host.mean()),
+         f"{n}_rows_visible_mask_per_query"),
+        ("serving_scoped_profile", 1e6 * float(prof_s.mean()),
+         f"speedup_{prof_h.mean() / max(prof_s.mean(), 1e-9):.2f}x"
+         f"_vs_host_scoped_fold"),
+    ]
+
+    if assert_identity:
+        assert r_store.last_fallback_reason is None, \
+            r_store.last_fallback_reason
+        assert r_store.host_served == 0 and r_store.store_served > 0
+        assert store.perm_materializations >= 1
+    if assert_speedup:
+        assert speedup >= assert_speedup, (
+            f"scoped store serving no longer beats the host-filtered "
+            f"folds ({speedup:.2f}x < {assert_speedup}x at n={n}, "
+            f"{store.n_devices} devices)")
+    if assert_scoped_ratio:
+        # the fused AND must stay almost free relative to unscoped serving
+        scoped_qps = 1.0 / max(scoped.mean(), 1e-9)
+        unscoped_qps = 1.0 / max(unscoped.mean(), 1e-9)
+        assert scoped_qps >= assert_scoped_ratio * unscoped_qps, (
+            f"scoped throughput {scoped_qps:.0f} qps fell below "
+            f"{assert_scoped_ratio:.0%} of unscoped {unscoped_qps:.0f} qps")
+    return rows
+
+
+def run_serving_assertion(n: int = 200_000, min_devices: int = 4,
+                          min_speedup: float = 3.0,
+                          min_scoped_ratio: float = 0.8) -> list:
+    """Tier-2 CI entry: scoped serving is byte-identical to the
+    grant-filtered oracle, beats the host folds, and costs ~nothing over
+    unscoped store serving."""
+    import jax
+    n_dev = len(jax.devices())
+    assert n_dev >= min_devices, (
+        f"need >= {min_devices} devices (run under XLA_FLAGS="
+        f"--xla_force_host_platform_device_count=8), have {n_dev}")
+    return _bench_serving(n, churn_frac=0.01, rounds=3,
+                          assert_identity=True,
+                          assert_speedup=min_speedup,
+                          assert_scoped_ratio=min_scoped_ratio)
+
+
+def run(smoke: bool = False) -> list:
+    return _bench_serving(20_000 if smoke else 200_000,
+                          churn_frac=0.01, rounds=2 if smoke else 3,
+                          assert_identity=True)

@@ -29,6 +29,7 @@ MODULES = [
     "bench_policy",      # SII-B1: policy matching (4 evaluators + engine)
     "bench_find_du",     # SII-B4: find/du clones vs POSIX walk
     "bench_reports",     # PR6: mesh-resident reports vs host folds
+    "bench_serving",     # PR7: multi-tenant scoped serving (perm bitmaps)
     "bench_kvtier",      # adapted C7/C8: KV-page tiering + paged serving
     "roofline_report",   # SRoofline summary rows from the dry-run artifacts
 ]
@@ -43,9 +44,17 @@ def _call_run(mod, smoke: bool) -> list:
 
 
 def _append_trajectory(traj_dir: str, name: str, rows: list,
-                       smoke: bool, elapsed_s: float) -> str:
-    """Append one dated entry to BENCH_<module>.json (atomic rewrite)."""
-    short = name[len("bench_"):] if name.startswith("bench_") else name
+                       smoke: bool, elapsed_s: float,
+                       short: str = None) -> str:
+    """Append one dated entry to BENCH_<short>.json (atomic rewrite).
+
+    ``short`` defaults to the module name minus its ``bench_`` prefix; a
+    module may override it with a module-level ``TRAJECTORY`` attribute
+    to append into another module's trajectory file (``bench_serving``
+    extends ``BENCH_reports.json`` rather than starting a new table).
+    """
+    if short is None:
+        short = name[len("bench_"):] if name.startswith("bench_") else name
     os.makedirs(traj_dir, exist_ok=True)
     path = os.path.join(traj_dir, f"BENCH_{short}.json")
     payload = {"suite": f"benchmarks.{name}", "entries": []}
@@ -104,7 +113,8 @@ def main() -> None:
                                 "derived": str(derived), "module": name})
             if args.trajectory:
                 _append_trajectory(args.trajectory, name, rows,
-                                   args.smoke, time.time() - t_mod)
+                                   args.smoke, time.time() - t_mod,
+                                   short=getattr(mod, "TRAJECTORY", None))
         except Exception as e:
             failed += 1
             print(f"{name},NaN,ERROR_{type(e).__name__}", flush=True)

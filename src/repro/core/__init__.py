@@ -12,6 +12,7 @@ from .catalog import Catalog, CatalogShard, ColumnBatch, StringTable
 from .changelog import ChangelogHub, ChangelogStream
 from .device_store import DeviceColumnStore, MeshMatch
 from .fidtable import FidTable
+from .grants import GrantTable, Subject
 from .scanner import Scanner, multi_client_scan, prune_missing
 from .pipeline import EventPipeline, PipelineConfig
 from .policy import (ALWAYS, And, Cmp, Const, Expr, Not, Or, PolicyError,
@@ -33,7 +34,7 @@ __all__ = [
     "size_profile_bucket",
     "Catalog", "CatalogShard", "ColumnBatch", "StringTable",
     "ChangelogHub", "ChangelogStream", "DeviceColumnStore", "FidTable",
-    "MeshMatch",
+    "GrantTable", "MeshMatch", "Subject",
     "GroupIndex", "ProfileCube",
     "Scanner", "multi_client_scan", "prune_missing",
     "EventPipeline", "PipelineConfig",

@@ -92,6 +92,27 @@ rows** maintained by the very same upload/scatter paths:
   buckets reference the store-wide ``_cube_ref`` instant; per-row flip
   schedules (mirroring ``core.profiles._ShardCube``) advance only the
   due rows when queries move ``now`` forward.
+* **permissions plane**
+  (:meth:`DeviceColumnStore.enable_permissions_plane`): per-subject
+  visibility pre-materialized as packed ``uint32`` bitsets over local
+  row ids — one ``(1, Sp, Rp/32)`` buffer per device beside the column
+  block (bit ``b`` of word ``w``, LSB first, covers local row
+  ``w*32+b``). Visibility comes from a
+  :class:`~repro.core.grants.GrantTable`: uid/gid ownership via the
+  interned owner/group codes, directory-subtree grants resolved through
+  the reports plane's sorted-path mirrors (the same rank-range shape as
+  ``du`` — enabling this plane forces the reports plane on). Scoped
+  queries (``subject=`` on :meth:`match` / :meth:`find_paths` /
+  :meth:`top_files` / :meth:`du` / :meth:`analytics_cube`) assemble the
+  sharded perm array and pass a traced subject id; the kernels unpack
+  that one subject's bitset and AND it into the match mask — tenant
+  scoping is one fused AND, never a second scan. Maintenance follows
+  the column contract: pure updates re-derive only the dirty rows'
+  visibility and scatter just the *changed packed words* into the
+  resident buffer; structural churn / renames / re-pads invalidate the
+  group's bitset alongside its block, and any
+  :attr:`~repro.core.grants.GrantTable.version` tick (new subject or
+  grant change) re-materializes on the next scoped query.
 
 Shared delta fan-out contract
 -----------------------------
@@ -375,7 +396,7 @@ class _ShardGroup:
     __slots__ = ("gid", "shard_ids", "fids", "cols", "rows", "versions",
                  "dirty", "structural", "uploaded", "_order",
                  "offsets", "paths", "spaths", "ord",
-                 "cgid", "csb", "cab", "cflip", "cmin_flip")
+                 "cgid", "csb", "cab", "cflip", "cmin_flip", "vis")
 
     def __init__(self, gid: int, shard_ids: List[int]) -> None:
         self.gid = gid
@@ -397,6 +418,7 @@ class _ShardGroup:
         self.cab: Optional[np.ndarray] = None      # cube: age bucket @ ref
         self.cflip: Optional[np.ndarray] = None    # cube: next flip instant
         self.cmin_flip = np.inf
+        self.vis: Optional[np.ndarray] = None      # perms: (Sp, rows) bool
 
     def locate(self, fids: np.ndarray) -> Optional[np.ndarray]:
         """Local row index per fid; None when any fid is not in the mirror
@@ -461,6 +483,12 @@ class DeviceColumnStore:
         self._cube_partials = None          # assembled (D, 3, bp*S*A) array
         self._cube_cache = None             # host int64 (3, bp, S, A) cache
         self._cube_stale = True             # partials need a full rebuild
+        self._plane_perm = False
+        self._grants = None                 # shared core.grants.GrantTable
+        self._grants_version = -1           # table version at materialization
+        self._perm_sp = 0                   # padded subject capacity
+        self._perm_bufs = None              # per-device (1, Sp, Rp/32) u32
+        self._perm_global = None            # assembled (D, Sp, Rp/32) array
         # perf counters (benchmarks / tests assert the refresh mode taken)
         self.full_uploads = 0
         self.delta_refreshes = 0
@@ -468,6 +496,8 @@ class DeviceColumnStore:
         self.cube_rebuilds = 0
         self.rollovers = 0                  # age-bucket moves served on-device
         self.store_queries = 0              # report queries served resident
+        self.perm_materializations = 0      # per-group bitset (re)builds
+        self.perm_word_scatters = 0         # warm packed-word scatters
         catalog.add_delta_hook(self._on_delta)
 
     # -- analytics planes ------------------------------------------------------
@@ -487,9 +517,12 @@ class DeviceColumnStore:
         self._cube_partials = None
         self._cube_cache = None
         self._cube_stale = True
+        self._perm_bufs = None
+        self._perm_global = None
         self._epoch += 1
         for group in self._groups:
             group.uploaded = False
+            group.vis = None
 
     def enable_reports_plane(self) -> None:
         """Add the sorted-path-rank row + path mirrors to every block so
@@ -520,6 +553,29 @@ class DeviceColumnStore:
             self._cube_ref = float(clock())
             self._drop_device_state()
 
+    def enable_permissions_plane(self, grants) -> None:
+        """Add the per-subject packed visibility bitsets (multi-tenant
+        ``subject=`` scoping). ``grants`` is the shared
+        :class:`~repro.core.grants.GrantTable`; subtree grants resolve
+        through the sorted-path mirrors, so this forces the reports plane
+        on. Idempotent for the same table; a different table raises."""
+        with self._lock:
+            if self._plane_perm:
+                if grants is not self._grants:
+                    raise PolicyError(
+                        "permissions plane already enabled with a "
+                        "different GrantTable")
+                return
+            if self.tile % 32:
+                raise PolicyError(
+                    "permissions plane packs rows into uint32 words; the "
+                    f"block tile must be a multiple of 32, got {self.tile}")
+            self._plane_perm = True
+            self._grants = grants
+            self._grants_version = -1
+            self._plane_reports = True
+            self._drop_device_state()
+
     def detach(self) -> None:
         """Unregister from the catalog's delta hooks and drop the device
         blocks. A store that is replaced (mesh resize, re-attach) must be
@@ -540,6 +596,7 @@ class DeviceColumnStore:
                 group.paths = group.spaths = group.ord = None
                 group.cgid = group.csb = group.cab = group.cflip = None
                 group.cmin_flip = np.inf
+                group.vis = None
             self._rp = 0
 
     # -- delta intake (catalog mutation hooks) --------------------------------
@@ -656,6 +713,13 @@ class DeviceColumnStore:
         self._global = None
         self._epoch += 1
         self.full_uploads += 1
+        if self._plane_perm:
+            # row positions changed: the group's resident bitset indexes
+            # stale local rows — re-materialize on the next scoped query
+            group.vis = None
+            if self._perm_bufs is not None:
+                self._perm_bufs[group.gid] = None
+            self._perm_global = None
         if self._plane_cube:
             # row positions changed: this group's resident partial cube
             # no longer matches the block — rebuild on next cube query
@@ -766,6 +830,34 @@ class DeviceColumnStore:
                 pflat, pcvals = _pad_zero(flat, cvals)
                 self._cube_bufs[group.gid] = _cube_scatter(
                     self._cube_bufs[group.gid], pflat, pcvals)
+        if self._plane_perm:
+            perm_live = (group.vis is not None
+                         and self._perm_bufs is not None
+                         and self._perm_bufs[group.gid] is not None
+                         and self._grants.version == self._grants_version)
+            if perm_live:
+                # pure updates keep row positions and paths, so only the
+                # ownership grants of the dirty rows can flip: re-derive
+                # just those rows' visibility and scatter the changed
+                # packed words (scatter-SET, idempotent under dup pad)
+                nvis = self._vis_rows(
+                    group, np.asarray(cols["owner"], np.int64),
+                    np.asarray(cols["group"], np.int64), group.ord[rows])
+                if not np.array_equal(nvis, group.vis[:, rows]):
+                    group.vis[:, rows] = nvis
+                    words = np.unique(rows // 32)
+                    wvals = self._pack_words(group, words)
+                    self._perm_global = None
+                    pw, pv = _pad_bucket(words.astype(np.int32), wvals)
+                    self._perm_bufs[group.gid] = _scatter_rows(
+                        self._perm_bufs[group.gid], pw, pv)
+                    self.perm_word_scatters += 1
+            else:
+                # grants ticked (or the bitset never materialized): a
+                # row-granular patch could miss a new subject's row —
+                # drop the group's bitset, rebuilt on the next scoped
+                # query by _ensure_perms
+                group.vis = None
         group.versions = versions
         self._epoch += 1
         self.delta_refreshes += 1
@@ -820,6 +912,132 @@ class DeviceColumnStore:
                 "device store could not settle a refresh: the catalog "
                 "grew on every re-pad attempt")
 
+    # -- permissions plane (per-subject packed visibility bitsets) -------------
+    def _require_permissions_plane(self) -> None:
+        if not self._plane_perm:
+            raise PolicyError(
+                "permissions plane not enabled "
+                "(DeviceColumnStore.enable_permissions_plane)")
+
+    def _subject_id(self, subject: str) -> int:
+        # unknown subjects raise KeyError, NOT PolicyError: a host
+        # fallback would fail identically, so degrading serves nothing
+        return int(self._grants.subject_id(subject))
+
+    def _vis_rows(self, group: _ShardGroup, owner: np.ndarray,
+                  grp: np.ndarray, rank: np.ndarray) -> np.ndarray:
+        """(Sp, k) bool visibility of k group rows (given their interned
+        owner/group codes and sorted-path ranks) for every registered
+        subject — rows past the registry stay all-False pad. Mirrors
+        :meth:`GrantTable.visible_mask` exactly: ownership via code
+        membership, subtrees via the same rank-range searches ``du``
+        uses on the sorted-path mirror. Lock held."""
+        strings = self.catalog.strings
+        subjects = self._grants.subjects()
+        out = np.zeros((self._perm_sp, owner.size), dtype=bool)
+        sp = group.spaths if group.spaths is not None \
+            else np.zeros(0, dtype="<U1")
+        for sid, s in enumerate(subjects):
+            v = out[sid]
+            ocodes = [c for c in (strings.code_of(u) for u in s.owners)
+                      if c is not None]
+            if ocodes:
+                v |= np.isin(owner, ocodes)
+            gcodes = [c for c in (strings.code_of(g) for g in s.groups)
+                      if c is not None]
+            if gcodes:
+                v |= np.isin(grp, gcodes)
+            for pref in s.subtrees:
+                lo = np.searchsorted(sp, pref + "/", side="left")
+                hi = np.searchsorted(sp, pref + "0", side="left")
+                lo2 = np.searchsorted(sp, pref, side="left")
+                hi2 = np.searchsorted(sp, pref, side="right")
+                v |= ((rank >= lo) & (rank < hi)) \
+                    | ((rank >= lo2) & (rank < hi2))
+        return out
+
+    def _pack_group(self, group: _ShardGroup) -> np.ndarray:
+        """Pack a group's full (Sp, rows) visibility into the (Sp, Rp/32)
+        uint32 bit layout: bit b of word w (LSB first) = local row
+        w*32+b; pad rows read 0 (invisible, like the validity row)."""
+        full = np.zeros((self._perm_sp, self._rp), dtype=bool)
+        if group.rows:
+            full[:, : group.rows] = group.vis
+        return np.packbits(full, axis=1,
+                           bitorder="little").view(np.uint32)
+
+    def _pack_words(self, group: _ShardGroup,
+                    words: np.ndarray) -> np.ndarray:
+        """(Sp, k) packed uint32 values of k whole words re-read from the
+        group's visibility mirror (rows past ``group.rows`` pack to 0) —
+        the warm-scatter payload after a dirty-row visibility change."""
+        rows = (words[:, None] * 32 + np.arange(32)).reshape(-1)
+        sub = np.zeros((self._perm_sp, rows.size), dtype=bool)
+        inside = rows < group.rows
+        sub[:, inside] = group.vis[:, rows[inside]]
+        return np.packbits(sub, axis=1, bitorder="little").view(np.uint32)
+
+    def _ensure_perms(self) -> None:
+        """Materialize / refresh the resident bitsets. Lock held; call
+        AFTER :meth:`refresh` (full uploads invalidate group bitsets).
+        Any :attr:`GrantTable.version` tick or subject-capacity overflow
+        re-materializes every group; otherwise only groups whose bitset
+        was invalidated (structural churn, re-pad) rebuild."""
+        import jax
+        g = self._grants
+        if (g.version != self._grants_version or self._perm_bufs is None
+                or len(g) > self._perm_sp):
+            # subject axis padded like the group axis of the cube plane:
+            # headroom + sublane multiple, so new subjects keep landing
+            # without an immediate re-materialization
+            self._perm_sp = max(
+                -(-int(max(len(g), 1) * self.headroom) // 8) * 8, 8)
+            self._grants_version = g.version
+            self._perm_bufs = [None] * self.n_devices
+            self._perm_global = None
+            for group in self._groups:
+                group.vis = None
+        changed = False
+        for group in self._groups:
+            if group.vis is not None \
+                    and self._perm_bufs[group.gid] is not None:
+                continue
+            if group.rows:
+                owner = np.asarray(group.cols["owner"], np.int64)
+                grp = np.asarray(group.cols["group"], np.int64)
+                rank = group.ord
+            else:
+                owner = grp = np.zeros(0, np.int64)
+                rank = np.zeros(0, np.int64)
+            group.vis = self._vis_rows(group, owner, grp, rank)
+            self._perm_bufs[group.gid] = jax.device_put(
+                self._pack_group(group)[None], self.devices[group.gid])
+            self.perm_materializations += 1
+            changed = True
+        if changed:
+            self._perm_global = None
+            self._epoch += 1
+
+    def _assemble_perm(self):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if self._perm_global is None:
+            shape = (self.n_devices, self._perm_sp, self._rp // 32)
+            self._perm_global = jax.make_array_from_single_device_arrays(
+                shape, NamedSharding(self.mesh, P("shards")),
+                self._perm_bufs)
+        return self._perm_global
+
+    def _resolve_subject(self, subject: Optional[str]):
+        """(perm array, traced subject id) for a scoped query, or
+        (None, None) unscoped. Lock held, AFTER refresh()."""
+        if subject is None:
+            return None, None
+        self._require_permissions_plane()
+        self._ensure_perms()
+        sid = np.int32(self._subject_id(subject))
+        return self._assemble_perm(), sid
+
     # -- matching --------------------------------------------------------------
     def _assemble(self):
         import jax
@@ -832,23 +1050,27 @@ class DeviceColumnStore:
 
     def match(self, exprs: Sequence, now: float,
               use_kernel: Optional[bool] = None,
-              with_agg: bool = True) -> MeshMatch:
+              with_agg: bool = True,
+              subject: Optional[str] = None) -> MeshMatch:
         """Evaluate ``[combined criteria] + per-rule conditions`` over the
         resident mesh; see :class:`MeshMatch`. Raises PolicyError on glob
         (host-only) predicates — callers fall back to the numpy path.
         ``with_agg=False`` skips the fused size-profile aggregation (the
         engine's match path needs only mask + attribution; ``.agg`` then
-        reads all-zero)."""
+        reads all-zero). ``subject=`` ANDs that subject's permission
+        bitset into the match (permissions plane required)."""
         # the lock is held for the WHOLE match (launch included): a
         # concurrent refresh would donate the resident blocks out from
         # under the in-flight launch and mutate the host mirrors this
         # match translates through — concurrent matches serialize instead
         with self._lock:
-            return self._match_locked(exprs, now, use_kernel, with_agg)
+            return self._match_locked(exprs, now, use_kernel, with_agg,
+                                      subject)
 
     def _match_locked(self, exprs: Sequence, now: float,
                       use_kernel: Optional[bool] = None,
-                      with_agg: bool = True) -> MeshMatch:
+                      with_agg: bool = True,
+                      subject: Optional[str] = None) -> MeshMatch:
         import jax
         from ..kernels.policy_scan.ops import (_agg_dict, _on_tpu,
                                                _program_tuples,
@@ -859,6 +1081,7 @@ class DeviceColumnStore:
         if use_kernel is None:
             use_kernel = _on_tpu()
         self.refresh()
+        perm, sid = self._resolve_subject(subject)
         global_cols = self._assemble()
         snap = [(g.gid, g.fids, g.cols, g.rows) for g in self._groups]
         mask, rule, agg = mesh_policy_scan_batch(
@@ -866,7 +1089,7 @@ class DeviceColumnStore:
             colidx_t=colidx_t, size_col=KERNEL_COLUMNS.index("size"),
             blocks_col=KERNEL_COLUMNS.index("blocks"),
             valid_col=_VALID_COL, use_kernel=bool(use_kernel),
-            tile=self.tile, with_agg=with_agg)
+            tile=self.tile, with_agg=with_agg, perm=perm, subject=sid)
         # only mask + attribution cross device→host, never the columns
         mask_np = np.asarray(jax.device_get(mask))
         rule_np = np.asarray(jax.device_get(rule))
@@ -1001,11 +1224,16 @@ class DeviceColumnStore:
             self._cube_stale = True
             self._cube_cache = None
 
-    def analytics_cube(self, now: Optional[float] = None) -> np.ndarray:
+    def analytics_cube(self, now: Optional[float] = None,
+                       subject: Optional[str] = None) -> np.ndarray:
         """Merged (N_MEASURES, B, S, A) int64 cube as of ``now``, served
         from the resident partials: refresh scatters churned rows, due
         age rollovers move on-device, and the only cross-device traffic
-        is the psum of the partial cubes."""
+        is the psum of the partial cubes. ``subject=`` bins only rows
+        that subject may see — one fused :func:`mesh_scoped_cube` launch
+        over the resident block + bitsets (no resident scoped partials;
+        the rollover advance above keeps the block's age codes exact as
+        of ``now``, so the scoped cube matches the host oracle)."""
         import jax
         from ..kernels.profile_cube.ops import mesh_cube_combine
         from ..kernels.profile_cube.ref import (A_BUCKETS, N_MEASURES,
@@ -1018,6 +1246,21 @@ class DeviceColumnStore:
             self.refresh()
             self._ensure_cube(now)
             self.store_queries += 1
+            if subject is not None:
+                from ..kernels.profile_cube.ops import mesh_scoped_cube
+                self._require_permissions_plane()
+                self._ensure_perms()
+                sid = np.int32(self._subject_id(subject))
+                cube = mesh_scoped_cube(
+                    self._assemble(), self._assemble_perm(), sid,
+                    mesh=self.mesh, n_groups=self._cube_bp,
+                    gid_col=_GID_COL,
+                    size_col=KERNEL_COLUMNS.index("size"),
+                    blocks_col=KERNEL_COLUMNS.index("blocks"),
+                    sb_col=_SB_COL, ab_col=_AB_COL, valid_col=_VALID_COL)
+                b = min(len(self._cube_groups), self._cube_bp)
+                return np.rint(np.asarray(jax.device_get(cube))).astype(
+                    np.int64)[:, :b]
             if self._cube_cache is None:
                 combined = mesh_cube_combine(self._assemble_cube(),
                                              mesh=self.mesh)
@@ -1049,14 +1292,17 @@ class DeviceColumnStore:
         sids = np.asarray(group.shard_ids, np.int64)[seg]
         return base[sids] + (idx - group.offsets[seg])
 
-    def find_paths(self, expr, now: float, limit: int = 0) -> List[str]:
+    def find_paths(self, expr, now: float, limit: int = 0,
+                   subject: Optional[str] = None) -> List[str]:
         """``rbh-find`` from the resident mesh: one program match, then
         winning rows translate to paths through the host path mirrors —
         emitted in catalog ``arrays()`` order (byte-identical to the host
-        fold). Raises PolicyError on glob predicates (host fallback)."""
+        fold). Raises PolicyError on glob predicates (host fallback).
+        ``subject=`` lists only rows that subject may see."""
         with self._lock:
             self._require_reports_plane()
-            match = self._match_locked([expr], now, with_agg=False)
+            match = self._match_locked([expr], now, with_agg=False,
+                                       subject=subject)
             self.store_queries += 1
             out: List[str] = []
             for sid in range(self.catalog.n_shards):
@@ -1072,7 +1318,8 @@ class DeviceColumnStore:
             return out
 
     def top_files(self, by: str = "size", k: int = 10, desc: bool = True,
-                  now: float = 0.0) -> List[dict]:
+                  now: float = 0.0,
+                  subject: Optional[str] = None) -> List[dict]:
         """Top-N listing from the resident mesh, two passes: per-device
         top-k finds the exact global k-th-best value (the union of
         per-device top-k's contains the global top-k), then a threshold
@@ -1091,6 +1338,7 @@ class DeviceColumnStore:
             self.store_queries += 1
             if k <= 0 or not any(g.rows for g in self._groups):
                 return []
+            perm, sid = self._resolve_subject(subject)
             global_cols = self._assemble()
             col = KERNEL_COLUMNS.index(by)
             type_col = KERNEL_COLUMNS.index("type")
@@ -1099,7 +1347,7 @@ class DeviceColumnStore:
             vals, _idx = mesh_column_topk(
                 global_cols, mesh=self.mesh, col=col, k=kd, desc=desc,
                 valid_col=_VALID_COL, type_col=type_col,
-                file_code=file_code)
+                file_code=file_code, perm=perm, subject=sid)
             merged = np.asarray(jax.device_get(vals)).ravel()
             merged = merged[np.isfinite(merged)]
             if merged.size == 0:
@@ -1110,7 +1358,7 @@ class DeviceColumnStore:
             mask = mesh_threshold_rows(
                 global_cols, thr, mesh=self.mesh, col=col, ge=desc,
                 valid_col=_VALID_COL, type_col=type_col,
-                file_code=file_code)
+                file_code=file_code, perm=perm, subject=sid)
             mask_np = np.asarray(jax.device_get(mask))
             cand_vals, cand_pos, cand_paths, cand_fids = [], [], [], []
             for group in self._groups:
@@ -1131,11 +1379,12 @@ class DeviceColumnStore:
             return [{"path": cand_paths[o], by: float(values[o]),
                      "fid": int(fids[o])} for o in order.tolist()]
 
-    def du(self, path_prefix: str) -> dict:
+    def du(self, path_prefix: str, subject: Optional[str] = None) -> dict:
         """``rbh-du -s`` from the resident mesh: two host binary searches
         per group into the sorted path mirror produce rank bounds; one
         fused on-device range aggregate psum-combines
-        [count, files, volume, spc_used] — no row leaves a device."""
+        [count, files, volume, spc_used] — no row leaves a device.
+        ``subject=`` counts only rows that subject may see."""
         import jax
         from .types import FsType
         from ..kernels.policy_scan.ops import mesh_range_aggregate
@@ -1143,6 +1392,7 @@ class DeviceColumnStore:
             self._require_reports_plane()
             self.refresh()
             self.store_queries += 1
+            perm, sid = self._resolve_subject(subject)
             prefix = path_prefix.rstrip("/")
             bounds = np.zeros((self.n_devices, 4), np.float32)
             for group in self._groups:
@@ -1158,7 +1408,8 @@ class DeviceColumnStore:
                 ord_col=_ORD_COL, type_col=KERNEL_COLUMNS.index("type"),
                 size_col=KERNEL_COLUMNS.index("size"),
                 blocks_col=KERNEL_COLUMNS.index("blocks"),
-                valid_col=_VALID_COL, file_code=float(int(FsType.FILE)))
+                valid_col=_VALID_COL, file_code=float(int(FsType.FILE)),
+                perm=perm, subject=sid)
             r = np.asarray(jax.device_get(agg))
             return {"count": int(round(float(r[0]))),
                     "files": int(round(float(r[1]))),

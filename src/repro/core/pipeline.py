@@ -26,6 +26,15 @@ catalog for a notified fid always observes at least that change. Within one
 batch, records are folded per fid in record order (one refresh per fid; an
 ``UNLNK`` arriving after a ``CREAT`` of the same fid in the same batch wins
 — the entry is removed, never materialized, and never reported dirty).
+
+The same committed mutations also reach every ``Catalog.add_delta_hook``
+consumer (each claiming exactly one feed — see the shared fan-out
+contract in ``core.device_store`` / ``ProfileCube.claim_delta_feed``):
+the :class:`~repro.core.device_store.DeviceColumnStore` drains one dirty
+batch into the resident column block, the cube partials, the plane
+mirrors **and the permissions-plane bitsets** in a single scatter pass,
+so changelog ingestion keeps multi-tenant ``subject=`` serving fresh
+without any consumer rescanning the catalog.
 """
 from __future__ import annotations
 

@@ -377,6 +377,16 @@ class ProfileCube:
         # from the on-device partials and this object's per-shard host
         # cubes go quiet
         self.device_store = None
+        # multi-tenant scoping: attach_grants() wires the shared
+        # GrantTable; report methods then accept subject= and serve a
+        # per-subject cube (store-backed via the permissions plane, or
+        # the host grant-filtered fold)
+        self.grants = None
+        # scoped-cube burst cache: one subject typically reads several
+        # reports in a row (report_user, report_types, ...) off the SAME
+        # scoped cube — cache it per subject, keyed on every input that
+        # can change it (time, catalog tick, grant set, group-axis width)
+        self._scoped_cache: Dict[str, Tuple[tuple, np.ndarray]] = {}
 
     # -- wiring ---------------------------------------------------------------
     def attach(self, resume: bool = False, path: Optional[str] = None
@@ -425,6 +435,19 @@ class ProfileCube:
         self.claim_delta_feed("ProfileCube.attach_device_store")
         store.enable_cube_plane(self.groups, self.clock)
         self.device_store = store
+        if self.grants is not None:
+            store.enable_permissions_plane(self.grants)
+        return self
+
+    def attach_grants(self, grants) -> "ProfileCube":
+        """Wire a :class:`~repro.core.grants.GrantTable` so reports accept
+        ``subject=``. With a device store attached this enables its
+        permissions plane (scoped cubes run as one fused
+        ``mesh_scoped_cube`` launch); without one the scoped queries fold
+        the grant-filtered host columns."""
+        self.grants = grants
+        if self.device_store is not None:
+            self.device_store.enable_permissions_plane(grants)
         return self
 
     def claim_delta_feed(self, who: str) -> None:
@@ -503,14 +526,72 @@ class ProfileCube:
                            cube=cube)
 
     # -- query ----------------------------------------------------------------
-    def cube(self, now: Optional[float] = None) -> np.ndarray:
+    def _scoped_cube_host(self, now: float, subject: str) -> np.ndarray:
+        """Grant-filtered host fold: the scalar oracle for ``subject=``
+        scoping — bins only the rows the subject may see into the shared
+        group axis (exact int64, same bucket tables as the shard cubes).
+        Serves host-only scoped queries and the store's PolicyError
+        fallback; the differential suite pins the device path to it."""
+        if self.grants is None:
+            raise RuntimeError(
+                "subject= scoping needs attach_grants(GrantTable)")
+        cols = self.catalog.arrays()
+        vis = self.grants.visible_mask(subject, cols, self.strings)
+        idx = np.nonzero(vis)[0]
+        gids = self.groups.get_or_add_many(
+            cols["owner"][idx], cols["group"][idx], cols["type"][idx],
+            cols["hsm_state"][idx])
+        b = len(self.groups)
+        out = np.zeros((N_MEASURES, b, S, A), dtype=np.int64)
+        if not idx.size:
+            return out
+        sizes = np.asarray(cols["size"], np.int64)[idx]
+        blocks = np.asarray(cols["blocks"], np.int64)[idx]
+        sb = size_buckets_np(sizes)
+        ab = age_buckets_np(now - np.asarray(cols["atime"],
+                                             np.float64)[idx])
+        flat = (gids * S + sb) * A + ab
+        k = b * S * A
+        c = out.reshape(N_MEASURES, -1)
+        c[0, :] = np.bincount(flat, minlength=k)[:k]
+        c[1, :] = _bincount_i64(flat, sizes, k, c[0])
+        c[2, :] = _bincount_i64(flat, blocks, k, c[0])
+        return out
+
+    def cube(self, now: Optional[float] = None,
+             subject: Optional[str] = None) -> np.ndarray:
         """Merged (N_MEASURES, B, S, A) int64 cube as of ``now``.
 
         Flushes each shard's pending deltas and processes due age-bucket
         rollovers first; merging is plain per-shard array addition. With
         a device store attached the merge is served entirely from the
-        mesh-resident partial cubes instead."""
+        mesh-resident partial cubes instead. ``subject=`` returns the
+        per-subject scoped cube (store permissions plane when available,
+        the grant-filtered host fold otherwise)."""
         now = float(self.clock()) if now is None else float(now)
+        if subject is not None:
+            gver = self.grants.version if self.grants is not None else -1
+            key = (now, self.catalog.version, gver, len(self.groups))
+            hit = self._scoped_cache.get(subject)
+            if hit is not None and hit[0] == key:
+                return hit[1].copy()          # burst: one compute, N reports
+            cube = None
+            if self.device_store is not None:
+                from .policy import PolicyError
+                try:
+                    cube = self.device_store.analytics_cube(
+                        now, subject=subject)
+                    self.rollovers = self.device_store.rollovers
+                except PolicyError:
+                    pass              # plane not enabled: host fold below
+            if cube is None:
+                cube = self._scoped_cube_host(now, subject)
+            # the fold itself may have grown the group axis; catalog/grant
+            # versions stay the PRE-compute ones, so a mutation racing the
+            # fold forces a miss (never a stale hit) on the next call
+            key = (now, key[1], gver, len(self.groups))
+            self._scoped_cache[subject] = (key, cube.copy())
+            return cube
         if self.device_store is not None:
             cube = self.device_store.analytics_cube(now)
             self.rollovers = self.device_store.rollovers
@@ -527,12 +608,13 @@ class ProfileCube:
         return out
 
     # -- rbh-report queries (dict-identical to the scalar StatsAggregator) ----
-    def _cube_and_cols(self, now: Optional[float]
+    def _cube_and_cols(self, now: Optional[float],
+                       subject: Optional[str] = None
                        ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
         """Merged cube + group key columns, sliced to one consistent group
         axis: a concurrent flush may grow the index between the two reads,
         and a group born after this cube merged has no cells in it."""
-        cube = self.cube(now)
+        cube = self.cube(now, subject=subject)
         b = cube.shape[1]
         cols = {k: v[:b] for k, v in self.groups.columns().items()}
         return cube, cols
@@ -545,8 +627,9 @@ class ProfileCube:
                 "avg_size": vol / cnt if cnt else 0.0}
 
     def _report_by(self, field: str, code: int, label_key: str,
-                   label: str, now: Optional[float]) -> List[dict]:
-        cube, cols = self._cube_and_cols(now)
+                   label: str, now: Optional[float],
+                   subject: Optional[str] = None) -> List[dict]:
+        cube, cols = self._cube_and_cols(now, subject)
         out = []
         for t in sorted(FsType, key=int):
             mask = (cols[field] == code) & (cols["type"] == int(t))
@@ -560,23 +643,25 @@ class ProfileCube:
             out.append(d)
         return out
 
-    def report_user(self, user: str, now: Optional[float] = None
-                    ) -> List[dict]:
-        """`rbh-report -u user`: per-type count/volume/avg from the cube."""
+    def report_user(self, user: str, now: Optional[float] = None,
+                    subject: Optional[str] = None) -> List[dict]:
+        """`rbh-report -u user`: per-type count/volume/avg from the cube.
+        ``subject=`` restricts every measure to that subject's grants."""
         code = self.strings.code_of(user)
         if code is None:
             return []
-        return self._report_by("owner", code, "user", user, now)
+        return self._report_by("owner", code, "user", user, now, subject)
 
-    def report_group(self, grp: str, now: Optional[float] = None
-                     ) -> List[dict]:
+    def report_group(self, grp: str, now: Optional[float] = None,
+                     subject: Optional[str] = None) -> List[dict]:
         code = self.strings.code_of(grp)
         if code is None:
             return []
-        return self._report_by("group", code, "group", grp, now)
+        return self._report_by("group", code, "group", grp, now, subject)
 
-    def report_types(self, now: Optional[float] = None) -> Dict[str, dict]:
-        cube, cols = self._cube_and_cols(now)
+    def report_types(self, now: Optional[float] = None,
+                     subject: Optional[str] = None) -> Dict[str, dict]:
+        cube, cols = self._cube_and_cols(now, subject)
         out = {}
         for t in sorted(FsType, key=int):
             mask = cols["type"] == int(t)
@@ -586,8 +671,9 @@ class ProfileCube:
                     out[t.name.lower()] = d
         return out
 
-    def report_hsm(self, now: Optional[float] = None) -> Dict[str, dict]:
-        cube, cols = self._cube_and_cols(now)
+    def report_hsm(self, now: Optional[float] = None,
+                   subject: Optional[str] = None) -> Dict[str, dict]:
+        cube, cols = self._cube_and_cols(now, subject)
         out = {}
         for h in sorted(HsmState, key=int):
             mask = cols["hsm"] == int(h)
@@ -597,13 +683,13 @@ class ProfileCube:
                     out[h.name.lower()] = d
         return out
 
-    def user_size_profile(self, user: str, now: Optional[float] = None
-                          ) -> Dict[str, int]:
+    def user_size_profile(self, user: str, now: Optional[float] = None,
+                          subject: Optional[str] = None) -> Dict[str, int]:
         out = {lbl: 0 for lbl in SIZE_PROFILE_LABELS}
         code = self.strings.code_of(user)
         if code is None:
             return out
-        cube, cols = self._cube_and_cols(now)
+        cube, cols = self._cube_and_cols(now, subject)
         mask = (cols["owner"] == code) & (cols["type"] == int(FsType.FILE))
         if mask.any():
             per_s = cube[0][mask].sum(axis=(0, 2))         # (S,)
@@ -612,10 +698,11 @@ class ProfileCube:
         return out
 
     def age_profile(self, user: Optional[str] = None,
-                    now: Optional[float] = None) -> Dict[str, dict]:
+                    now: Optional[float] = None,
+                    subject: Optional[str] = None) -> Dict[str, dict]:
         """The paper's data-age profile: per age bucket count/volume/spc
         (optionally restricted to one user) — new over the scalar path."""
-        cube, cols = self._cube_and_cols(now)
+        cube, cols = self._cube_and_cols(now, subject)
         mask = np.ones(cube.shape[1], dtype=bool)
         if user is not None:
             code = self.strings.code_of(user)
@@ -627,8 +714,9 @@ class ProfileCube:
 
     def top_users(self, by: str = "volume", k: int = 10,
                   type_: FsType = FsType.FILE,
-                  now: Optional[float] = None) -> List[dict]:
-        cube, cols = self._cube_and_cols(now)
+                  now: Optional[float] = None,
+                  subject: Optional[str] = None) -> List[dict]:
+        cube, cols = self._cube_and_cols(now, subject)
         tmask = cols["type"] == int(type_)
         rows = []
         for code in np.unique(cols["owner"][tmask]).tolist():

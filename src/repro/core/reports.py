@@ -14,7 +14,16 @@ Queries the resident plane cannot serve (glob predicates, non-kernel
 columns) raise :class:`~repro.core.policy.PolicyError` inside the store
 and fall back to the host folds below, which also stay on as the
 byte-identical differential oracle (``tests/core/test_mesh_reports.py``).
-The fallback is recorded in :attr:`Reports.last_fallback_reason`.
+The fallback is recorded in :attr:`Reports.last_fallback_reason` —
+cleared again by the next store-served success, so the telemetry always
+describes the *most recent* query, not a sticky historical one.
+
+With :meth:`Reports.attach_grants`, every serving query additionally
+accepts ``subject=`` (multi-tenant scoping): the store path ANDs that
+subject's pre-materialized permission bitset into the kernel's match
+mask (``DeviceColumnStore`` permissions plane), and the host folds
+filter by :meth:`~repro.core.grants.GrantTable.visible_mask` — the two
+stay byte-identical (``tests/core/test_tenant_scoping.py``).
 """
 from __future__ import annotations
 
@@ -90,21 +99,57 @@ class Reports:
         self.store_served = 0
         self.host_served = 0
         self.last_fallback_reason: Optional[str] = None
+        # multi-tenant scoping (attach_grants): the shared GrantTable
+        # behind every subject= query
+        self.grants = None
 
     def attach_device_store(self, store) -> "Reports":
         """Serve ``find``/``top_files``/``du`` from a
         :class:`~repro.core.device_store.DeviceColumnStore`.
 
         Enables the store's reports plane (sorted-path rank row + host
-        path mirrors beside the resident columns). Host folds stay
-        available as the automatic fallback for queries the plane cannot
-        express — and as the differential oracle.
+        path mirrors beside the resident columns) — and, when a
+        :class:`~repro.core.grants.GrantTable` is already attached, its
+        permissions plane too. Host folds stay available as the
+        automatic fallback for queries the plane cannot express — and as
+        the differential oracle.
         """
         if store.catalog is not self.catalog:
             raise ValueError("device store is bound to a different catalog")
         store.enable_reports_plane()
         self.device_store = store
+        if self.grants is not None:
+            store.enable_permissions_plane(self.grants)
         return self
+
+    def attach_grants(self, grants) -> "Reports":
+        """Wire a :class:`~repro.core.grants.GrantTable` so every serving
+        query accepts ``subject=``. With a device store attached this
+        enables its permissions plane (scoping becomes one fused AND on
+        the mesh); without one the host folds filter by
+        :meth:`GrantTable.visible_mask`."""
+        self.grants = grants
+        if self.device_store is not None:
+            self.device_store.enable_permissions_plane(grants)
+        return self
+
+    def _grant_mask(self, subject: str, cols) -> np.ndarray:
+        """Host-side visibility mask for ``subject`` — the scalar oracle
+        the store's bitset path is pinned to byte-for-byte."""
+        if self.grants is None:
+            raise RuntimeError(
+                "subject= scoping needs attach_grants(GrantTable)")
+        return self.grants.visible_mask(subject, cols,
+                                        self.catalog.strings)
+
+    def reset_counters(self) -> None:
+        """Zero the serving telemetry (``store_served`` / ``host_served``
+        / ``index_rebuilds``) and clear ``last_fallback_reason`` — a
+        monitoring scrape boundary."""
+        self.store_served = 0
+        self.host_served = 0
+        self.index_rebuilds = 0
+        self.last_fallback_reason = None
 
     def _shard_indexes(self) -> List[_PathIndex]:
         """(Re)build the per-shard sorted path indexes that went stale.
@@ -132,32 +177,62 @@ class Reports:
             raise RuntimeError("no stats aggregator or profile cube attached")
         return self.stats
 
-    def report_user(self, user: str) -> List[dict]:
+    def _profiles_backend(self):
+        """Scoped (``subject=``) report queries need the profile cube —
+        the scalar aggregator keeps no per-row grant information."""
+        if self.profiles is None:
+            raise RuntimeError(
+                "subject= report scoping needs an attached ProfileCube")
+        return self.profiles
+
+    def report_user(self, user: str,
+                    subject: Optional[str] = None) -> List[dict]:
         """O(1) per-user summary (pre-aggregated / profile cube)."""
+        if subject is not None:
+            return self._profiles_backend().report_user(user,
+                                                        subject=subject)
         return self._backend().report_user(user)
 
-    def report_group(self, grp: str) -> List[dict]:
+    def report_group(self, grp: str,
+                     subject: Optional[str] = None) -> List[dict]:
+        if subject is not None:
+            return self._profiles_backend().report_group(grp,
+                                                         subject=subject)
         return self._backend().report_group(grp)
 
-    def report_types(self) -> Dict[str, dict]:
+    def report_types(self, subject: Optional[str] = None) -> Dict[str, dict]:
+        if subject is not None:
+            return self._profiles_backend().report_types(subject=subject)
         return self._backend().report_types()
 
-    def report_hsm(self) -> Dict[str, dict]:
+    def report_hsm(self, subject: Optional[str] = None) -> Dict[str, dict]:
+        if subject is not None:
+            return self._profiles_backend().report_hsm(subject=subject)
         return self._backend().report_hsm()
 
-    def user_size_profile(self, user: str) -> Dict[str, int]:
+    def user_size_profile(self, user: str,
+                          subject: Optional[str] = None) -> Dict[str, int]:
+        if subject is not None:
+            return self._profiles_backend().user_size_profile(
+                user, subject=subject)
         return self._backend().user_size_profile(user)
 
     def top_users(self, by: str = "volume", k: int = 10,
-                  type_: FsType = FsType.FILE) -> List[dict]:
+                  type_: FsType = FsType.FILE,
+                  subject: Optional[str] = None) -> List[dict]:
+        if subject is not None:
+            return self._profiles_backend().top_users(by=by, k=k,
+                                                      type_=type_,
+                                                      subject=subject)
         return self._backend().top_users(by=by, k=k, type_=type_)
 
-    def age_profile(self, user: Optional[str] = None) -> Dict[str, dict]:
+    def age_profile(self, user: Optional[str] = None,
+                    subject: Optional[str] = None) -> Dict[str, dict]:
         """Data-age profile (profile-cube only — the scalar aggregator
         keeps no age axis)."""
         if self.profiles is None:
             raise RuntimeError("age profiles need an attached ProfileCube")
-        return self.profiles.age_profile(user)
+        return self.profiles.age_profile(user, subject=subject)
 
     def format_user_report(self, user: str) -> str:
         rows = self.report_user(user)
@@ -169,25 +244,31 @@ class Reports:
         return "\n".join(lines)
 
     # -- rbh-find -----------------------------------------------------------------
-    def find(self, criteria: str, limit: int = 0) -> List[str]:
+    def find(self, criteria: str, limit: int = 0,
+             subject: Optional[str] = None) -> List[str]:
         """DB-backed `find`: returns matching paths.
 
         Store-backed when a device store is attached: the predicate runs
         as one mesh program over the resident columns and only winning
         rows' paths return (same order as the host fold). Predicates the
-        kernel can't compile (e.g. name globs) fall back to the host."""
+        kernel can't compile (e.g. name globs) fall back to the host.
+        ``subject=`` scopes the listing to that subject's grants."""
         expr = parse_expr(criteria)
         if self.device_store is not None:
             try:
                 out = self.device_store.find_paths(expr, self.clock(),
-                                                   limit=limit)
+                                                   limit=limit,
+                                                   subject=subject)
                 self.store_served += 1
+                self.last_fallback_reason = None
                 return out
             except PolicyError as exc:
                 self.last_fallback_reason = f"find: {exc}"
         self.host_served += 1
         cols = self.catalog.arrays()
         mask = expr.mask(cols, self.catalog.strings, self.clock())
+        if subject is not None:
+            mask = mask & self._grant_mask(subject, cols)
         idx = np.nonzero(mask)[0]
         if limit:
             idx = idx[:limit]
@@ -195,7 +276,33 @@ class Reports:
         return [paths[i] for i in idx]
 
     # -- rbh-du --------------------------------------------------------------------
-    def du(self, path_prefix: str) -> dict:
+    def _du_host(self, path_prefix: str,
+                 subject: Optional[str] = None) -> dict:
+        """Host `du` fold. Unscoped queries answer from the per-shard
+        sorted-path prefix sums; scoped ones cannot (the visibility mask
+        varies per subject, invalidating the precomputed sums), so they
+        fold the grant-filtered columns directly — which is also the
+        shape of the differential oracle the store path is pinned to."""
+        if subject is None:
+            out = {"count": 0, "files": 0, "volume": 0, "spc_used": 0}
+            for index in self._shard_indexes():
+                part = index.du(path_prefix)
+                for k in out:
+                    out[k] += part[k]
+            return out
+        cols = self.catalog.arrays()
+        vis = self._grant_mask(subject, cols)
+        prefix = path_prefix.rstrip("/")
+        p = np.asarray(cols["_paths"])
+        m = vis & ((p == prefix) | np.char.startswith(p, prefix + "/"))
+        f = m & (cols["type"] == int(FsType.FILE))
+        return {"count": int(m.sum()), "files": int(f.sum()),
+                "volume": int(np.asarray(cols["size"],
+                                         np.int64)[f].sum()),
+                "spc_used": int(np.asarray(cols["blocks"],
+                                           np.int64)[f].sum())}
+
+    def du(self, path_prefix: str, subject: Optional[str] = None) -> dict:
         """DB-backed `du -s`: subtree aggregate via sorted-prefix-range.
 
         Answers from per-shard sorted path indexes + prefix sums cached
@@ -205,28 +312,48 @@ class Reports:
 
         Store-backed when a device store is attached: rank bounds from
         the host path mirrors, one fused on-device range-aggregate psum.
+        ``subject=`` counts only rows that subject may see.
         """
         if self.device_store is not None:
             try:
-                out = self.device_store.du(path_prefix)
+                out = self.device_store.du(path_prefix, subject=subject)
                 self.store_served += 1
+                self.last_fallback_reason = None
                 return out
             except PolicyError as exc:
                 self.last_fallback_reason = f"du: {exc}"
         self.host_served += 1
-        out = {"count": 0, "files": 0, "volume": 0, "spc_used": 0}
-        for index in self._shard_indexes():
-            part = index.du(path_prefix)
-            for k in out:
-                out[k] += part[k]
-        return out
+        return self._du_host(path_prefix, subject)
 
-    def du_many(self, path_prefixes: List[str]) -> List[dict]:
+    def du_many(self, path_prefixes: List[str],
+                subject: Optional[str] = None) -> List[dict]:
         """Batched `du -s`: one index refresh amortized over many subtrees
-        (the store-backed path needs no host index prefetch)."""
-        if self.device_store is None:
+        (the store-backed path needs no host index prefetch).
+
+        If the store rejects mid-batch (detach, structural churn, an
+        unservable prefix), the FIRST ``PolicyError`` flips the whole
+        remainder to the host path and prefetches the shard indexes
+        once — instead of every remaining prefix paying its own fallback
+        round-trip through the store."""
+        if self.device_store is None and subject is None:
             self._shard_indexes()
-        return [self.du(p) for p in path_prefixes]
+        use_store = self.device_store is not None
+        out = []
+        for p in path_prefixes:
+            if use_store:
+                try:
+                    out.append(self.device_store.du(p, subject=subject))
+                    self.store_served += 1
+                    self.last_fallback_reason = None
+                    continue
+                except PolicyError as exc:
+                    self.last_fallback_reason = f"du: {exc}"
+                    use_store = False
+                    if subject is None:
+                        self._shard_indexes()   # one prefetch, not per-prefix
+            self.host_served += 1
+            out.append(self._du_host(p, subject))
+        return out
 
     def bind_dir_usage(self, du: DirUsage) -> DirUsage:
         """Route a :class:`DirUsage`'s deeper-than-``max_depth`` queries to
@@ -236,24 +363,31 @@ class Reports:
 
     # -- top-N listings (paper SII-B3) ----------------------------------------------
     def top_files(self, by: str = "size", k: int = 10,
-                  desc: bool = True) -> List[dict]:
+                  desc: bool = True,
+                  subject: Optional[str] = None) -> List[dict]:
         """Top-N files by any kernel column (size/atime/...), exact ties.
 
         Store-backed when a device store is attached: per-device top-k
         establishes the global threshold, a mask pass recovers every
         candidate (incl. cross-device ties), and only those rows' paths
-        come back — ordering matches the host fold byte-for-byte."""
+        come back — ordering matches the host fold byte-for-byte.
+        ``subject=`` ranks only rows that subject may see."""
         if self.device_store is not None and by in KERNEL_COLUMNS:
             try:
                 out = self.device_store.top_files(by=by, k=k, desc=desc,
-                                                  now=self.clock())
+                                                  now=self.clock(),
+                                                  subject=subject)
                 self.store_served += 1
+                self.last_fallback_reason = None
                 return out
             except PolicyError as exc:
                 self.last_fallback_reason = f"top_files: {exc}"
         self.host_served += 1
         cols = self.catalog.arrays()
-        fidx = np.nonzero(cols["type"] == int(FsType.FILE))[0]
+        sel = cols["type"] == int(FsType.FILE)
+        if subject is not None:
+            sel = sel & self._grant_mask(subject, cols)
+        fidx = np.nonzero(sel)[0]
         vals = cols[by][fidx]
         if vals.size == 0:
             return []
@@ -280,5 +414,6 @@ class Reports:
                         "children": int(counts[i])})
         return out
 
-    def oldest_files(self, k: int = 10) -> List[dict]:
-        return self.top_files(by="atime", k=k, desc=False)
+    def oldest_files(self, k: int = 10,
+                     subject: Optional[str] = None) -> List[dict]:
+        return self.top_files(by="atime", k=k, desc=False, subject=subject)

@@ -200,6 +200,25 @@ def _program_tuples(ops: np.ndarray, colidx: np.ndarray
             tuple(tuple(int(c) for c in row) for row in np.asarray(colidx)))
 
 
+def _subject_bits(perm_local: jax.Array, sid: jax.Array) -> jax.Array:
+    """Unpack one subject's packed visibility words into a per-row bool.
+
+    ``perm_local`` is a device-local (Sp, W) uint32 permissions plane
+    (one packed bitset row per subject, W = Rp // 32 words): bit ``b`` of
+    word ``w`` — LSB-first — covers local row ``w * 32 + b``, matching
+    the store's host-side ``np.packbits(..., bitorder="little")``
+    staging. ``sid`` is a traced subject id (no recompile per subject).
+    Returns the (W * 32,) bool visibility over the block's padded row
+    axis — Rp is a tile multiple and the tile a multiple of 32, so the
+    shapes line up exactly.
+    """
+    words = jax.lax.dynamic_index_in_dim(perm_local, sid, axis=0,
+                                         keepdims=False)
+    bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]) \
+        & jnp.uint32(1)
+    return (bits != 0).reshape(-1)
+
+
 @partial(jax.jit, static_argnames=("mesh", "ops_t", "colidx_t", "size_col",
                                    "blocks_col", "valid_col", "use_kernel",
                                    "tile", "with_agg"))
@@ -208,7 +227,9 @@ def mesh_policy_scan_batch(global_cols: jax.Array, operands: jax.Array, *,
                            colidx_t: Tuple[Tuple[int, ...], ...],
                            size_col: int = 0, blocks_col: int = 1,
                            valid_col: int = -1, use_kernel: bool = False,
-                           tile: int = 8 * LANE, with_agg: bool = True
+                           tile: int = 8 * LANE, with_agg: bool = True,
+                           perm: Optional[jax.Array] = None,
+                           subject: Optional[jax.Array] = None
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Data-parallel batch matcher over a device-resident sharded table.
 
@@ -237,41 +258,68 @@ def mesh_policy_scan_batch(global_cols: jax.Array, operands: jax.Array, *,
     size-profile aggregation and the (R, N) f32 mask materialization
     entirely (returns a bool mask0 and a zero agg) — the policy engine's
     match path, which only consumes mask + attribution.
+
+    ``perm``/``subject`` scope the whole match to one tenant: ``perm`` is
+    the store's (D, Sp, W) uint32 permissions plane sharded along
+    ``"shards"`` and ``subject`` a traced subject id. Each device unpacks
+    its subject bitset row (:func:`_subject_bits`) and ANDs it into every
+    program mask *before* attribution and aggregation — masks, rule_idx
+    and the psum'd aggregates all come back visibility-filtered, exactly
+    as if invisible rows were invalid.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def _device_scan(cols, operands_):
-        if not with_agg and not use_kernel:
-            masks_b, rule = _unrolled_masks(cols[0], ops_t, colidx_t,
-                                            operands_, valid_col)
-            agg = jnp.zeros((len(ops_t), N_AGG), jnp.float32)
-            return masks_b[0][None], rule[None], agg
-        if use_kernel:
+    have_perm = perm is not None
+
+    def _device_scan(cols, operands_, *rest):
+        c = cols[0]
+        bits = _subject_bits(rest[0][0], rest[1]) if have_perm else None
+        if not use_kernel:
+            masks_b, rule = _unrolled_masks(c, ops_t, colidx_t, operands_,
+                                            valid_col)
+            if bits is not None:
+                masks_b = [m & bits for m in masks_b]
+                rule = jnp.where(bits, rule, jnp.int32(-1))
+            if with_agg:
+                masks = jnp.stack(masks_b).astype(jnp.float32)
+                agg = aggregate_multi(masks, c[size_col], c[blocks_col])
+                mask0 = masks[0]
+            else:
+                agg = jnp.zeros((len(ops_t), N_AGG), jnp.float32)
+                mask0 = masks_b[0]
+        else:
             masks, rule, agg = policy_scan_batch(
-                cols[0], jnp.asarray(np.asarray(ops_t), jnp.int32),
+                c, jnp.asarray(np.asarray(ops_t), jnp.int32),
                 jnp.asarray(np.asarray(colidx_t), jnp.int32), operands_,
                 size_col=size_col, blocks_col=blocks_col,
                 valid_col=valid_col, use_kernel=True, tile=tile)
-        else:
-            masks, rule, agg = policy_scan_batch_unrolled(
-                cols[0], operands_, ops_t=ops_t, colidx_t=colidx_t,
-                size_col=size_col, blocks_col=blocks_col,
-                valid_col=valid_col)
+            if bits is not None:
+                # the kernel aggregated pre-AND: fold the subject bitset
+                # into the masks and recompute the (cheap) reductions
+                masks = masks * bits.astype(jnp.float32)
+                rule = jnp.where(bits, rule, jnp.int32(-1))
+                agg = aggregate_multi(masks, c[size_col], c[blocks_col])
+            mask0 = masks[0]
         sums = jax.lax.psum(agg[:, : N_AGG - 1], "shards")
         anym = jax.lax.pmax(agg[:, N_AGG - 1:], "shards")
-        return (masks[0][None], rule[None],
+        return (mask0[None], rule[None],
                 jnp.concatenate([sums, anym], axis=1))
 
+    in_specs = (P("shards"), P()) + ((P("shards"), P()) if have_perm
+                                     else ())
+    args = (global_cols, operands.astype(jnp.float32))
+    if have_perm:
+        args = args + (perm, jnp.asarray(subject, jnp.int32))
     # check_rep=False: the program-eval scan/argmax trips shard_map's
     # replication checker (jax#mismatched-replication-types); the agg
     # output IS replicated — psum/pmax above combine it across the mesh
     return shard_map(
         _device_scan, mesh=mesh,
-        in_specs=(P("shards"), P()),
+        in_specs=in_specs,
         out_specs=(P("shards"), P("shards"), P()),
         check_rep=False,
-    )(global_cols, operands.astype(jnp.float32))
+    )(*args)
 
 
 # -- mesh report ops (device-store-backed rbh-find / top-N / du) -------------
@@ -284,7 +332,9 @@ def mesh_policy_scan_batch(global_cols: jax.Array, operands: jax.Array, *,
                                    "type_col", "file_code"))
 def mesh_column_topk(global_cols: jax.Array, *, mesh, col: int, k: int,
                      desc: bool = True, valid_col: int = -1,
-                     type_col: int = -1, file_code: float = 0.0
+                     type_col: int = -1, file_code: float = 0.0,
+                     perm: Optional[jax.Array] = None,
+                     subject: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, jax.Array]:
     """Per-device top-k over one column, restricted to valid FILE rows.
 
@@ -295,55 +345,75 @@ def mesh_column_topk(global_cols: jax.Array, *, mesh, col: int, k: int,
     top-k is a subset of the union of per-device top-k's, so the merged
     k-th best candidate value is an exact selection threshold for a
     follow-up :func:`mesh_threshold_rows` pass (which recovers boundary
-    ties a per-device truncation could hide).
+    ties a per-device truncation could hide). ``perm``/``subject``
+    (optional, see :func:`_subject_bits`) AND the subject's visibility
+    bitset into the row filter — the scoped top-k ranks only rows the
+    tenant may see.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def _device(cols):
+    have_perm = perm is not None
+
+    def _device(cols, *rest):
         c = cols[0]
         sel = c[valid_col] > 0.5
         if type_col >= 0:
             sel = sel & (c[type_col] == file_code)
+        if have_perm:
+            sel = sel & _subject_bits(rest[0][0], rest[1])
         sentinel = -jnp.inf if desc else jnp.inf
         key = jnp.where(sel, c[col], sentinel)
         vals, idx = jax.lax.top_k(key if desc else -key, k)
         vals = vals if desc else -vals
         return vals[None], idx[None].astype(jnp.int32)
 
-    return shard_map(_device, mesh=mesh, in_specs=(P("shards"),),
+    in_specs = (P("shards"),) + ((P("shards"), P()) if have_perm else ())
+    args = (global_cols,) + ((perm, jnp.asarray(subject, jnp.int32))
+                             if have_perm else ())
+    return shard_map(_device, mesh=mesh, in_specs=in_specs,
                      out_specs=(P("shards"), P("shards")),
-                     check_rep=False)(global_cols)
+                     check_rep=False)(*args)
 
 
 @partial(jax.jit, static_argnames=("mesh", "col", "ge", "valid_col",
                                    "type_col", "file_code"))
 def mesh_threshold_rows(global_cols: jax.Array, thr: jax.Array, *, mesh,
                         col: int, ge: bool = True, valid_col: int = -1,
-                        type_col: int = -1, file_code: float = 0.0
-                        ) -> jax.Array:
+                        type_col: int = -1, file_code: float = 0.0,
+                        perm: Optional[jax.Array] = None,
+                        subject: Optional[jax.Array] = None) -> jax.Array:
     """0/1 mask of valid FILE rows whose column value passes ``thr``.
 
     ``thr`` is a traced f32 scalar (no recompile per threshold). Returns
     the (D, Rp) f32 mask sharded along ``"shards"`` — the winning-row
     selection of the two-pass on-device top-k (see
     :func:`mesh_column_topk`); callers gather only the nonzero rows.
+    ``perm``/``subject`` apply the same visibility AND as the top-k pass
+    so both passes of a scoped query select from the same row set.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def _device(cols, t):
+    have_perm = perm is not None
+
+    def _device(cols, t, *rest):
         c = cols[0]
         sel = c[valid_col] > 0.5
         if type_col >= 0:
             sel = sel & (c[type_col] == file_code)
+        if have_perm:
+            sel = sel & _subject_bits(rest[0][0], rest[1])
         cmp = (c[col] >= t) if ge else (c[col] <= t)
         return (sel & cmp).astype(jnp.float32)[None]
 
-    return shard_map(_device, mesh=mesh, in_specs=(P("shards"), P()),
-                     out_specs=P("shards"),
-                     check_rep=False)(global_cols,
-                                      jnp.asarray(thr, jnp.float32))
+    in_specs = (P("shards"), P()) + ((P("shards"), P()) if have_perm
+                                     else ())
+    args = (global_cols, jnp.asarray(thr, jnp.float32))
+    if have_perm:
+        args = args + (perm, jnp.asarray(subject, jnp.int32))
+    return shard_map(_device, mesh=mesh, in_specs=in_specs,
+                     out_specs=P("shards"), check_rep=False)(*args)
 
 
 @partial(jax.jit, static_argnames=("mesh", "ord_col", "type_col", "size_col",
@@ -351,7 +421,9 @@ def mesh_threshold_rows(global_cols: jax.Array, thr: jax.Array, *, mesh,
 def mesh_range_aggregate(global_cols: jax.Array, bounds: jax.Array, *, mesh,
                          ord_col: int, type_col: int, size_col: int,
                          blocks_col: int, valid_col: int,
-                         file_code: float = 0.0) -> jax.Array:
+                         file_code: float = 0.0,
+                         perm: Optional[jax.Array] = None,
+                         subject: Optional[jax.Array] = None) -> jax.Array:
     """Fused subtree aggregate over sorted-path rank ranges, psum-combined.
 
     ``bounds`` is (D, 4) f32 sharded along ``"shards"``: per device the
@@ -359,17 +431,23 @@ def mesh_range_aggregate(global_cols: jax.Array, bounds: jax.Array, *, mesh,
     into that group's sorted path mirror — the device-resident ``ord_col``
     holds each row's rank in that order). Returns the replicated (4,) f32
     ``[count, files, volume, spc_used]`` — ``du`` without any row leaving
-    a device.
+    a device. ``perm``/``subject`` AND the subject's visibility bitset
+    into the range mask — scoped ``du`` counts only rows the tenant may
+    see, still in one fused pass.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def _device(cols, b):
+    have_perm = perm is not None
+
+    def _device(cols, b, *rest):
         c = cols[0]
         lo, hi, lo2, hi2 = b[0, 0], b[0, 1], b[0, 2], b[0, 3]
         o = c[ord_col]
         m = (c[valid_col] > 0.5) & (((o >= lo) & (o < hi))
                                     | ((o >= lo2) & (o < hi2)))
+        if have_perm:
+            m = m & _subject_bits(rest[0][0], rest[1])
         f = m & (c[type_col] == file_code)
         parts = jnp.stack([
             m.astype(jnp.float32).sum(),
@@ -378,9 +456,13 @@ def mesh_range_aggregate(global_cols: jax.Array, bounds: jax.Array, *, mesh,
             jnp.where(f, c[blocks_col], 0.0).sum()])
         return jax.lax.psum(parts, "shards")
 
-    return shard_map(_device, mesh=mesh, in_specs=(P("shards"), P("shards")),
-                     out_specs=P(), check_rep=False)(
-                         global_cols, bounds.astype(jnp.float32))
+    in_specs = (P("shards"), P("shards")) + ((P("shards"), P())
+                                             if have_perm else ())
+    args = (global_cols, bounds.astype(jnp.float32))
+    if have_perm:
+        args = args + (perm, jnp.asarray(subject, jnp.int32))
+    return shard_map(_device, mesh=mesh, in_specs=in_specs,
+                     out_specs=P(), check_rep=False)(*args)
 
 
 def column_stack(arrays) -> jax.Array:

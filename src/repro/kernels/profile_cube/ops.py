@@ -153,6 +153,46 @@ def mesh_profile_cube(global_cols: jax.Array, *, mesh, n_groups: int,
                      check_rep=False)(global_cols)
 
 
+@partial(jax.jit, static_argnames=("mesh", "n_groups", "gid_col", "size_col",
+                                   "blocks_col", "sb_col", "ab_col",
+                                   "valid_col"))
+def mesh_scoped_cube(global_cols: jax.Array, perm: jax.Array,
+                     subject: jax.Array, *, mesh, n_groups: int,
+                     gid_col: int, size_col: int, blocks_col: int,
+                     sb_col: int, ab_col: int, valid_col: int) -> jax.Array:
+    """Subject-scoped profile cube in one fused launch over resident rows.
+
+    Unlike :func:`mesh_profile_cube` there are no resident scoped
+    partials — scoping is per-query: each device unpacks the subject's
+    row from its ``(1, Sp, W)`` packed ``uint32`` permission buffer
+    (``perm``, sharded along ``"shards"``; ``subject`` a traced i32 id),
+    ANDs it into the validity row, and bins only visible rows; partial
+    cubes psum into the replicated (N_MEASURES, n_groups, S, A) f32 cube.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    def _device(cols, pm, sid):
+        c = cols[0]                              # (n_cols, Rp) local block
+        words = jax.lax.dynamic_index_in_dim(pm[0], sid, axis=0,
+                                             keepdims=False)
+        bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]) \
+            & jnp.uint32(1)
+        vis = (bits != 0).reshape(-1)
+        masked = jnp.where(vis, c[valid_col], 0.0)
+        c2 = jnp.concatenate([c, masked[None]], axis=0)
+        cube = profile_cube_ref(
+            c2, n_groups, gid_col=gid_col, size_col=size_col,
+            blocks_col=blocks_col, age_col=size_col, valid_col=c.shape[0],
+            sb_col=sb_col, ab_col=ab_col)
+        return jax.lax.psum(cube, "shards")
+
+    return shard_map(_device, mesh=mesh,
+                     in_specs=(P("shards"), P("shards"), P()),
+                     out_specs=P(), check_rep=False)(
+                         global_cols, perm, jnp.asarray(subject, jnp.int32))
+
+
 @partial(jax.jit, static_argnames=("mesh",))
 def mesh_cube_combine(partials: jax.Array, *, mesh) -> jax.Array:
     """psum the resident (D, N_MEASURES, B*S*A) sharded partial cubes into

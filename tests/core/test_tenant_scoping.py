@@ -1,0 +1,379 @@
+"""Multi-tenant report scoping: permission-bitmap plane == scalar oracle.
+
+Differential contract (PR 7): with a GrantTable attached, every serving
+query accepts ``subject=`` and returns exactly what a host fold filtered
+by :meth:`GrantTable.visible_mask` returns — whether it is served from
+the device store's packed permission bitsets (one fused AND inside the
+mesh kernels) or from the host fallback. Also pins the maintenance
+contract: pure-update churn patches the resident bitsets word-by-word
+(``perm_word_scatters``), structural churn and grant mutations force a
+re-materialization (``perm_materializations``), and the fallback
+telemetry fixes (reason cleared on store-served success, one index
+prefetch per ``du_many`` fallback batch) stay fixed.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.core import (Catalog, DeviceColumnStore, Entry, FsType, GrantTable,
+                        HsmState, PolicyError)
+from repro.core.profiles import ProfileCube
+from repro.core.reports import Reports
+
+NOW = float(2 ** 20)          # f32-exact "now"
+
+
+def _shards_mesh():
+    from repro.launch.mesh import make_shards_mesh
+    return make_shards_mesh()
+
+
+def _entry(rng, i, **over):
+    kw = dict(
+        fid=i + 1, name=f"f{i + 1}", path=f"/p/d{i % 5}/f{i + 1}",
+        type=FsType.FILE if rng.random() < 0.9 else FsType.DIR,
+        size=int(rng.integers(0, 2 ** 12)) * 1024,
+        blocks=int(rng.integers(0, 2 ** 10)),
+        owner=f"user{int(rng.integers(0, 4))}",
+        group=f"grp{int(rng.integers(0, 3))}",
+        hsm_state=HsmState(int(rng.integers(0, 5))),
+        atime=NOW - float(rng.integers(0, 10_000)),
+        mtime=NOW - float(rng.integers(0, 10_000)))
+    kw.update(over)
+    return Entry(**kw)
+
+
+def _random_catalog(rng, n, n_shards=8):
+    cat = Catalog(n_shards=n_shards)
+    cat.upsert_batch([_entry(rng, i) for i in range(n)])
+    return cat
+
+
+def _churn(cat, rng, n_total, k):
+    for f in rng.choice(np.arange(1, n_total + 1), size=k, replace=False):
+        cat.upsert(_entry(rng, int(f) - 1,
+                          size=int(rng.integers(0, 2 ** 12)) * 1024,
+                          atime=NOW - float(rng.integers(0, 10_000))))
+
+
+def _random_grants(rng):
+    """A spread of grant shapes: uid-only, gid-only, subtree-only, mixed."""
+    g = GrantTable()
+    g.add_subject(f"user{int(rng.integers(0, 4))}")
+    g.add_subject("grp-aud", owners=(),
+                  groups=(f"grp{int(rng.integers(0, 3))}",))
+    trees = rng.choice(5, size=2, replace=False)
+    g.add_subject("tree-aud", owners=(),
+                  subtrees=tuple(f"/p/d{int(t)}" for t in trees))
+    g.add_subject("mixed", owners=(f"user{int(rng.integers(0, 4))}",),
+                  groups=(f"grp{int(rng.integers(0, 3))}",),
+                  subtrees=(f"/p/d{int(rng.integers(0, 5))}",))
+    g.add_subject("nobody", owners=("ghost-user",))   # matches nothing
+    return g
+
+
+class _Clock:
+    def __init__(self, t=NOW):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+FIND_CRITERIA = [
+    "size > 2M",
+    "size <= 1M and owner == 'user1'",
+    "type == file and last_access > 1000s",
+    "hsm_state == archived or size > 3M",
+]
+
+SUBJECTS = [None, "grp-aud", "tree-aud", "mixed", "nobody"]
+
+
+def _pair(cat, clock, grants, mesh):
+    """(store-backed, host-only oracle) Reports over the same catalog."""
+    store = DeviceColumnStore(cat, mesh)
+    pc_s = ProfileCube(cat, clock=clock).attach_device_store(store)
+    pc_s.attach_grants(grants)
+    r_s = Reports(cat, clock=clock, profiles=pc_s) \
+        .attach_device_store(store).attach_grants(grants)
+    pc_h = ProfileCube(cat, clock=clock)
+    pc_h.attach_grants(grants)
+    pc_h.rebuild(now=NOW)
+    r_h = Reports(cat, clock=clock, profiles=pc_h).attach_grants(grants)
+    return store, r_s, r_h
+
+
+# -- store == scalar oracle, across churn rounds ------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_scoped_reports_differential_across_churn(seed):
+    rng = np.random.default_rng(seed)
+    cat = _random_catalog(rng, 400)
+    clock = _Clock()
+    grants = _random_grants(rng)
+    store, r_s, r_h = _pair(cat, clock, grants, _shards_mesh())
+    for round_ in range(3):
+        for s in SUBJECTS:
+            for crit in FIND_CRITERIA:
+                assert r_s.find(crit, subject=s) \
+                    == r_h.find(crit, subject=s), (s, crit)
+            assert r_s.find("size > 1M", limit=5, subject=s) \
+                == r_h.find("size > 1M", limit=5, subject=s)
+            for p in ("/p/d0", "/p", "/nope"):
+                assert r_s.du(p, subject=s) == r_h.du(p, subject=s), (s, p)
+            assert r_s.du_many(["/p/d1", "/p/d3"], subject=s) \
+                == r_h.du_many(["/p/d1", "/p/d3"], subject=s)
+            for by in ("size", "atime"):
+                for k in (1, 10):
+                    assert r_s.top_files(by=by, k=k, subject=s) \
+                        == r_h.top_files(by=by, k=k, subject=s), (s, by, k)
+        _churn(cat, rng, 400, 40)
+    assert r_s.last_fallback_reason is None
+    assert r_s.host_served == 0 and r_s.store_served > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_scoped_profile_reports_differential(seed):
+    rng = np.random.default_rng(100 + seed)
+    cat = _random_catalog(rng, 300)
+    clock = _Clock()
+    grants = _random_grants(rng)
+    store, r_s, r_h = _pair(cat, clock, grants, _shards_mesh())
+    for round_ in range(2):
+        for s in SUBJECTS:
+            assert r_s.report_user("user1", subject=s) \
+                == r_h.report_user("user1", subject=s), s
+            assert r_s.report_group("grp0", subject=s) \
+                == r_h.report_group("grp0", subject=s), s
+            assert r_s.report_types(subject=s) \
+                == r_h.report_types(subject=s), s
+            assert r_s.report_hsm(subject=s) == r_h.report_hsm(subject=s), s
+            assert r_s.user_size_profile("user2", subject=s) \
+                == r_h.user_size_profile("user2", subject=s), s
+            assert r_s.age_profile(subject=s) \
+                == r_h.age_profile(subject=s), s
+            assert r_s.top_users(k=3, subject=s) \
+                == r_h.top_users(k=3, subject=s), s
+        _churn(cat, rng, 300, 30)
+        r_h.profiles.rebuild(now=NOW)     # host oracle fold is not live
+
+
+def test_unknown_subject_raises_not_falls_back():
+    """An unknown subject is a caller error (KeyError), never a silent
+    unscoped answer via the PolicyError fallback chain."""
+    rng = np.random.default_rng(2)
+    cat = _random_catalog(rng, 60)
+    clock = _Clock()
+    grants = _random_grants(rng)
+    store, r_s, r_h = _pair(cat, clock, grants, _shards_mesh())
+    for r in (r_s, r_h):
+        with pytest.raises(KeyError, match="ghost"):
+            r.find("size > 1M", subject="ghost")
+        with pytest.raises(KeyError, match="ghost"):
+            r.du("/p/d0", subject="ghost")
+    assert r_s.last_fallback_reason is None
+
+
+def test_scoped_glob_predicate_falls_back_scoped():
+    """Host-only predicates still fall back — and the fallback itself is
+    grant-filtered, not unscoped."""
+    rng = np.random.default_rng(3)
+    cat = _random_catalog(rng, 80)
+    clock = _Clock()
+    grants = _random_grants(rng)
+    store, r_s, r_h = _pair(cat, clock, grants, _shards_mesh())
+    out = r_s.find("name == 'f7'", subject="mixed")
+    assert out == r_h.find("name == 'f7'", subject="mixed")
+    assert r_s.last_fallback_reason is not None
+    assert r_s.host_served == 1
+
+
+def test_store_without_grants_rejects_subject():
+    rng = np.random.default_rng(4)
+    cat = _random_catalog(rng, 40)
+    from repro.core import parse_expr
+    store = DeviceColumnStore(cat, _shards_mesh())
+    with pytest.raises(PolicyError, match="permissions plane"):
+        store.match([parse_expr("size > 1M")], NOW, subject="anyone")
+    r = Reports(cat, clock=_Clock())
+    with pytest.raises(RuntimeError, match="attach_grants"):
+        r.find("size > 1M", subject="anyone")
+
+
+# -- bitmap maintenance: warm word scatter vs re-materialization --------------
+
+def test_pure_update_churn_patches_bitmap_words():
+    """Owner flips on existing rows reach the resident bitsets through the
+    dirty-row word scatter — no full re-materialization."""
+    rng = np.random.default_rng(5)
+    cat = _random_catalog(rng, 240)
+    clock = _Clock()
+    grants = GrantTable()
+    grants.add_subject("user1")
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r_s = Reports(cat, clock=clock).attach_device_store(store) \
+        .attach_grants(grants)
+    r_h = Reports(cat, clock=clock).attach_grants(grants)
+    assert r_s.find("size >= 0", subject="user1") \
+        == r_h.find("size >= 0", subject="user1")
+    mats = store.perm_materializations
+    assert mats >= 1 and store.perm_word_scatters == 0
+    # flip some rows' owner to/from user1: same fid+path => pure update
+    for f in (3, 7, 11, 20):
+        cat.upsert(_entry(rng, f - 1, owner="user1"))
+    for f in (1, 5):
+        cat.upsert(_entry(rng, f - 1, owner="user3"))
+    assert r_s.find("size >= 0", subject="user1") \
+        == r_h.find("size >= 0", subject="user1")
+    assert store.perm_materializations == mats, \
+        "pure-update churn forced a bitmap re-materialization"
+    assert store.perm_word_scatters >= 1
+
+
+def test_structural_churn_rematerializes_bitmap():
+    """Inserting rows re-uploads the blocks; the permission plane must be
+    rebuilt with them (it indexes catalog row ids)."""
+    rng = np.random.default_rng(6)
+    cat = _random_catalog(rng, 160)
+    clock = _Clock()
+    grants = GrantTable()
+    grants.add_subject("tree", owners=(), subtrees=("/p/d2",))
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r_s = Reports(cat, clock=clock).attach_device_store(store) \
+        .attach_grants(grants)
+    r_h = Reports(cat, clock=clock).attach_grants(grants)
+    assert r_s.du("/p", subject="tree") == r_h.du("/p", subject="tree")
+    mats = store.perm_materializations
+    cat.upsert_batch([_entry(rng, i) for i in range(160, 200)])  # inserts
+    assert r_s.du("/p", subject="tree") == r_h.du("/p", subject="tree")
+    assert store.perm_materializations > mats
+    assert r_s.last_fallback_reason is None
+
+
+def test_grant_mutation_refreshes_bitmap():
+    """GrantTable.grant bumps version; the next scoped query must serve
+    the extended visibility, not the stale materialized bitset."""
+    rng = np.random.default_rng(7)
+    cat = _random_catalog(rng, 120)
+    clock = _Clock()
+    grants = GrantTable()
+    grants.add_subject("aud", owners=(), groups=("grp0",))
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r_s = Reports(cat, clock=clock).attach_device_store(store) \
+        .attach_grants(grants)
+    r_h = Reports(cat, clock=clock).attach_grants(grants)
+    before = r_s.find("size >= 0", subject="aud")
+    assert before == r_h.find("size >= 0", subject="aud")
+    grants.grant("aud", subtrees=("/p/d4",))
+    after = r_s.find("size >= 0", subject="aud")
+    assert after == r_h.find("size >= 0", subject="aud")
+    assert set(before) < set(after)          # strictly more visible rows
+    # new subjects are also picked up (bitset row count grows)
+    grants.add_subject("late", owners=("user2",))
+    assert r_s.find("size >= 0", subject="late") \
+        == r_h.find("size >= 0", subject="late")
+
+
+# -- fallback-telemetry regressions (satellites 1 + 2) ------------------------
+
+def test_fallback_reason_cleared_on_store_success():
+    """A stale fallback reason must not outlive the next store-served
+    query: fallback -> store-served -> reason is None again."""
+    rng = np.random.default_rng(8)
+    cat = _random_catalog(rng, 60)
+    clock = _Clock()
+    store = DeviceColumnStore(cat, _shards_mesh())
+    r = Reports(cat, clock=clock).attach_device_store(store)
+    r.find("name == 'f7'")                        # glob: host fallback
+    assert r.last_fallback_reason is not None
+    r.find("size > 1M")                           # store-served
+    assert r.last_fallback_reason is None
+    r.find("name == 'f9'")
+    assert r.last_fallback_reason is not None
+    assert r.du("/p/d0") == Reports(cat, clock=clock).du("/p/d0")
+    assert r.last_fallback_reason is None         # du clears it too
+    served, host = r.store_served, r.host_served
+    r.reset_counters()
+    assert (r.store_served, r.host_served, r.index_rebuilds) == (0, 0, 0)
+    assert r.last_fallback_reason is None
+    assert served == 2 and host == 2
+
+
+def test_du_many_prefetches_indexes_once_on_fallback():
+    """First mid-batch PolicyError switches the whole remainder to the
+    host path with ONE index prefetch — not one rebuild pass per prefix."""
+    rng = np.random.default_rng(9)
+    cat = _random_catalog(rng, 80)
+    clock = _Clock()
+
+    calls = {"du": 0}
+
+    class _AlwaysFalls:
+        catalog = cat
+
+        def du(self, p, subject=None):
+            calls["du"] += 1
+            raise PolicyError("injected")
+
+    r = Reports(cat, clock=clock)
+    r.device_store = _AlwaysFalls()
+    prefixes = ["/p/d0", "/p/d1", "/p/d2", "/p/d4"]
+    out = r.du_many(prefixes)
+    assert out == Reports(cat, clock=clock).du_many(prefixes)
+    assert calls["du"] == 1, "store retried after the first PolicyError"
+    assert r.index_rebuilds == cat.n_shards, \
+        f"expected one prefetch pass ({cat.n_shards} shard indexes), " \
+        f"got {r.index_rebuilds}"
+    assert r.host_served == len(prefixes)
+    assert r.last_fallback_reason is not None
+
+
+# -- multi-device ------------------------------------------------------------
+
+def test_scoped_serving_on_eight_devices():
+    out = run_subprocess("""
+import numpy as np
+from repro.core import (Catalog, DeviceColumnStore, Entry, FsType,
+                        GrantTable, HsmState)
+from repro.core.profiles import ProfileCube
+from repro.core.reports import Reports
+from repro.launch.mesh import make_shards_mesh
+
+NOW = float(2 ** 20)
+rng = np.random.default_rng(0)
+cat = Catalog(n_shards=16)
+cat.upsert_batch([Entry(
+    fid=i + 1, name=f"f{i+1}", path=f"/p/d{i % 7}/f{i+1}",
+    type=FsType.FILE if rng.random() < 0.9 else FsType.DIR,
+    size=int(rng.integers(0, 2 ** 12)) * 1024,
+    blocks=int(rng.integers(0, 2 ** 10)),
+    owner=f"user{i % 5}", group=f"grp{i % 3}",
+    hsm_state=HsmState(int(rng.integers(0, 5))),
+    atime=NOW - float(rng.integers(0, 10_000)),
+    mtime=NOW - float(rng.integers(0, 10_000))) for i in range(1200)])
+g = GrantTable()
+g.add_subject("user2")
+g.add_subject("mixed", owners=("user4",), groups=("grp1",),
+              subtrees=("/p/d5",))
+clock = lambda: NOW
+store = DeviceColumnStore(cat, make_shards_mesh())
+assert store.n_devices == 8
+pc = ProfileCube(cat, clock=clock).attach_device_store(store)
+pc.attach_grants(g)
+r_s = Reports(cat, clock=clock, profiles=pc) \\
+    .attach_device_store(store).attach_grants(g)
+pc_h = ProfileCube(cat, clock=clock)
+pc_h.attach_grants(g)
+pc_h.rebuild(now=NOW)
+r_h = Reports(cat, clock=clock, profiles=pc_h).attach_grants(g)
+for s in ("user2", "mixed"):
+    assert r_s.find("size > 1M", subject=s) == r_h.find("size > 1M", subject=s)
+    assert r_s.du("/p/d5", subject=s) == r_h.du("/p/d5", subject=s)
+    assert r_s.top_files(k=9, subject=s) == r_h.top_files(k=9, subject=s)
+    assert r_s.report_types(subject=s) == r_h.report_types(subject=s)
+    assert r_s.top_users(k=4, subject=s) == r_h.top_users(k=4, subject=s)
+assert r_s.host_served == 0 and r_s.last_fallback_reason is None
+print("OK8")
+""")
+    assert "OK8" in out
