@@ -30,6 +30,7 @@ MODULES = [
     "bench_find_du",     # SII-B4: find/du clones vs POSIX walk
     "bench_reports",     # PR6: mesh-resident reports vs host folds
     "bench_serving",     # PR7: multi-tenant scoped serving (perm bitmaps)
+    "bench_tiering",     # PR8: out-of-core catalogs (warm-segment streaming)
     "bench_kvtier",      # adapted C7/C8: KV-page tiering + paged serving
     "roofline_report",   # SRoofline summary rows from the dry-run artifacts
 ]

@@ -601,6 +601,15 @@ class Catalog:
         with self._version_lock:
             self._version += 1
 
+    def sidecar_path(self, suffix: str) -> Optional[str]:
+        """Path for a derived artifact stored beside the sqlite mirror
+        (``<db_path>.<suffix>``) — e.g. the device store's packed warm
+        segments — or ``None`` for an in-memory catalog (callers then
+        keep the artifact in host memory instead)."""
+        if not self.db_path:
+            return None
+        return f"{self.db_path}.{suffix}"
+
     # -- persistence ----------------------------------------------------------
     _SCHEMA = (
         "CREATE TABLE IF NOT EXISTS entries ("

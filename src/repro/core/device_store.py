@@ -59,8 +59,46 @@ flagged pending changes. The store registers a
 Version ticks are read *before* the snapshot/gather (the catalog's own
 ``_bump`` discipline), so a racing mutation can only make the next refresh
 redundant, never leave the device block stale. A group whose row count
-outgrows ``Rp`` forces a global re-pad (all groups re-upload at the new
-``Rp``).
+outgrows ``Rp`` re-pads the mesh capacity, but only the grown group
+re-uploads: every other clean block is widened *on-device* with a donated
+zero-pad (``device_pads`` counts these; untouched groups keep their
+buffers).
+
+Tiered residency (out-of-core catalogs)
+---------------------------------------
+With ``hbm_budget_rows`` set, the full column stack no longer needs to
+fit in device memory. A placement pass at the top of every refresh ranks
+shard groups by decayed delta churn (``heat``) and the profile cube's
+hot-volume fraction (recently-accessed bytes), and keeps the hottest
+prefix resident under the budget (`2*D*window_rows` reserved for the
+streaming window when anything is demoted; residents win exact ties, so
+placement has hysteresis). The rest **demote**: the group's column stack
+is packed into a compact host :class:`~repro.core.segments.PackedSegment`
+(dict/delta-encoded ints, raw floats/paths — exact round-trip), persisted
+as an mmap-able ``.npz`` beside the catalog's sqlite mirror when one
+exists, its device buffers freed and its host mirrors dropped — the
+segment *is* the warm copy. Demotion can run asynchronously
+(``demote_async=True``): the pack is built from a shadow snapshot off the
+store lock while the group keeps serving resident, and the commit
+re-validates catalog versions (a raced pack is discarded —
+``demote_races``). Hot-again groups **promote** by decoding the segment
+back into host mirrors and staging through the normal upload path.
+
+Queries keep working over the whole catalog, byte-identical to the host
+oracles. Resident groups assemble over a cached *sub-mesh* of their
+devices and run exactly the pre-tiering launches. Demoted groups
+**stream**: the segment decodes into a cached f32 row stack that walks
+the full mesh in ``(D, n_rows, Rw)`` windows through two host staging
+buffers — batch k+1 is staged and dispatched while batch k computes
+(async dispatch overlaps copy with compute; ``window_stalls`` counts the
+batches whose compute was not hidden), and per-window partial aggregates
+merge with the resident results (sum for additive slots, max for
+``any_match`` — the host-side analogue of the in-launch psum/pmax).
+Unscoped profile-cube queries never stream at all: each demoted group
+carries an exact int64 **frozen partial cube** captured at demote time
+and refrozen from the segment only when a scheduled age flip passes.
+``RunReport.tiering`` surfaces the demotion/promotion/streaming counters
+per policy run.
 
 Analytics planes (mesh-resident reports + profile cube)
 -------------------------------------------------------
@@ -160,6 +198,7 @@ import numpy as np
 
 from .catalog import Catalog, Delta
 from .policy import KERNEL_COLUMNS, PolicyError, compile_programs
+from .segments import PackedSegment
 
 _VALID_COL = len(KERNEL_COLUMNS)          # trailing 0/1 row-validity column
 
@@ -240,6 +279,28 @@ def _pad_zero(flat: np.ndarray, vals: np.ndarray, min_bucket: int = 64
     return (np.concatenate([flat, np.zeros(pad, flat.dtype)]),
             np.concatenate([vals, np.zeros((vals.shape[0], pad),
                                            vals.dtype)], axis=1))
+
+
+_PAD_BLOCK_FN = None                      # lazily-jitted on-device block pad
+
+
+def _pad_block(buf, pad: int):
+    """Widen a resident (1, C, Rp) block to Rp+pad on its own device by
+    appending zero columns (pad rows read invalid, like fresh staging).
+    Donated, with the pad width static — one executable per (old, new)
+    capacity pair, and no host round-trip: this is what lets one grown
+    shard group re-pad WITHOUT re-uploading every other group."""
+    global _PAD_BLOCK_FN
+    if _PAD_BLOCK_FN is None:
+        import jax
+        import jax.numpy as jnp
+
+        def fn(buf, *, pad):
+            return jnp.pad(buf, ((0, 0), (0, 0), (0, pad)))
+
+        _PAD_BLOCK_FN = jax.jit(fn, static_argnames=("pad",),
+                                donate_argnums=(0,))
+    return _PAD_BLOCK_FN(buf, pad=pad)
 
 
 _SCATTER_ROW_FN = None                    # lazily-jitted single-row scatter
@@ -396,7 +457,10 @@ class _ShardGroup:
     __slots__ = ("gid", "shard_ids", "fids", "cols", "rows", "versions",
                  "dirty", "structural", "uploaded", "_order",
                  "offsets", "paths", "spaths", "ord",
-                 "cgid", "csb", "cab", "cflip", "cmin_flip", "vis")
+                 "cgid", "csb", "cab", "cflip", "cmin_flip", "vis",
+                 "resident", "segment", "churn", "heat", "pending_demote",
+                 "frozen_cube", "frozen_min_flip", "frozen_ref",
+                 "sstack", "sstack_ref", "svis", "svis_ver", "sspaths")
 
     def __init__(self, gid: int, shard_ids: List[int]) -> None:
         self.gid = gid
@@ -419,6 +483,21 @@ class _ShardGroup:
         self.cflip: Optional[np.ndarray] = None    # cube: next flip instant
         self.cmin_flip = np.inf
         self.vis: Optional[np.ndarray] = None      # perms: (Sp, rows) bool
+        # tiered residency (see "Tiered residency" in the module doc)
+        self.resident = True               # device-resident vs warm segment
+        self.segment: Optional[PackedSegment] = None
+        self.churn = 0                     # deltas since last placement pass
+        self.heat = 0.0                    # decayed churn score (placement)
+        self.pending_demote = False        # async pack in flight
+        self.frozen_cube: Optional[np.ndarray] = None  # (3,b,S,A) i64 @ ref
+        self.frozen_min_flip = np.inf      # first age flip that stales it
+        self.frozen_ref = 0.0              # age reference it was built at
+        # transient streaming caches (dropped on repack / promote)
+        self.sstack: Optional[np.ndarray] = None   # decoded f32 row stack
+        self.sstack_ref = np.nan                   # _cube_ref of sstack AB
+        self.svis: Optional[np.ndarray] = None     # (Sp, rows) bool
+        self.svis_ver = -1                         # grants version of svis
+        self.sspaths: Optional[np.ndarray] = None  # sorted decoded paths
 
     def locate(self, fids: np.ndarray) -> Optional[np.ndarray]:
         """Local row index per fid; None when any fid is not in the mirror
@@ -447,7 +526,10 @@ class DeviceColumnStore:
 
     def __init__(self, catalog: Catalog, mesh=None,
                  refresh_frac: float = 0.25, tile: int = 0,
-                 headroom: float = 1.25) -> None:
+                 headroom: float = 1.25,
+                 hbm_budget_rows: Optional[int] = None,
+                 window_rows: int = 0,
+                 demote_async: bool = False) -> None:
         import jax
         from ..kernels.policy_scan.kernel import LANE
         if mesh is None:
@@ -463,6 +545,19 @@ class DeviceColumnStore:
         self.refresh_frac = refresh_frac
         self.tile = tile or 8 * LANE
         self.headroom = headroom
+        # tiered residency: total padded resident rows the mesh may hold
+        # (None = unlimited, everything stays resident — the pre-tiering
+        # behavior); when any group is demoted, 2*D*window_rows of the
+        # budget are reserved for the double-buffered streaming window
+        self.hbm_budget_rows = hbm_budget_rows
+        # streaming window rows per device: 0 -> sized lazily from the
+        # budget; explicit values round up to a tile multiple (the perm
+        # window packing also needs a multiple of 32, which tile is)
+        self._rw = (-(-window_rows // self.tile) * self.tile
+                    if window_rows else 0)
+        self.demote_async = demote_async
+        self._demote_workers: List[threading.Thread] = []
+        self._submeshes: Dict[tuple, object] = {}   # resident-set sub-meshes
         self._lock = threading.RLock()
         self._groups = [
             _ShardGroup(g, [s for s in range(catalog.n_shards)
@@ -498,6 +593,16 @@ class DeviceColumnStore:
         self.store_queries = 0              # report queries served resident
         self.perm_materializations = 0      # per-group bitset (re)builds
         self.perm_word_scatters = 0         # warm packed-word scatters
+        # tiering counters (RunReport / bench_tiering assert these so a
+        # silently-resident "streaming" run fails loudly)
+        self.demotions = 0                  # groups packed to warm segments
+        self.promotions = 0                 # groups re-uploaded from segments
+        self.segments_streamed = 0          # warm-segment sweeps executed
+        self.windows_streamed = 0           # device-window batches uploaded
+        self.window_stalls = 0              # consume blocked on compute
+        self.segment_repacks = 0            # stale segments re-encoded
+        self.demote_races = 0               # async packs discarded (raced)
+        self.device_pads = 0                # on-device re-pads (no re-upload)
         catalog.add_delta_hook(self._on_delta)
 
     # -- analytics planes ------------------------------------------------------
@@ -597,6 +702,16 @@ class DeviceColumnStore:
                 group.cgid = group.csb = group.cab = group.cflip = None
                 group.cmin_flip = np.inf
                 group.vis = None
+                group.resident = True
+                group.segment = None
+                group.pending_demote = False
+                group.churn = 0
+                group.heat = 0.0
+                group.frozen_cube = None
+                group.frozen_min_flip = np.inf
+                group.sstack = group.svis = group.sspaths = None
+                group.sstack_ref = np.nan
+                group.svis_ver = -1
             self._rp = 0
 
     # -- delta intake (catalog mutation hooks) --------------------------------
@@ -606,6 +721,7 @@ class DeviceColumnStore:
             return
         fid = int(ref[0])
         group = self._groups[self.catalog._shard_id(fid) % self.n_devices]
+        group.churn += 1                    # placement heat (resident or not)
         if old is None or new is None:      # insert / remove: rows shift
             group.structural = True
         else:
@@ -691,35 +807,62 @@ class DeviceColumnStore:
             out[_AB_COL, : group.rows] = group.cab
         return out
 
-    def _full_upload(self, group: _ShardGroup, rp: int) -> None:
-        import jax
+    def _host_refresh(self, group: _ShardGroup) -> None:
+        """Bring a group's host mirrors (columns + plane mirrors) to the
+        catalog's current state — the snapshot half of a full upload,
+        shared with segment packing. Lock held."""
         versions, fids, cols, paths, offsets = self._snapshot_group(group)
-        if fids.size > rp:
-            # a concurrent insert grew the group past the capacity check
-            # at the top of refresh(): re-pad and retry instead of serving
-            # a truncated block (or crashing the stack staging)
-            raise _RepadNeeded(fids.size)
         group.fids, group.cols, group.rows = fids, cols, fids.size
         group._order = None
         group.offsets = offsets
         self._refresh_plane_mirrors(group, paths)
-        stack = self._stack_f32(group, rp)
-        self._bufs[group.gid] = jax.device_put(
-            stack[None], self.devices[group.gid])
         group.versions = versions
         group.dirty = set()
         group.structural = False
+
+    def _mirror_fresh(self, group: _ShardGroup) -> bool:
+        """True when the host mirrors already match the catalog (and hold
+        every enabled plane's arrays), so a device upload can stage
+        straight from them without re-snapshotting. Lock held."""
+        if group.dirty or group.structural or not group.cols:
+            return False
+        if self._plane_reports and group.ord is None:
+            return False
+        if self._plane_cube and group.cgid is None:
+            return False
+        return self._shard_versions(group) == group.versions
+
+    def _stage_upload(self, group: _ShardGroup, rp: int) -> None:
+        """Stack the (fresh) host mirrors and ship the block to the
+        group's device. Row positions are whatever the mirrors hold, so
+        callers that changed them must invalidate vis/cube themselves."""
+        import jax
+        if group.rows > rp:
+            # a concurrent insert grew the group past the capacity check
+            # at the top of refresh(): re-pad and retry instead of serving
+            # a truncated block (or crashing the stack staging)
+            raise _RepadNeeded(group.rows)
+        stack = self._stack_f32(group, rp)
+        self._bufs[group.gid] = jax.device_put(
+            stack[None], self.devices[group.gid])
         group.uploaded = True
         self._global = None
         self._epoch += 1
         self.full_uploads += 1
         if self._plane_perm:
-            # row positions changed: the group's resident bitset indexes
-            # stale local rows — re-materialize on the next scoped query
-            group.vis = None
+            # block capacity may differ from the old packed words: drop
+            # the packed buffer (repacked from the kept vis mirror)
             if self._perm_bufs is not None:
                 self._perm_bufs[group.gid] = None
             self._perm_global = None
+
+    def _full_upload(self, group: _ShardGroup, rp: int) -> None:
+        self._host_refresh(group)
+        self._stage_upload(group, rp)
+        if self._plane_perm:
+            # row positions changed: the group's resident bitset indexes
+            # stale local rows — re-materialize on the next scoped query
+            group.vis = None
         if self._plane_cube:
             # row positions changed: this group's resident partial cube
             # no longer matches the block — rebuild on next cube query
@@ -841,7 +984,7 @@ class DeviceColumnStore:
                 # just those rows' visibility and scatter the changed
                 # packed words (scatter-SET, idempotent under dup pad)
                 nvis = self._vis_rows(
-                    group, np.asarray(cols["owner"], np.int64),
+                    group.spaths, np.asarray(cols["owner"], np.int64),
                     np.asarray(cols["group"], np.int64), group.ord[rows])
                 if not np.array_equal(nvis, group.vis[:, rows]):
                     group.vis[:, rows] = nvis
@@ -867,39 +1010,83 @@ class DeviceColumnStore:
     def _round_up(self, n: int) -> int:
         return -(-max(n, 1) // self.tile) * self.tile
 
+    def _group_count(self, group: _ShardGroup) -> int:
+        return sum(self.catalog.shards[s].count() for s in group.shard_ids)
+
+    def _pad_resident(self) -> int:
+        """Widen every clean resident block to the current ``self._rp``
+        on-device (zero pad columns, donated) instead of re-uploading it
+        — only the grown group pays a full upload. Groups already headed
+        for a full upload (structural / never uploaded) skip the pad.
+        Returns the number of blocks padded. Lock held."""
+        padded = 0
+        for group in self._groups:
+            buf = self._bufs[group.gid]
+            if (not group.resident or buf is None or not group.uploaded
+                    or group.structural):
+                continue
+            cur = int(buf.shape[2])
+            if cur >= self._rp:
+                continue
+            # drop the assembled global first: it holds the only other
+            # reference to the block, which must go for donation
+            self._global = None
+            self._bufs[group.gid] = _pad_block(buf, self._rp - cur)
+            if self._plane_perm:
+                # word capacity changed: repack from the kept vis mirror
+                if self._perm_bufs is not None:
+                    self._perm_bufs[group.gid] = None
+                self._perm_global = None
+            padded += 1
+            self.device_pads += 1
+        if padded:
+            self._epoch += 1
+        return padded
+
     def refresh(self) -> Dict[str, int]:
         """Bring every stale shard group up to date; returns counters of
-        the refresh modes taken (``full``/``delta``/``fresh`` groups)."""
+        the refresh modes taken: ``full``/``delta``/``fresh`` resident
+        groups, plus ``padded`` blocks widened on-device by a grown
+        sibling. Placement (demote/promote under ``hbm_budget_rows``) and
+        warm-segment freshness run first, so after a refresh both the
+        resident blocks and the warm segments reflect the catalog."""
         with self._lock:
-            stats = {"full": 0, "delta": 0, "fresh": 0}
-            stale = [g for g in self._groups if self._stale(g)]
-            stats["fresh"] = self.n_devices - len(stale)
+            self._reap_demote_workers()
+            self._placement_pass()
+            self._ensure_segments()
+            stats = {"full": 0, "delta": 0, "fresh": 0, "padded": 0}
+            resident = [g for g in self._groups if g.resident]
+            stale = [g for g in resident if self._stale(g)]
+            stats["fresh"] = len(resident) - len(stale)
             if not stale:
                 return stats
-            # a grown group forces a global re-pad: every block re-uploads
-            # at the new Rp so the global array stays rectangular
-            need = max((sum(self.catalog.shards[s].count()
-                            for s in g.shard_ids) for g in self._groups),
-                       default=1)
-            repad = need > self._rp or self._rp == 0
-            if repad:
+            # a grown group re-pads the mesh capacity, but siblings keep
+            # their blocks: clean groups widen on-device (_pad_resident),
+            # only the grown group re-uploads
+            need = max((self._group_count(g) for g in resident), default=1)
+            if need > self._rp or self._rp == 0:
                 self._rp = self._round_up(int(need * self.headroom))
+            stats["padded"] += self._pad_resident()
             # bounded retry: a concurrent insert can outgrow the capacity
-            # check mid-refresh (_full_upload raises _RepadNeeded) — re-pad
-            # and re-upload everything rather than serve a truncated block
+            # check above (_stage_upload raises _RepadNeeded) — re-pad and
+            # retry the still-stale groups, never serve a truncated block
             for _attempt in range(8):
-                if repad:
-                    stale = list(self._groups)
-                    stats = {"full": 0, "delta": 0, "fresh": 0}
                 try:
                     for group in stale:
-                        churn_ok = (not repad and group.uploaded
-                                    and not group.structural and group.dirty
+                        if not self._stale(group):
+                            continue        # settled on a prior attempt
+                        churn_ok = (group.uploaded and not group.structural
+                                    and group.dirty
                                     and len(group.dirty)
                                     <= self.refresh_frac
                                     * max(1, group.rows))
                         if churn_ok and self._delta_refresh(group):
                             stats["delta"] += 1
+                        elif self._mirror_fresh(group):
+                            # fresh mirrors, no block (promotion from a
+                            # warm segment): stage without re-snapshotting
+                            self._stage_upload(group, self._rp)
+                            stats["full"] += 1
                         else:
                             self._full_upload(group, self._rp)
                             stats["full"] += 1
@@ -907,10 +1094,538 @@ class DeviceColumnStore:
                 except _RepadNeeded as grown:
                     self._rp = self._round_up(
                         int(grown.rows * self.headroom))
-                    repad = True
+                    stats["padded"] += self._pad_resident()
             raise PolicyError(
                 "device store could not settle a refresh: the catalog "
                 "grew on every re-pad attempt")
+
+    # -- tiered residency: placement, packing, promotion -----------------------
+    def _window_rows(self) -> int:
+        """Per-device rows of the streaming window (tile multiple). Under
+        a budget the double-buffered window (2 host staging + the live
+        device batch) must fit the reserve, so the default 32-tile window
+        shrinks to budget/(2*D) when the budget is tighter."""
+        if not self._rw:
+            rw = 32 * self.tile
+            if self.hbm_budget_rows:
+                cap = max(self.hbm_budget_rows // (2 * self.n_devices), 1)
+                rw = min(rw, cap)
+            self._rw = max((rw // self.tile) * self.tile, self.tile)
+        return self._rw
+
+    def _hot_fraction(self, group: _ShardGroup) -> float:
+        """Volume fraction of the group's young age buckets — the
+        ProfileCube side of the placement signal (recently-accessed data
+        predicts upcoming policy work). Served from the resident cube
+        mirrors or the demoted group's frozen partial; 0 when the cube
+        plane is off."""
+        if not self._plane_cube:
+            return 0.0
+        from .profiles import HOT_AGE_BUCKETS, hot_volume_fraction
+        if group.resident and group.cab is not None and group.rows:
+            return hot_volume_fraction(
+                group.cab, np.asarray(group.cols["size"], np.float64))
+        if group.frozen_cube is not None:
+            vol_ab = group.frozen_cube[1].sum(axis=(0, 1)).astype(np.float64)
+            total = float(vol_ab.sum())
+            if total <= 0.0:
+                return 0.0
+            return float(vol_ab[:HOT_AGE_BUCKETS].sum()) / total
+        return 0.0
+
+    def _placement_pass(self) -> None:
+        """Decide the resident set under ``hbm_budget_rows``: groups rank
+        by decayed churn heat, then cube hot-volume fraction (residents
+        win exact ties — hysteresis), and the largest prefix whose padded
+        blocks + window reserve fit the budget stays resident. Quiet
+        groups demote to packed segments; hot-again groups promote.
+        Lock held (start of refresh)."""
+        budget = self.hbm_budget_rows
+        if budget is None:
+            for group in self._groups:
+                if not group.resident:
+                    self._promote(group)
+            return
+        for group in self._groups:
+            group.heat = 0.5 * group.heat + group.churn
+            group.churn = 0
+        order = sorted(self._groups,
+                       key=lambda g: (-g.heat, -self._hot_fraction(g),
+                                      0 if g.resident else 1, g.gid))
+        rw = self._window_rows()
+        m = len(order)
+        while m > 0:
+            need = max((self._group_count(g) for g in order[:m]),
+                       default=1)
+            rp = self._round_up(int(need * self.headroom))
+            reserve = 0 if m == len(order) else 2 * self.n_devices * rw
+            if m * rp + reserve <= budget:
+                break
+            m -= 1
+        desired = {g.gid for g in order[:m]}
+        for group in self._groups:
+            if group.resident and group.gid not in desired \
+                    and not group.pending_demote:
+                self._demote(group)
+        for group in self._groups:
+            if not group.resident and group.gid in desired:
+                self._promote(group)
+            elif group.resident and group.gid in desired:
+                group.pending_demote = False   # placement changed its mind
+
+    def _seg_fresh(self, group: _ShardGroup) -> bool:
+        """True when the group's packed segment still matches the catalog
+        and carries every enabled plane's columns. Lock held."""
+        seg = group.segment
+        if seg is None or group.dirty or group.structural:
+            return False
+        if self._plane_reports and "ord" not in seg.names:
+            return False
+        if self._plane_cube and "cgid" not in seg.names:
+            return False
+        return self._shard_versions(group) == group.versions
+
+    def _ensure_segments(self) -> None:
+        """Re-encode any demoted group whose segment went stale (churn on
+        warm data): snapshot, repack, refreeze its cube partial. The
+        churn counters feeding :meth:`_placement_pass` promote a group
+        that keeps doing this. Lock held."""
+        for group in self._groups:
+            if group.resident or self._seg_fresh(group):
+                continue
+            self._commit_demote(group, self._pack_segment(group),
+                                repack=True)
+
+    def _pack_segment(self, group: _ShardGroup) -> PackedSegment:
+        """Encode the group's column stack into a PackedSegment (host
+        mirrors refreshed first if stale), persisted as an mmap-able
+        ``.npz`` beside the sqlite mirror when the catalog has one.
+        Lock held."""
+        if not self._mirror_fresh(group):
+            self._host_refresh(group)
+        cols: Dict[str, np.ndarray] = {
+            n: np.asarray(group.cols[n]) for n in PLAN_COLUMNS}
+        if self._plane_reports:
+            cols["path"] = np.asarray(group.paths if group.paths is not None
+                                      else [], dtype="<U1" if not group.rows
+                                      else None)
+            cols["ord"] = group.ord
+        if self._plane_cube:
+            cols["cgid"] = group.cgid
+            cols["csb"] = group.csb
+        seg = PackedSegment.pack(
+            cols, meta={"gid": group.gid, "rows": group.rows,
+                        "versions": {str(k): int(v)
+                                     for k, v in group.versions.items()}})
+        path = self.catalog.sidecar_path(f"seg{group.gid}.npz")
+        if path:
+            seg.save(path)
+            seg = PackedSegment.load(path, mmap=True)
+        return seg
+
+    def _freeze_cube(self, group: _ShardGroup) -> None:
+        """Capture the demoted group's exact int64 partial cube at the
+        current ``_cube_ref`` (host bincount over the cube mirrors) so
+        unscoped profile queries never stream: merged cube = resident
+        psum + frozen partials. Stale once an age flip passes
+        ``frozen_min_flip`` (then :meth:`_refreeze` recomputes from the
+        segment). Lock held, mirrors fresh."""
+        from .profiles import A as _A, S as _S, _bincount_i64
+        b = max(len(self._cube_groups), 1)
+        k = b * _S * _A
+        flat = ((group.cgid * _S + group.csb) * _A
+                + group.cab).astype(np.int64)
+        counts = np.bincount(flat, minlength=k)
+        sizes = np.asarray(group.cols["size"], np.int64)
+        blocks = np.asarray(group.cols["blocks"], np.int64)
+        group.frozen_cube = np.stack([
+            counts.astype(np.int64),
+            _bincount_i64(flat, sizes, k, counts),
+            _bincount_i64(flat, blocks, k, counts)]).reshape(3, b, _S, _A)
+        group.frozen_min_flip = group.cmin_flip
+        group.frozen_ref = self._cube_ref
+
+    def _refreeze(self, group: _ShardGroup, now: float) -> int:
+        """Recompute a demoted group's frozen partial cube at ``now``
+        (decoding the segment) after an age-bucket flip passed. Returns
+        the number of rows that moved buckets. Lock held."""
+        from .profiles import (_FLIP_EDGES, A as _A, S as _S,
+                               _bincount_i64, age_buckets_np)
+        dec = group.segment.columns()
+        stamps = np.asarray(dec["atime"], np.float64)
+        old_ab = age_buckets_np(group.frozen_ref - stamps)
+        new_ab = age_buckets_np(now - stamps)
+        cgid = np.asarray(dec["cgid"], np.int64)
+        csb = np.asarray(dec["csb"], np.int64)
+        b = max(len(self._cube_groups), 1)
+        k = b * _S * _A
+        flat = ((cgid * _S + csb) * _A + new_ab).astype(np.int64)
+        counts = np.bincount(flat, minlength=k)
+        group.frozen_cube = np.stack([
+            counts.astype(np.int64),
+            _bincount_i64(flat, np.asarray(dec["size"], np.int64), k,
+                          counts),
+            _bincount_i64(flat, np.asarray(dec["blocks"], np.int64), k,
+                          counts)]).reshape(3, b, _S, _A)
+        flips = stamps + _FLIP_EDGES[new_ab]
+        finite = np.isfinite(flips)
+        group.frozen_min_flip = float(flips[finite].min()) \
+            if finite.any() else np.inf
+        group.frozen_ref = now
+        group.sstack_ref = np.nan           # AB row of the stack is stale
+        return int((new_ab != old_ab).sum())
+
+    def _frozen_total(self) -> np.ndarray:
+        """Sum of every demoted group's frozen partial, padded to the
+        current ``_cube_bp`` group capacity. Lock held."""
+        from .profiles import A as _A, S as _S
+        out = np.zeros((3, self._cube_bp, _S, _A), np.int64)
+        for group in self._groups:
+            fz = group.frozen_cube
+            if group.resident or fz is None:
+                continue
+            out[:, : fz.shape[1]] += fz
+        return out
+
+    def _commit_demote(self, group: _ShardGroup, seg: PackedSegment,
+                       repack: bool = False) -> None:
+        """Install a packed segment and free the group's device buffers
+        and host mirrors. Lock held."""
+        group.segment = seg
+        group.sstack = group.svis = group.sspaths = None
+        group.sstack_ref = np.nan
+        group.svis_ver = -1
+        if self._plane_cube:
+            self._freeze_cube(group)
+        group.resident = False
+        group.uploaded = False
+        group.pending_demote = False
+        self._bufs[group.gid] = None        # device buffers freed (donated
+        self._global = None                 # assemblies dropped with them)
+        if self._perm_bufs is not None:
+            self._perm_bufs[group.gid] = None
+        self._perm_global = None
+        if self._cube_bufs is not None:
+            self._cube_bufs[group.gid] = None
+        self._cube_partials = None
+        self._cube_cache = None
+        # host mirrors dropped: the packed segment IS the warm copy
+        group.fids = np.zeros(0, np.int64)
+        group.cols = {}
+        group._order = None
+        group.paths = group.spaths = group.ord = None
+        group.cgid = group.csb = group.cab = group.cflip = None
+        group.cmin_flip = np.inf
+        group.vis = None
+        # deliberately NOT an epoch bump: the commit is content-preserving
+        # (version-revalidated against the catalog), and in-flight
+        # MeshMatch handles hold their own mirror-array references — an
+        # async commit landing between match() and plan() must not stale
+        # them
+        if repack:
+            self.segment_repacks += 1
+        else:
+            self.demotions += 1
+
+    def _demote(self, group: _ShardGroup) -> None:
+        """Demote a resident group to a packed warm segment. With
+        ``demote_async`` the encode runs on a worker thread against its
+        own catalog snapshot (the group keeps serving resident); the
+        commit re-validates versions under the lock and discards the pack
+        if the group churned meanwhile. Lock held."""
+        if not self.demote_async:
+            self._commit_demote(group, self._pack_segment(group))
+            return
+        group.pending_demote = True
+        versions = self._shard_versions(group)
+
+        def worker() -> None:
+            shadow = _ShardGroup(group.gid, group.shard_ids)
+            with self._lock:
+                if not (group.pending_demote and group.resident):
+                    return
+            seg_versions = self._shard_versions(group)
+            shadow.versions = seg_versions
+            # snapshot + encode WITHOUT the store lock (queries keep
+            # serving the still-resident blocks meanwhile)
+            self._host_refresh(shadow)
+            shadow.resident = group.resident
+            seg = self._pack_segment_from(shadow)
+            with self._lock:
+                if (group.pending_demote and group.resident
+                        and not group.dirty and not group.structural
+                        and self._shard_versions(group) == shadow.versions):
+                    # adopt the shadow's fresh mirrors so _freeze_cube
+                    # inside the commit reads consistent state
+                    for slot in ("fids", "cols", "rows", "versions",
+                                 "offsets", "paths", "spaths", "ord",
+                                 "cgid", "csb", "cab", "cflip",
+                                 "cmin_flip"):
+                        setattr(group, slot, getattr(shadow, slot))
+                    self._commit_demote(group, seg)
+                else:
+                    group.pending_demote = False
+                    self.demote_races += 1
+
+        t = threading.Thread(target=worker, daemon=True)
+        self._demote_workers.append(t)
+        t.start()
+
+    def _pack_segment_from(self, shadow: _ShardGroup) -> PackedSegment:
+        """Encode from an already-fresh shadow mirror (async demote path:
+        no store lock needed — the shadow is thread-private)."""
+        cols: Dict[str, np.ndarray] = {
+            n: np.asarray(shadow.cols[n]) for n in PLAN_COLUMNS}
+        if self._plane_reports:
+            cols["path"] = np.asarray(
+                shadow.paths if shadow.paths is not None else [],
+                dtype="<U1" if not shadow.rows else None)
+            cols["ord"] = shadow.ord
+        if self._plane_cube:
+            cols["cgid"] = shadow.cgid
+            cols["csb"] = shadow.csb
+        seg = PackedSegment.pack(
+            cols, meta={"gid": shadow.gid, "rows": shadow.rows,
+                        "versions": {str(k): int(v)
+                                     for k, v in shadow.versions.items()}})
+        path = self.catalog.sidecar_path(f"seg{shadow.gid}.npz")
+        if path:
+            seg.save(path)
+            seg = PackedSegment.load(path, mmap=True)
+        return seg
+
+    def _reap_demote_workers(self) -> None:
+        self._demote_workers = [t for t in self._demote_workers
+                                if t.is_alive()]
+
+    def drain_demotions(self, timeout: Optional[float] = None) -> None:
+        """Join any in-flight async demotions (tests / shutdown). Must be
+        called WITHOUT the store lock held."""
+        for t in list(self._demote_workers):
+            t.join(timeout)
+        with self._lock:
+            self._reap_demote_workers()
+
+    def _promote(self, group: _ShardGroup) -> None:
+        """Bring a demoted group back resident: decode the segment into
+        host mirrors (exact round-trip — no catalog re-read when the
+        segment is fresh) and let the refresh loop stage the block.
+        Lock held."""
+        seg = group.segment
+        if seg is not None and self._seg_fresh(group):
+            dec = seg.columns()
+            group.fids = np.asarray(dec["fid"], np.int64)
+            # mirrors must be writable (delta refresh patches in place);
+            # decoded arrays may be read-only mmap views, so copy
+            group.cols = {n: np.array(dec[n]) for n in PLAN_COLUMNS}
+            group.rows = int(group.fids.size)
+            group._order = None
+            if self._plane_reports:
+                parr = np.asarray(dec["path"])
+                group.paths = parr.tolist()
+                group.ord = np.asarray(dec["ord"], np.int64)
+                sp = np.empty_like(parr)
+                sp[group.ord] = parr
+                group.spaths = sp
+            if self._plane_cube:
+                from .profiles import _FLIP_EDGES, age_buckets_np
+                group.cgid = np.asarray(dec["cgid"], np.int64)
+                group.csb = np.asarray(dec["csb"], np.int64)
+                stamps = np.asarray(dec["atime"], np.float64)
+                group.cab = age_buckets_np(self._cube_ref - stamps)
+                group.cflip = stamps + _FLIP_EDGES[group.cab]
+                finite = np.isfinite(group.cflip)
+                group.cmin_flip = float(group.cflip[finite].min()) \
+                    if finite.any() else np.inf
+        # else: stale/absent segment — mirrors stay empty and the refresh
+        # loop takes the full snapshot+upload path
+        group.segment = None
+        group.sstack = group.svis = group.sspaths = None
+        group.frozen_cube = None
+        group.frozen_min_flip = np.inf
+        group.resident = True
+        group.uploaded = False
+        group.pending_demote = False
+        if self._plane_cube:
+            self._cube_stale = True         # its partial must rebuild
+            self._cube_cache = None
+        self._epoch += 1
+        self.promotions += 1
+
+    def tiering_counters(self) -> Dict[str, int]:
+        """Snapshot of the tiering observability counters (surfaced per
+        run in :attr:`RunReport.tiering`, asserted by ``bench_tiering``)."""
+        with self._lock:
+            return {
+                "demotions": self.demotions,
+                "promotions": self.promotions,
+                "segments_streamed": self.segments_streamed,
+                "windows_streamed": self.windows_streamed,
+                "window_stalls": self.window_stalls,
+                "segment_repacks": self.segment_repacks,
+                "demote_races": self.demote_races,
+                "device_pads": self.device_pads,
+                "resident_groups": sum(g.resident for g in self._groups),
+                "demoted_groups": sum(not g.resident
+                                      for g in self._groups),
+            }
+
+    # -- warm-segment streaming ------------------------------------------------
+    def _segment_stack(self, group: _ShardGroup) -> np.ndarray:
+        """(block_rows, n) f32 staging stack decoded from the group's
+        warm segment — the streaming analogue of :meth:`_stack_f32`,
+        cached on the group until the segment repacks. The age-bucket row
+        re-derives (from the exact float64 stamps) whenever the cube
+        reference moved, so streamed windows carry the same AB codes the
+        resident blocks do. Lock held."""
+        dec = group.segment.columns()
+        if group.sstack is None:
+            n = int(group.segment.n_rows)
+            out = np.zeros((self._block_rows(), n), np.float32)
+            for i, name in enumerate(KERNEL_COLUMNS):
+                out[i] = dec[name]
+            out[_VALID_COL] = 1.0
+            if self._plane_reports:
+                out[_ORD_COL] = dec["ord"]
+            if self._plane_cube:
+                out[_GID_COL] = dec["cgid"]
+                out[_SB_COL] = dec["csb"]
+            group.sstack = out
+            group.sstack_ref = np.nan       # AB row filled below
+        if self._plane_cube and group.sstack_ref != self._cube_ref:
+            from .profiles import age_buckets_np
+            stamps = np.asarray(dec["atime"], np.float64)
+            group.sstack[_AB_COL] = age_buckets_np(self._cube_ref - stamps)
+            group.sstack_ref = self._cube_ref
+        return group.sstack
+
+    def _segment_spaths(self, group: _ShardGroup) -> np.ndarray:
+        """Sorted path mirror of a demoted group (du rank bounds, subtree
+        grants) — decoded once per segment."""
+        if group.sspaths is None:
+            group.sspaths = np.sort(
+                np.asarray(group.segment.decode("path")), kind="stable")
+        return group.sspaths
+
+    def _segment_vis(self, group: _ShardGroup) -> np.ndarray:
+        """(Sp, n) bool subject visibility over a demoted group's rows,
+        cached per grants version — the host source the streamed
+        permission windows pack from. Lock held, after
+        :meth:`_ensure_perms` (sizes ``_perm_sp``)."""
+        if (group.svis is not None
+                and group.svis_ver == self._grants.version
+                and group.svis.shape[0] == self._perm_sp):
+            return group.svis
+        dec = group.segment.columns()
+        group.svis = self._vis_rows(
+            self._segment_spaths(group),
+            np.asarray(dec["owner"], np.int64),
+            np.asarray(dec["group"], np.int64),
+            np.asarray(dec["ord"], np.int64))
+        group.svis_ver = self._grants.version
+        return group.svis
+
+    def _perm_window(self, vis: np.ndarray, base: int,
+                     nrows: int, rw: int):
+        """Pack one chunk of a demoted group's visibility into the
+        (D, Sp, Rw/32) uint32 window layout (rows past ``nrows`` pack to
+        0 — invisible, like the validity row)."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        D = self.n_devices
+        sub = np.zeros((self._perm_sp, D * rw), dtype=bool)
+        sub[:, :nrows] = vis[:, base:base + nrows]
+        words = np.packbits(
+            sub.reshape(self._perm_sp, D, rw).transpose(1, 0, 2),
+            axis=2, bitorder="little").view(np.uint32)
+        return jax.make_array_from_single_device_arrays(
+            (D, self._perm_sp, rw // 32),
+            NamedSharding(self.mesh, P("shards")),
+            [jax.device_put(words[d:d + 1], dev)
+             for d, dev in enumerate(self.devices)])
+
+    def _stream_windows(self, group: _ShardGroup, launch, want_perm: bool):
+        """Drive one demoted group's packed segment through the
+        double-buffered streaming window.
+
+        The segment decodes into the cached f32 row stack, which walks
+        the FULL mesh in (D·Rw)-row chunks — device ``d`` of the chunk at
+        ``base`` holds group-local rows ``[base+d·Rw, base+(d+1)·Rw)``.
+        Chunk k+1 stages into the alternate host buffer and dispatches
+        while chunk k's launch is still computing (async dispatch
+        overlaps the host→device copy with the compute); results are
+        consumed one batch behind, so a staging buffer is never rewritten
+        before its transfer completed. ``launch(window, perm_window)``
+        returns jax array(s); yields ``(base, nrows, result)`` in row
+        order. Lock held for the whole sweep (same discipline as match).
+        """
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        D = self.n_devices
+        rw = self._window_rows()
+        chunk = D * rw
+        stack = self._segment_stack(group)
+        n = stack.shape[1]
+        if not n:
+            return
+        br = self._block_rows()
+        vis = self._segment_vis(group) if want_perm else None
+        sharding = NamedSharding(self.mesh, P("shards"))
+        staging = (np.zeros((D, br, rw), np.float32),
+                   np.zeros((D, br, rw), np.float32))
+        pending = None
+        self.segments_streamed += 1
+        for k, base in enumerate(range(0, n, chunk)):
+            nrows = min(chunk, n - base)
+            buf = staging[k % 2]
+            if nrows == chunk:
+                buf[:] = stack[:, base:base + chunk].reshape(
+                    br, D, rw).transpose(1, 0, 2)
+            else:                           # final partial chunk
+                buf.fill(0.0)               # pad rows read valid=0
+                for d in range(D):
+                    lo = base + d * rw
+                    cnt = min(max(n - lo, 0), rw)
+                    if cnt:
+                        buf[d, :, :cnt] = stack[:, lo:lo + cnt]
+            win = jax.make_array_from_single_device_arrays(
+                (D, br, rw), sharding,
+                [jax.device_put(buf[d:d + 1], dev)
+                 for d, dev in enumerate(self.devices)])
+            pwin = self._perm_window(vis, base, nrows, rw) \
+                if want_perm else None
+            res = launch(win, pwin)
+            self.windows_streamed += 1
+            if pending is not None:
+                yield self._consume_window(pending)
+            pending = (base, nrows, res)
+        if pending is not None:
+            yield self._consume_window(pending)
+
+    def _consume_window(self, pending):
+        base, nrows, res = pending
+        first = res[0] if isinstance(res, tuple) else res
+        ready = getattr(first, "is_ready", None)
+        if ready is not None and not ready():
+            # the overlapped copy did not hide this batch's compute: the
+            # consumer blocks on device_get (bench watches this counter)
+            self.window_stalls += 1
+        return base, nrows, res
+
+    def _group_paths(self, group: _ShardGroup):
+        """Row-aligned paths: the host mirror list for a resident group,
+        the cached segment decode for a demoted one."""
+        if group.resident:
+            return group.paths
+        return group.segment.decode("path")
+
+    def _group_arrays(self, group: _ShardGroup):
+        """(fids, columns, row-aligned paths) for result gathering —
+        host mirrors resident, cached segment decode demoted."""
+        if group.resident:
+            return group.fids, group.cols, group.paths
+        dec = group.segment.columns()
+        return np.asarray(dec["fid"], np.int64), dec, dec.get("path")
 
     # -- permissions plane (per-subject packed visibility bitsets) -------------
     def _require_permissions_plane(self) -> None:
@@ -924,19 +1639,19 @@ class DeviceColumnStore:
         # fallback would fail identically, so degrading serves nothing
         return int(self._grants.subject_id(subject))
 
-    def _vis_rows(self, group: _ShardGroup, owner: np.ndarray,
+    def _vis_rows(self, spaths: Optional[np.ndarray], owner: np.ndarray,
                   grp: np.ndarray, rank: np.ndarray) -> np.ndarray:
-        """(Sp, k) bool visibility of k group rows (given their interned
-        owner/group codes and sorted-path ranks) for every registered
-        subject — rows past the registry stay all-False pad. Mirrors
+        """(Sp, k) bool visibility of k group rows (given the group's
+        sorted path mirror, the rows' interned owner/group codes and
+        sorted-path ranks) for every registered subject — rows past the
+        registry stay all-False pad. Mirrors
         :meth:`GrantTable.visible_mask` exactly: ownership via code
         membership, subtrees via the same rank-range searches ``du``
         uses on the sorted-path mirror. Lock held."""
         strings = self.catalog.strings
         subjects = self._grants.subjects()
         out = np.zeros((self._perm_sp, owner.size), dtype=bool)
-        sp = group.spaths if group.spaths is not None \
-            else np.zeros(0, dtype="<U1")
+        sp = spaths if spaths is not None else np.zeros(0, dtype="<U1")
         for sid, s in enumerate(subjects):
             v = out[sid]
             ocodes = [c for c in (strings.code_of(u) for u in s.owners)
@@ -997,8 +1712,12 @@ class DeviceColumnStore:
             self._perm_global = None
             for group in self._groups:
                 group.vis = None
+                group.svis = None          # streaming bitsets stale too
+                group.svis_ver = -1
         changed = False
         for group in self._groups:
+            if not group.resident:         # demoted: _segment_vis on demand
+                continue
             if group.vis is not None \
                     and self._perm_bufs[group.gid] is not None:
                 continue
@@ -1009,7 +1728,7 @@ class DeviceColumnStore:
             else:
                 owner = grp = np.zeros(0, np.int64)
                 rank = np.zeros(0, np.int64)
-            group.vis = self._vis_rows(group, owner, grp, rank)
+            group.vis = self._vis_rows(group.spaths, owner, grp, rank)
             self._perm_bufs[group.gid] = jax.device_put(
                 self._pack_group(group)[None], self.devices[group.gid])
             self.perm_materializations += 1
@@ -1018,34 +1737,59 @@ class DeviceColumnStore:
             self._perm_global = None
             self._epoch += 1
 
-    def _assemble_perm(self):
+    def _assemble_perm(self, res: List[_ShardGroup], mesh):
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         if self._perm_global is None:
-            shape = (self.n_devices, self._perm_sp, self._rp // 32)
+            shape = (len(res), self._perm_sp, self._rp // 32)
             self._perm_global = jax.make_array_from_single_device_arrays(
-                shape, NamedSharding(self.mesh, P("shards")),
-                self._perm_bufs)
+                shape, NamedSharding(mesh, P("shards")),
+                [self._perm_bufs[g.gid] for g in res])
         return self._perm_global
 
     def _resolve_subject(self, subject: Optional[str]):
-        """(perm array, traced subject id) for a scoped query, or
-        (None, None) unscoped. Lock held, AFTER refresh()."""
+        """Traced subject id for a scoped query (None unscoped),
+        materializing the resident bitsets. Lock held, AFTER refresh()."""
         if subject is None:
-            return None, None
+            return None
         self._require_permissions_plane()
         self._ensure_perms()
-        sid = np.int32(self._subject_id(subject))
-        return self._assemble_perm(), sid
+        return np.int32(self._subject_id(subject))
 
-    # -- matching --------------------------------------------------------------
-    def _assemble(self):
+    # -- resident sub-mesh assembly --------------------------------------------
+    def _resident(self) -> List[_ShardGroup]:
+        """Resident groups in gid order — the device order of every
+        assembled global array (and of its result shards)."""
+        return [g for g in self._groups if g.resident]
+
+    def _demoted(self) -> List[_ShardGroup]:
+        return [g for g in self._groups if not g.resident]
+
+    def _resident_mesh(self, res: List[_ShardGroup]):
+        """1-D ``("shards",)`` mesh over the resident groups' devices.
+        The full store mesh when everything is resident (compile caches
+        and pre-tiering behavior stay byte-identical); otherwise a cached
+        sub-mesh — mesh identity is a static jit arg, so each resident
+        set compiles its collectives once."""
+        if len(res) == self.n_devices:
+            return self.mesh
+        from jax.sharding import Mesh
+        gids = tuple(g.gid for g in res)
+        mesh = self._submeshes.get(gids)
+        if mesh is None:
+            mesh = Mesh(np.asarray([self.devices[g] for g in gids]),
+                        ("shards",))
+            self._submeshes[gids] = mesh
+        return mesh
+
+    def _assemble(self, res: List[_ShardGroup], mesh):
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         if self._global is None:
-            shape = (self.n_devices, self._block_rows(), self._rp)
+            shape = (len(res), self._block_rows(), self._rp)
             self._global = jax.make_array_from_single_device_arrays(
-                shape, NamedSharding(self.mesh, P("shards")), self._bufs)
+                shape, NamedSharding(mesh, P("shards")),
+                [self._bufs[g.gid] for g in res])
         return self._global
 
     def match(self, exprs: Sequence, now: float,
@@ -1072,7 +1816,8 @@ class DeviceColumnStore:
                       with_agg: bool = True,
                       subject: Optional[str] = None) -> MeshMatch:
         import jax
-        from ..kernels.policy_scan.ops import (_agg_dict, _on_tpu,
+        from ..kernels.policy_scan.ops import (_agg_dict,
+                                               merge_agg_partials, _on_tpu,
                                                _program_tuples,
                                                mesh_policy_scan_batch)
         ops, colidx, operands = compile_programs(exprs, self.catalog.strings,
@@ -1081,26 +1826,60 @@ class DeviceColumnStore:
         if use_kernel is None:
             use_kernel = _on_tpu()
         self.refresh()
-        perm, sid = self._resolve_subject(subject)
-        global_cols = self._assemble()
-        snap = [(g.gid, g.fids, g.cols, g.rows) for g in self._groups]
-        mask, rule, agg = mesh_policy_scan_batch(
-            global_cols, operands, mesh=self.mesh, ops_t=ops_t,
-            colidx_t=colidx_t, size_col=KERNEL_COLUMNS.index("size"),
-            blocks_col=KERNEL_COLUMNS.index("blocks"),
-            valid_col=_VALID_COL, use_kernel=bool(use_kernel),
-            tile=self.tile, with_agg=with_agg, perm=perm, subject=sid)
-        # only mask + attribution cross device→host, never the columns
-        mask_np = np.asarray(jax.device_get(mask))
-        rule_np = np.asarray(jax.device_get(rule))
-        per_rule = np.asarray(jax.device_get(agg))
-        mirrors, group_idx, group_rule = [], [], []
-        for gid, gfids, gcols, grows in snap:
-            idx = np.nonzero(mask_np[gid, :grows] > 0.5)[0]
-            mirrors.append((gfids, gcols))
-            group_idx.append(idx)
-            group_rule.append(rule_np[gid, idx].astype(np.int32))
-        reval = int(sum(s[3] for s in snap))
+        sid = self._resolve_subject(subject)
+        kw = dict(ops_t=ops_t, colidx_t=colidx_t,
+                  size_col=KERNEL_COLUMNS.index("size"),
+                  blocks_col=KERNEL_COLUMNS.index("blocks"),
+                  valid_col=_VALID_COL, use_kernel=bool(use_kernel),
+                  tile=self.tile, with_agg=with_agg)
+        res = self._resident()
+        mirrors: List[Tuple[np.ndarray, Dict[str, np.ndarray]]] = \
+            [(np.zeros(0, np.int64), {})] * self.n_devices
+        group_idx = [np.zeros(0, np.int64)] * self.n_devices
+        group_rule = [np.zeros(0, np.int32)] * self.n_devices
+        agg_parts = []
+        reval = 0
+        if res:
+            mesh = self._resident_mesh(res)
+            perm = self._assemble_perm(res, mesh) if sid is not None \
+                else None
+            mask, rule, agg = mesh_policy_scan_batch(
+                self._assemble(res, mesh), operands, mesh=mesh,
+                perm=perm, subject=sid, **kw)
+            # only mask + attribution cross device→host, never the columns
+            mask_np = np.asarray(jax.device_get(mask))
+            rule_np = np.asarray(jax.device_get(rule))
+            agg_parts.append(np.asarray(jax.device_get(agg)))
+            for i, g in enumerate(res):
+                idx = np.nonzero(mask_np[i, : g.rows] > 0.5)[0]
+                mirrors[g.gid] = (g.fids, g.cols)
+                group_idx[g.gid] = idx
+                group_rule[g.gid] = rule_np[i, idx].astype(np.int32)
+                reval += g.rows
+        for g in self._demoted():
+            def launch(win, pwin):
+                return mesh_policy_scan_batch(
+                    win, operands, mesh=self.mesh, perm=pwin,
+                    subject=sid if pwin is not None else None, **kw)
+            idx_parts, rule_parts = [], []
+            for base, nrows, (mask, rule, agg) in self._stream_windows(
+                    g, launch, want_perm=sid is not None):
+                m = np.asarray(jax.device_get(mask)).reshape(-1)[:nrows]
+                r = np.asarray(jax.device_get(rule)).reshape(-1)[:nrows]
+                hit = np.nonzero(m > 0.5)[0]
+                idx_parts.append(base + hit)
+                rule_parts.append(r[hit].astype(np.int32))
+                if with_agg:
+                    agg_parts.append(np.asarray(jax.device_get(agg)))
+            dec = g.segment.columns()
+            mirrors[g.gid] = (np.asarray(dec["fid"], np.int64),
+                              {n: dec[n] for n in PLAN_COLUMNS})
+            group_idx[g.gid] = (np.concatenate(idx_parts) if idx_parts
+                                else np.zeros(0, np.int64))
+            group_rule[g.gid] = (np.concatenate(rule_parts) if rule_parts
+                                 else np.zeros(0, np.int32))
+            reval += int(g.segment.n_rows)
+        per_rule = merge_agg_partials(agg_parts, len(ops_t))
         return MeshMatch(self, self._epoch, mirrors, group_idx,
                          group_rule, _agg_dict(per_rule[0], per_rule),
                          reval)
@@ -1114,17 +1893,17 @@ class DeviceColumnStore:
         return fids, match.agg
 
     # -- resident profile cube -------------------------------------------------
-    def _assemble_cube(self):
+    def _assemble_cube(self, res: List[_ShardGroup], mesh):
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         from ..kernels.profile_cube.ref import (A_BUCKETS, N_MEASURES,
                                                 S_BUCKETS)
         if self._cube_partials is None:
-            shape = (self.n_devices, N_MEASURES,
+            shape = (len(res), N_MEASURES,
                      self._cube_bp * S_BUCKETS * A_BUCKETS)
             self._cube_partials = jax.make_array_from_single_device_arrays(
-                shape, NamedSharding(self.mesh, P("shards")),
-                self._cube_bufs)
+                shape, NamedSharding(mesh, P("shards")),
+                [self._cube_bufs[g.gid] for g in res])
         return self._cube_partials
 
     def _advance_cube_ref(self, now: float,
@@ -1182,25 +1961,31 @@ class DeviceColumnStore:
         self.rollovers += moved
         return moved
 
+    def _cube_capacity(self) -> int:
+        # group-axis capacity: headroom + f32 sublane multiple, so newly
+        # minted groups keep scatter-adding without an immediate rebuild
+        b = max(len(self._cube_groups), 1)
+        return max(-(-int(b * self.headroom) // 8) * 8, 8)
+
     def _rebuild_cube(self, now: float) -> None:
         """Cold/fallback path: one ``mesh_profile_cube`` launch rebuilds
-        every device's partial from its resident block. Lock held; blocks
-        must be fresh (call after :meth:`refresh`)."""
+        every resident device's partial from its block. Lock held; blocks
+        must be fresh (call after :meth:`refresh`) and at least one group
+        resident."""
         import jax
         from ..kernels.profile_cube.ops import mesh_profile_cube
         self._advance_cube_ref(now, update_partials=False)
-        b = max(len(self._cube_groups), 1)
-        # group-axis capacity: headroom + f32 sublane multiple, so newly
-        # minted groups keep scatter-adding without an immediate rebuild
-        self._cube_bp = max(-(-int(b * self.headroom) // 8) * 8, 8)
+        self._cube_bp = self._cube_capacity()
+        res = self._resident()
+        mesh = self._resident_mesh(res)
         partials, combined = mesh_profile_cube(
-            self._assemble(), mesh=self.mesh, n_groups=self._cube_bp,
+            self._assemble(res, mesh), mesh=mesh, n_groups=self._cube_bp,
             gid_col=_GID_COL, size_col=KERNEL_COLUMNS.index("size"),
             blocks_col=KERNEL_COLUMNS.index("blocks"), sb_col=_SB_COL,
             ab_col=_AB_COL, valid_col=_VALID_COL, use_kernel=False,
             tile=self.tile)
         by_dev = {s.device: s.data for s in partials.addressable_shards}
-        self._cube_bufs = [by_dev[d] for d in self.devices]
+        self._cube_bufs = [by_dev.get(d) for d in self.devices]
         self._cube_partials = partials
         self._cube_cache = np.rint(
             np.asarray(jax.device_get(combined))).astype(np.int64)
@@ -1211,11 +1996,28 @@ class DeviceColumnStore:
         if not self._plane_cube:
             raise PolicyError("cube plane not enabled "
                               "(DeviceColumnStore.enable_cube_plane)")
-        if (self._cube_bufs is None or self._cube_stale
-                or len(self._cube_groups) > self._cube_bp):
-            self._rebuild_cube(now)
+        res = self._resident()
+        if res:
+            if (self._cube_bufs is None or self._cube_stale
+                    or len(self._cube_groups) > self._cube_bp
+                    or any(self._cube_bufs[g.gid] is None for g in res)):
+                self._rebuild_cube(now)
+            else:
+                self._advance_cube_ref(now, update_partials=True)
         else:
-            self._advance_cube_ref(now, update_partials=True)
+            # nothing resident: only the frozen partials + streamed
+            # windows serve, but the reference still advances so their
+            # age buckets stay exact as of ``now``
+            if self._cube_bp < len(self._cube_groups) \
+                    or self._cube_bp == 0:
+                self._cube_bp = self._cube_capacity()
+            self._advance_cube_ref(now, update_partials=False)
+        # demoted partials whose first scheduled age flip passed refreeze
+        # from their segments at the advanced reference
+        for g in self._demoted():
+            if g.frozen_cube is not None \
+                    and g.frozen_min_flip <= self._cube_ref:
+                self.rollovers += self._refreeze(g, self._cube_ref)
 
     def invalidate_cube(self) -> None:
         """Force a full on-device cube rebuild on the next query (the
@@ -1233,7 +2035,13 @@ class DeviceColumnStore:
         that subject may see — one fused :func:`mesh_scoped_cube` launch
         over the resident block + bitsets (no resident scoped partials;
         the rollover advance above keeps the block's age codes exact as
-        of ``now``, so the scoped cube matches the host oracle)."""
+        of ``now``, so the scoped cube matches the host oracle).
+
+        Under tiering, demoted groups contribute without re-residency:
+        the unscoped cube adds their exact int64 frozen partials
+        (refrozen from the segment when an age flip passed); a scoped
+        cube streams their windows through :func:`mesh_scoped_cube` and
+        sums the per-window cubes with the resident launch."""
         import jax
         from ..kernels.profile_cube.ops import mesh_cube_combine
         from ..kernels.profile_cube.ref import (A_BUCKETS, N_MEASURES,
@@ -1246,30 +2054,55 @@ class DeviceColumnStore:
             self.refresh()
             self._ensure_cube(now)
             self.store_queries += 1
+            res = self._resident()
+            demoted = self._demoted()
+            b = min(len(self._cube_groups), self._cube_bp)
             if subject is not None:
                 from ..kernels.profile_cube.ops import mesh_scoped_cube
                 self._require_permissions_plane()
                 self._ensure_perms()
                 sid = np.int32(self._subject_id(subject))
-                cube = mesh_scoped_cube(
-                    self._assemble(), self._assemble_perm(), sid,
-                    mesh=self.mesh, n_groups=self._cube_bp,
-                    gid_col=_GID_COL,
-                    size_col=KERNEL_COLUMNS.index("size"),
-                    blocks_col=KERNEL_COLUMNS.index("blocks"),
-                    sb_col=_SB_COL, ab_col=_AB_COL, valid_col=_VALID_COL)
-                b = min(len(self._cube_groups), self._cube_bp)
-                return np.rint(np.asarray(jax.device_get(cube))).astype(
-                    np.int64)[:, :b]
-            if self._cube_cache is None:
-                combined = mesh_cube_combine(self._assemble_cube(),
-                                             mesh=self.mesh)
+                kw = dict(n_groups=self._cube_bp, gid_col=_GID_COL,
+                          size_col=KERNEL_COLUMNS.index("size"),
+                          blocks_col=KERNEL_COLUMNS.index("blocks"),
+                          sb_col=_SB_COL, ab_col=_AB_COL,
+                          valid_col=_VALID_COL)
+                total = np.zeros((N_MEASURES, self._cube_bp, S_BUCKETS,
+                                  A_BUCKETS), np.float64)
+                if res:
+                    mesh = self._resident_mesh(res)
+                    cube = mesh_scoped_cube(
+                        self._assemble(res, mesh),
+                        self._assemble_perm(res, mesh), sid,
+                        mesh=mesh, **kw)
+                    total += np.asarray(jax.device_get(cube), np.float64)
+                for g in demoted:
+                    def launch(win, pwin):
+                        return mesh_scoped_cube(win, pwin, sid,
+                                                mesh=self.mesh, **kw)
+                    for _b, _n, cube in self._stream_windows(
+                            g, launch, want_perm=True):
+                        total += np.asarray(jax.device_get(cube),
+                                            np.float64)
+                return np.rint(total).astype(np.int64)[:, :b]
+            if res and self._cube_cache is None:
+                mesh = self._resident_mesh(res)
+                combined = mesh_cube_combine(
+                    self._assemble_cube(res, mesh), mesh=mesh)
                 self._cube_cache = np.rint(
                     np.asarray(jax.device_get(combined))).astype(
                         np.int64).reshape(N_MEASURES, self._cube_bp,
                                           S_BUCKETS, A_BUCKETS)
-            b = min(len(self._cube_groups), self._cube_bp)
-            return self._cube_cache[:, :b]
+            frozen = [g for g in demoted if g.frozen_cube is not None]
+            if not frozen:
+                return (self._cube_cache[:, :b] if res
+                        else np.zeros((N_MEASURES, b, S_BUCKETS,
+                                       A_BUCKETS), np.int64))
+            cube = (self._cube_cache.copy() if res
+                    else np.zeros((N_MEASURES, self._cube_bp, S_BUCKETS,
+                                   A_BUCKETS), np.int64))
+            cube += self._frozen_total()
+            return cube[:, :b]
 
     # -- resident report queries (rbh-find / top-N / rbh-du) -------------------
     def _require_reports_plane(self) -> None:
@@ -1312,7 +2145,8 @@ class DeviceColumnStore:
                 hi = int(group.offsets[p + 1])
                 idx = match._group_idx[group.gid]
                 seg = idx[(idx >= lo) & (idx < hi)]
-                out.extend(group.paths[i] for i in seg.tolist())
+                paths = self._group_paths(group)
+                out.extend(str(paths[i]) for i in seg.tolist())
                 if limit and len(out) >= limit:
                     return out[:limit]
             return out
@@ -1336,39 +2170,91 @@ class DeviceColumnStore:
             self._require_reports_plane()
             self.refresh()
             self.store_queries += 1
-            if k <= 0 or not any(g.rows for g in self._groups):
+            res = self._resident()
+            demoted = self._demoted()
+            if k <= 0 or not (any(g.rows for g in res)
+                              or any(g.segment.n_rows for g in demoted)):
                 return []
-            perm, sid = self._resolve_subject(subject)
-            global_cols = self._assemble()
+            sid = self._resolve_subject(subject)
             col = KERNEL_COLUMNS.index(by)
             type_col = KERNEL_COLUMNS.index("type")
             file_code = float(int(FsType.FILE))
-            kd = min(k, self._rp)
-            vals, _idx = mesh_column_topk(
-                global_cols, mesh=self.mesh, col=col, k=kd, desc=desc,
-                valid_col=_VALID_COL, type_col=type_col,
-                file_code=file_code, perm=perm, subject=sid)
-            merged = np.asarray(jax.device_get(vals)).ravel()
+            want_perm = sid is not None
+            # pass 1: per-device / per-window top-k candidates — the
+            # global top-k is a subset of their union, so the merged
+            # k-th best is an exact selection threshold for pass 2
+            cand_thr = []
+            mesh = global_cols = perm = None
+            if res:
+                mesh = self._resident_mesh(res)
+                global_cols = self._assemble(res, mesh)
+                perm = self._assemble_perm(res, mesh) if want_perm \
+                    else None
+                vals, _idx = mesh_column_topk(
+                    global_cols, mesh=mesh, col=col,
+                    k=min(k, self._rp), desc=desc, valid_col=_VALID_COL,
+                    type_col=type_col, file_code=file_code, perm=perm,
+                    subject=sid)
+                cand_thr.append(np.asarray(jax.device_get(vals)).ravel())
+            kw = min(k, self._window_rows())
+            for g in demoted:
+                def launch_topk(win, pwin):
+                    return mesh_column_topk(
+                        win, mesh=self.mesh, col=col, k=kw, desc=desc,
+                        valid_col=_VALID_COL, type_col=type_col,
+                        file_code=file_code, perm=pwin,
+                        subject=sid if pwin is not None else None)
+                for _b, _n, (vals, _i) in self._stream_windows(
+                        g, launch_topk, want_perm):
+                    cand_thr.append(
+                        np.asarray(jax.device_get(vals)).ravel())
+            merged = np.concatenate(cand_thr)
             merged = merged[np.isfinite(merged)]
             if merged.size == 0:
                 return []
             merged.sort()                     # ascending
             kk = min(k, merged.size)
             thr = float(merged[-kk] if desc else merged[kk - 1])
-            mask = mesh_threshold_rows(
-                global_cols, thr, mesh=self.mesh, col=col, ge=desc,
-                valid_col=_VALID_COL, type_col=type_col,
-                file_code=file_code, perm=perm, subject=sid)
-            mask_np = np.asarray(jax.device_get(mask))
+            # pass 2: threshold mask recovers every candidate, including
+            # cross-device / cross-window boundary ties
             cand_vals, cand_pos, cand_paths, cand_fids = [], [], [], []
-            for group in self._groups:
-                rows = np.nonzero(mask_np[group.gid, :group.rows] > 0.5)[0]
-                if not rows.size:
-                    continue
-                cand_vals.append(group.cols[by][rows])
+
+            def collect(group, rows):
+                fids, gcols, paths = self._group_arrays(group)
+                cand_vals.append(np.asarray(gcols[by])[rows])
                 cand_pos.append(self._arrays_positions(group, rows))
-                cand_fids.append(group.fids[rows])
-                cand_paths.extend(group.paths[i] for i in rows.tolist())
+                cand_fids.append(np.asarray(fids)[rows])
+                cand_paths.extend(str(paths[i]) for i in rows.tolist())
+
+            if res:
+                mask = mesh_threshold_rows(
+                    global_cols, thr, mesh=mesh, col=col, ge=desc,
+                    valid_col=_VALID_COL, type_col=type_col,
+                    file_code=file_code, perm=perm, subject=sid)
+                mask_np = np.asarray(jax.device_get(mask))
+                for i, group in enumerate(res):
+                    rows = np.nonzero(mask_np[i, : group.rows] > 0.5)[0]
+                    if rows.size:
+                        collect(group, rows)
+            for g in demoted:
+                def launch_thr(win, pwin):
+                    return mesh_threshold_rows(
+                        win, thr, mesh=self.mesh, col=col, ge=desc,
+                        valid_col=_VALID_COL, type_col=type_col,
+                        file_code=file_code, perm=pwin,
+                        subject=sid if pwin is not None else None)
+                parts = []
+                for base, nrows, mask in self._stream_windows(
+                        g, launch_thr, want_perm):
+                    m = np.asarray(jax.device_get(mask)) \
+                        .reshape(-1)[:nrows]
+                    hit = np.nonzero(m > 0.5)[0]
+                    if hit.size:
+                        parts.append(base + hit)
+                if parts:
+                    collect(g, np.concatenate(parts))
+            if not cand_vals:
+                return []
             values = np.concatenate(cand_vals)
             pos = np.concatenate(cand_pos)
             fids = np.concatenate(cand_fids)
@@ -1392,26 +2278,53 @@ class DeviceColumnStore:
             self._require_reports_plane()
             self.refresh()
             self.store_queries += 1
-            perm, sid = self._resolve_subject(subject)
+            sid = self._resolve_subject(subject)
+            want_perm = sid is not None
             prefix = path_prefix.rstrip("/")
-            bounds = np.zeros((self.n_devices, 4), np.float32)
-            for group in self._groups:
-                sp = group.spaths if group.spaths is not None \
-                    else np.zeros(0, dtype="<U1")
-                bounds[group.gid] = (
-                    np.searchsorted(sp, prefix + "/", side="left"),
-                    np.searchsorted(sp, prefix + "0", side="left"),
-                    np.searchsorted(sp, prefix, side="left"),
-                    np.searchsorted(sp, prefix, side="right"))
-            agg = mesh_range_aggregate(
-                self._assemble(), bounds, mesh=self.mesh,
-                ord_col=_ORD_COL, type_col=KERNEL_COLUMNS.index("type"),
-                size_col=KERNEL_COLUMNS.index("size"),
-                blocks_col=KERNEL_COLUMNS.index("blocks"),
-                valid_col=_VALID_COL, file_code=float(int(FsType.FILE)),
-                perm=perm, subject=sid)
-            r = np.asarray(jax.device_get(agg))
-            return {"count": int(round(float(r[0]))),
-                    "files": int(round(float(r[1]))),
-                    "volume": int(round(float(r[2]))),
-                    "spc_used": int(round(float(r[3])))}
+
+            def rank_bounds(sp):
+                return (np.searchsorted(sp, prefix + "/", side="left"),
+                        np.searchsorted(sp, prefix + "0", side="left"),
+                        np.searchsorted(sp, prefix, side="left"),
+                        np.searchsorted(sp, prefix, side="right"))
+
+            kw = dict(ord_col=_ORD_COL,
+                      type_col=KERNEL_COLUMNS.index("type"),
+                      size_col=KERNEL_COLUMNS.index("size"),
+                      blocks_col=KERNEL_COLUMNS.index("blocks"),
+                      valid_col=_VALID_COL,
+                      file_code=float(int(FsType.FILE)))
+            res = self._resident()
+            total = np.zeros(4, np.float64)
+            if res:
+                mesh = self._resident_mesh(res)
+                perm = self._assemble_perm(res, mesh) if want_perm \
+                    else None
+                bounds = np.zeros((len(res), 4), np.float32)
+                for i, group in enumerate(res):
+                    sp = group.spaths if group.spaths is not None \
+                        else np.zeros(0, dtype="<U1")
+                    bounds[i] = rank_bounds(sp)
+                agg = mesh_range_aggregate(
+                    self._assemble(res, mesh), bounds, mesh=mesh,
+                    perm=perm, subject=sid, **kw)
+                total += np.asarray(jax.device_get(agg), np.float64)
+            for g in self._demoted():
+                # the window rows carry each row's rank in the GROUP's
+                # sorted-path order, so one bounds row serves every
+                # device of every window of this group
+                gb = np.tile(np.asarray(
+                    rank_bounds(self._segment_spaths(g)), np.float32),
+                    (self.n_devices, 1))
+
+                def launch(win, pwin):
+                    return mesh_range_aggregate(
+                        win, gb, mesh=self.mesh, perm=pwin,
+                        subject=sid if pwin is not None else None, **kw)
+                for _b, _n, agg in self._stream_windows(g, launch,
+                                                        want_perm):
+                    total += np.asarray(jax.device_get(agg), np.float64)
+            return {"count": int(round(float(total[0]))),
+                    "files": int(round(float(total[1]))),
+                    "volume": int(round(float(total[2]))),
+                    "spc_used": int(round(float(total[3])))}

@@ -100,19 +100,23 @@ class GrantTable:
                 s.subtrees + tuple(subtrees))
             self.version += 1
 
+    def _unknown(self, name: str) -> KeyError:
+        known = ", ".join(sorted(self._ids)) or "<none registered>"
+        return KeyError(f"unknown subject {name!r} (known subjects: {known})")
+
     def subject_id(self, name: str) -> int:
         with self._lock:
             try:
                 return self._ids[name]
             except KeyError:
-                raise KeyError(f"unknown subject {name!r}") from None
+                raise self._unknown(name) from None
 
     def subject(self, name: str) -> Subject:
         with self._lock:
             try:
                 return self._subjects[self._ids[name]]
             except KeyError:
-                raise KeyError(f"unknown subject {name!r}") from None
+                raise self._unknown(name) from None
 
     def subjects(self) -> List[Subject]:
         """Snapshot of every subject in id order (the bitset row order)."""

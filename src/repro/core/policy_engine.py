@@ -192,6 +192,12 @@ class RunReport:
     # the requested backend ran): benchmarks/CI assert the kernel / mesh
     # path really executed instead of silently degrading to numpy
     fallback_reason: str = ""
+    # tiered-residency activity during the mesh match (empty when the run
+    # did not go through a device store): counter deltas for demotions /
+    # promotions / segments_streamed / windows_streamed / window_stalls
+    # etc., plus the absolute resident_groups / demoted_groups gauges —
+    # bench_tiering asserts streaming really happened from these
+    tiering: dict = dataclasses.field(default_factory=dict)
 
 
 class UsageWatermarkTrigger:
@@ -819,6 +825,7 @@ class PolicyEngine:
                                       has_extra=extra_criteria is not None)
 
         fallback = ""
+        tiering: dict = {}
         if mode == "incremental":
             fids, sizes, sort_keys, ridx, reval = self._match_incremental(
                 policy, state, extra_criteria, now)
@@ -842,6 +849,8 @@ class PolicyEngine:
                 rebuild = state is not None and extra_criteria is None
                 if rebuild:
                     state.begin_rebuild()
+                tc0 = self.device_store.tiering_counters() \
+                    if self.device_store is not None else {}
                 try:
                     match = self._match_mesh(policy, extra_criteria, now)
                     if rebuild:
@@ -856,6 +865,11 @@ class PolicyEngine:
                     reval = match.reval
                     used_eval = "policy_scan_mesh"
                     mesh_done = True
+                    # deltas for counters, absolute values for gauges
+                    tc1 = self.device_store.tiering_counters()
+                    tiering = {
+                        k: v if k in ("resident_groups", "demoted_groups")
+                        else v - tc0.get(k, 0) for k, v in tc1.items()}
                 except PolicyError as e:
                     if rebuild:
                         state.invalidate()
@@ -889,7 +903,7 @@ class PolicyEngine:
         report = RunReport(policy=policy_name, matched=int(fids.size),
                            trigger=trigger, evaluator=used_eval,
                            mode=mode, reval=reval, execution=execution,
-                           fallback_reason=fallback,
+                           fallback_reason=fallback, tiering=tiering,
                            matched_volume=int(sizes.sum()) if fids.size else 0)
 
         executed = 0

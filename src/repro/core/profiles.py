@@ -86,6 +86,21 @@ def age_buckets_np(age: np.ndarray) -> np.ndarray:
                    0, A - 1)
 
 
+HOT_AGE_BUCKETS = 2   # leading age buckets counted as "hot" for placement
+
+
+def hot_volume_fraction(ab: np.ndarray, sizes: np.ndarray) -> float:
+    """Fraction of total volume sitting in the young age buckets — the
+    ProfileCube side of the device store's placement signal (recently
+    accessed bytes predict upcoming policy work on the group)."""
+    total = float(np.asarray(sizes, np.float64).sum())
+    if total <= 0.0:
+        return 0.0
+    hot = float(np.asarray(sizes, np.float64)[
+        np.asarray(ab) < HOT_AGE_BUCKETS].sum())
+    return hot / total
+
+
 def _bincount_i64(flat: np.ndarray, vals: np.ndarray, k: int,
                   counts: np.ndarray) -> np.ndarray:
     """Exact int64 weighted bincount.

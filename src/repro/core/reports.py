@@ -122,6 +122,20 @@ class Reports:
             store.enable_permissions_plane(self.grants)
         return self
 
+    def tiering_counters(self) -> Dict[str, int]:
+        """Tiered-residency telemetry of the attached device store
+        (demotions / promotions / segments_streamed / windows_streamed /
+        window_stalls, plus resident_groups / demoted_groups gauges) —
+        empty when no store is attached or the store holds everything
+        resident. Serving queries over demoted groups stream their warm
+        segments through the double-buffered device window instead of
+        falling back to the host folds (see docs/architecture.md,
+        "Tiered residency"); the permissions plane scopes streamed
+        windows exactly like resident rows."""
+        if self.device_store is None:
+            return {}
+        return self.device_store.tiering_counters()
+
     def attach_grants(self, grants) -> "Reports":
         """Wire a :class:`~repro.core.grants.GrantTable` so every serving
         query accepts ``subject=``. With a device store attached this

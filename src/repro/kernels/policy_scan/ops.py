@@ -481,6 +481,22 @@ def _attribute_np(masks: List[np.ndarray]) -> np.ndarray:
     return attribute_rules(masks[1:], n)
 
 
+def merge_agg_partials(parts: List[np.ndarray],
+                       n_programs: int) -> np.ndarray:
+    """Combine per-launch (R, N_AGG) aggregate blocks from a streamed /
+    tiered match into one exact (R, N_AGG) float64 block: the additive
+    slots sum and the trailing ``any_match`` slot takes the max — the
+    host-side analogue of the in-launch psum/pmax combine (each partial
+    is integer-valued and f32-exact, so the float64 sum is exact)."""
+    out = np.zeros((n_programs, N_AGG), np.float64)
+    for p in parts:
+        p = np.asarray(p, np.float64)
+        out[:, : N_AGG - 1] += p[:, : N_AGG - 1]
+        np.maximum(out[:, N_AGG - 1], p[:, N_AGG - 1],
+                   out=out[:, N_AGG - 1])
+    return out
+
+
 def _agg_dict(agg_np: np.ndarray, per_rule: Optional[np.ndarray] = None
               ) -> dict:
     out = {

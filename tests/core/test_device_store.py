@@ -207,7 +207,7 @@ def test_fresh_store_skips_upload_when_quiet():
     store.refresh()
     stats = store.refresh()                          # no churn in between
     assert stats == {"full": 0, "delta": 0,
-                     "fresh": store.n_devices}
+                     "fresh": store.n_devices, "padded": 0}
 
 
 # -- ops-layer routing --------------------------------------------------------
