@@ -1,0 +1,158 @@
+"""Telemetry plane overhead: instrumented vs uninstrumented hot paths.
+
+Every counter, histogram and span in the pipeline is registry-backed;
+the registry's contract is that observability is *cheap enough to leave
+on* — warm store-backed matching and report serving must stay within 5%
+of the same workload with a disabled registry (every write a no-op).
+This bench runs the identical warm loop twice — once on a default
+(enabled) registry, once with ``MetricRegistry(enabled=False)`` injected
+into the catalog — and reports the throughput ratio, plus the raw
+per-write costs of the three primitive instruments.
+
+``run_telemetry_assertion`` is the tier-2 CI entry: asserts the ratio
+and that the enabled run's Prometheus exposition round-trips through
+``parse_prometheus``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (Catalog, DeviceColumnStore, Entry, FsType, HsmState,
+                        MetricRegistry, PolicyDefinition, PolicyEngine,
+                        Reports, parse_prometheus)
+
+NOW = float(2 ** 20)
+FIND_EXPR = "type == file and size > 3900k and last_access > 1000s"
+SCOPE = "size > 2000k and last_access > 1000s"
+
+
+def _catalog(n: int, registry: MetricRegistry) -> Catalog:
+    rng = np.random.default_rng(0)
+    cat = Catalog(n_shards=16, telemetry=registry)
+    for lo in range(0, n, 100_000):
+        hi = min(lo + 100_000, n)
+        cat.upsert_batch([Entry(
+            fid=i + 1, name=f"f{i + 1}", path=f"/fs/d{i % 64}/f{i + 1}",
+            type=FsType.FILE if (i % 10) else FsType.DIR,
+            size=int(rng.integers(0, 2 ** 12)) * 1024,
+            blocks=int(rng.integers(0, 2 ** 10)),
+            owner=f"user{i % 8}", group=f"grp{i % 4}",
+            hsm_state=HsmState(int(rng.integers(0, 5))),
+            atime=NOW - float(rng.integers(0, 10_000)),
+            mtime=NOW - float(rng.integers(0, 10_000)),
+        ) for i in range(lo, hi)])
+    return cat
+
+
+def _churn(cat: Catalog, n: int, frac: float, round_: int) -> None:
+    # same rotating equal-per-shard dirty pattern as bench_reports: the
+    # scatter buckets stay shape-stable so the warm rounds never compile
+    per_shard = max(int(n * frac) // cat.n_shards, 1)
+    span = n // cat.n_shards
+    fids = [s + cat.n_shards * ((round_ * per_shard + j) % span)
+            for s in range(cat.n_shards) for j in range(per_shard)]
+    cat.update_fields_batch([f if f else cat.n_shards for f in fids],
+                            size=(3 + round_) << 20)
+
+
+def _warm_loop(n: int, enabled: bool, rounds: int) -> tuple:
+    """One full deployment; returns (best round seconds, registry)."""
+    reg = MetricRegistry(enabled=enabled)
+    cat = _catalog(n, reg)
+    clock = lambda: NOW                                      # noqa: E731
+    store = DeviceColumnStore(cat, mesh=None)
+    rep = Reports(cat, clock=clock).attach_device_store(store)
+    eng = PolicyEngine(cat, clock=clock)
+    eng.attach_device_store(store)
+    eng.register(PolicyDefinition.from_config(
+        "sweep", lambda e, params: True, scope=SCOPE,
+        evaluator="policy_scan_mesh", mutates=False, dry_run=True))
+
+    # warm every shape: upload, scatter bucket, each query kind, the run
+    _churn(cat, n, 0.01, rounds)
+    store.refresh()
+    rep.find(FIND_EXPR)
+    rep.top_files(k=25)
+    rep.du("/fs/d7")
+    eng.run("sweep", matching="full")
+
+    best = float("inf")
+    for round_ in range(rounds):
+        _churn(cat, n, 0.01, round_)
+        t0 = time.perf_counter()
+        store.refresh()
+        rep.find(FIND_EXPR)
+        rep.top_files(k=25)
+        rep.du("/fs/d7")
+        eng.run("sweep", matching="full")
+        best = min(best, time.perf_counter() - t0)
+    assert rep.last_fallback_reason is None, rep.last_fallback_reason
+    return best, reg
+
+
+def _primitive_costs(iters: int = 50_000) -> list:
+    """Raw per-write cost of the three instruments (the overhead floor)."""
+    reg = MetricRegistry()
+    c = reg.counter("bench_ctr", stage="x")
+    h = reg.histogram("bench_hist")
+    rows = []
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        c.inc()
+    rows.append(("telemetry_counter_inc",
+                 1e6 * (time.perf_counter() - t0) / iters, f"{iters}_incs"))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        h.observe(0.01)
+    rows.append(("telemetry_histogram_observe",
+                 1e6 * (time.perf_counter() - t0) / iters,
+                 f"{iters}_observes"))
+    n_spans = iters // 10
+    t0 = time.perf_counter()
+    for _ in range(n_spans):
+        with reg.trace("bench_span"):
+            pass
+    rows.append(("telemetry_span_open_close",
+                 1e6 * (time.perf_counter() - t0) / n_spans,
+                 f"{n_spans}_spans"))
+    return rows
+
+
+def _bench(n: int, rounds: int, min_ratio: float = 0.0) -> list:
+    dt_off, _ = _warm_loop(n, enabled=False, rounds=rounds)
+    dt_on, reg = _warm_loop(n, enabled=True, rounds=rounds)
+    ratio = dt_off / max(dt_on, 1e-9)        # instrumented throughput frac
+
+    text = reg.render_prometheus()
+    samples = parse_prometheus(text)         # raises on malformed lines
+    assert samples, "enabled registry rendered an empty exposition"
+    run_spans = reg.spans("run")
+    assert run_spans and run_spans[-1].find("run.match") is not None, \
+        "warm runs left no span tree behind"
+
+    rows = _primitive_costs()
+    rows.append(("telemetry_warm_loop_on", 1e6 * dt_on,
+                 f"{n}_rows_refresh+find+top+du+run"))
+    rows.append(("telemetry_warm_loop_off", 1e6 * dt_off,
+                 f"throughput_ratio_{ratio:.3f}x_on_vs_off"))
+    rows.append(("telemetry_prometheus_render", 0.0,
+                 f"{len(samples)}_samples_parse_ok"))
+    if min_ratio:
+        assert ratio >= min_ratio, (
+            f"instrumented warm loop dropped to {ratio:.3f}x of the "
+            f"uninstrumented throughput (contract: >= {min_ratio}x at "
+            f"n={n})")
+    return rows
+
+
+def run_telemetry_assertion(n: int = 200_000, rounds: int = 5,
+                            min_ratio: float = 0.95) -> list:
+    """Tier-2 CI entry: overhead contract + Prometheus round-trip."""
+    return _bench(n, rounds=rounds, min_ratio=min_ratio)
+
+
+def run(smoke: bool = False) -> list:
+    return _bench(20_000 if smoke else 200_000,
+                  rounds=3 if smoke else 5)

@@ -32,6 +32,7 @@ MODULES = [
     "bench_serving",     # PR7: multi-tenant scoped serving (perm bitmaps)
     "bench_tiering",     # PR8: out-of-core catalogs (warm-segment streaming)
     "bench_kvtier",      # adapted C7/C8: KV-page tiering + paged serving
+    "bench_telemetry",   # PR9: registry/span overhead on warm hot paths
     "roofline_report",   # SRoofline summary rows from the dry-run artifacts
 ]
 

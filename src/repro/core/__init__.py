@@ -21,6 +21,8 @@ from .policy_engine import (PolicyDefinition, PolicyEngine, Rule, RunReport,
                             UsageWatermarkTrigger)
 from .profiles import GroupIndex, ProfileCube
 from .stats import ChangelogCounters, DirUsage, StatsAggregator
+from .telemetry import (Counter, Gauge, Histogram, MetricRegistry, Span,
+                        parse_prometheus)
 from .reports import Reports
 from .alerts import AlertManager, AlertRule
 from .hsm import HsmCoordinator
@@ -43,6 +45,8 @@ __all__ = [
     "PolicyDefinition", "PolicyEngine", "Rule", "RunReport",
     "UsageWatermarkTrigger",
     "ChangelogCounters", "DirUsage", "StatsAggregator",
+    "Counter", "Gauge", "Histogram", "MetricRegistry", "Span",
+    "parse_prometheus",
     "Reports", "AlertManager", "AlertRule", "HsmCoordinator",
     "PLUGIN_REGISTRY", "register_plugin",
 ]

@@ -28,6 +28,7 @@ from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence,
 
 import numpy as np
 
+from .telemetry import MetricRegistry, counter_attr
 from .types import Entry, FsType, HsmState
 
 # Stats/alert hooks receive these light tuples instead of full Entries.
@@ -563,7 +564,20 @@ class CatalogShard:
 class Catalog:
     """Sharded catalog facade: routing, hooks, persistence, vector queries."""
 
-    def __init__(self, n_shards: int = 4, db_path: Optional[str] = None) -> None:
+    # how often the full host column concat was asked for — the
+    # mesh-resident report/profile paths assert this stays flat on warm
+    # queries (tests/core/test_mesh_reports.py)
+    arrays_calls = counter_attr(
+        "catalog_arrays_calls", "full host column concatenations")
+
+    def __init__(self, n_shards: int = 4, db_path: Optional[str] = None,
+                 telemetry: Optional[MetricRegistry] = None) -> None:
+        # the catalog anchors the deployment's telemetry plane: everything
+        # attached to it (device store, reports, engine, pipeline) lands
+        # series in this registry, disambiguated by instance labels
+        self.telemetry = telemetry if telemetry is not None \
+            else MetricRegistry()
+        self._tlabels = {"catalog": self.telemetry.instance("catalog")}
         self.strings = StringTable()
         self.shards = [CatalogShard(i, self.strings) for i in range(n_shards)]
         self.n_shards = n_shards
@@ -576,9 +590,6 @@ class Catalog:
         self._version_lock = threading.Lock()
         self._arrays_cache: Optional[Tuple[int, "LazyColumns"]] = None
         self._arrays_lock = threading.Lock()
-        # observability: how often the full host column concat was asked
-        # for — the mesh-resident report/profile paths assert this stays
-        # flat on warm queries (tests/core/test_mesh_reports.py)
         self.arrays_calls = 0
         if db_path:
             self._open_db(db_path)

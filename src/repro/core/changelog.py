@@ -27,10 +27,12 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from collections import deque
 from itertools import islice
 from typing import Deque, Dict, Iterable, List, Optional
 
+from .telemetry import MetricRegistry
 from .types import ChangelogRecord, ChangelogType
 
 DEFAULT_SUBSCRIBER = "main"
@@ -66,6 +68,12 @@ class ChangelogStream:
         self._fsync = fsync
         self._fh = None
         self._closed = False
+        # telemetry (bind_telemetry): emitted-events counter + live
+        # backlog/lag callback gauges; None until a pipeline (or caller)
+        # binds a registry — emit stays a no-op-cost path until then
+        self.telemetry: Optional[MetricRegistry] = None
+        self._tclock = time.time
+        self._emitted = None
         if persist_dir:
             os.makedirs(persist_dir, exist_ok=True)
             self._log_path = os.path.join(persist_dir, f"changelog_mdt{mdt}.jsonl")
@@ -138,6 +146,61 @@ class ChangelogStream:
                 f.write(json.dumps(acks))
         os.replace(tmp, self._ack_path)
 
+    # -- telemetry ---------------------------------------------------------------
+    def bind_telemetry(self, registry: MetricRegistry,
+                       clock=time.time) -> "ChangelogStream":
+        """Land this stream's series in ``registry``: a
+        ``changelog_events_emitted{mdt=}`` counter plus collection-time
+        ``changelog_backlog`` / ``changelog_lag_seconds`` gauges, one
+        series per subscriber — live cursor state read at scrape time,
+        no write on the emit/ack hot paths. Idempotent per registry;
+        an :class:`EventPipeline` binds its catalog's registry
+        automatically."""
+        if self.telemetry is registry:
+            return self
+        self.telemetry = registry
+        self._tclock = clock
+        self._emitted = registry.counter(
+            "changelog_events_emitted", help="records appended to the MDT "
+            "stream", mdt=str(self.mdt))
+        mdt = str(self.mdt)
+        registry.register_callback(
+            f"changelog_backlog_mdt{self.mdt}",
+            lambda: [({"mdt": mdt, "subscriber": name}, depth)
+                     for name, depth in self._cursor_depths()],
+            help="unacked records behind each subscriber cursor")
+        registry.register_callback(
+            f"changelog_lag_seconds_mdt{self.mdt}",
+            lambda: [({"mdt": mdt, "subscriber": name},
+                      self.lag_seconds(name))
+                     for name in self.subscribers()],
+            help="age of the oldest unacked record per subscriber")
+        return self
+
+    def _cursor_depths(self) -> List[tuple]:
+        with self._lock:
+            head = self._next_seq - 1
+            return [(name, head - s.acked) for name, s in self._subs.items()]
+
+    def backlog(self, subscriber: Optional[str] = None) -> int:
+        """Alias of :meth:`pending` under the telemetry vocabulary."""
+        return self.pending(subscriber)
+
+    def lag_seconds(self, subscriber: Optional[str] = None) -> float:
+        """Age of the subscriber's oldest unacked record (0.0 when fully
+        caught up, or when records carry no timestamps)."""
+        with self._lock:
+            sub = self._sub(subscriber)
+            if not self._records or self._records[-1].seq <= sub.acked:
+                return 0.0
+            idx = max(0, sub.acked - self._records[0].seq + 1)
+            if idx >= len(self._records):
+                return 0.0
+            t = self._records[idx].time
+            if not t:
+                return 0.0
+            return max(0.0, self._tclock() - t)
+
     # -- subscriber registry -----------------------------------------------------
     def subscribe(self, name: str, from_start: bool = False,
                   durable: bool = True) -> str:
@@ -198,6 +261,8 @@ class ChangelogStream:
             self._next_seq += 1
             self._records.append(rec)
             self._persist_records([rec])
+            if self._emitted is not None:
+                self._emitted.inc()
             self._lock.notify_all()
             return rec
 
@@ -211,6 +276,8 @@ class ChangelogStream:
                 self._records.append(r)
                 out.append(r)
             self._persist_records(out)
+            if self._emitted is not None and out:
+                self._emitted.inc(len(out))
             self._lock.notify_all()
 
     # -- consumer -----------------------------------------------------------------

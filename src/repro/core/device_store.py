@@ -199,6 +199,7 @@ import numpy as np
 from .catalog import Catalog, Delta
 from .policy import KERNEL_COLUMNS, PolicyError, compile_programs
 from .segments import PackedSegment
+from .telemetry import counter_attr
 
 _VALID_COL = len(KERNEL_COLUMNS)          # trailing 0/1 row-validity column
 
@@ -524,6 +525,43 @@ class DeviceColumnStore:
     cold full upload, warm calls scatter only churned rows.
     """
 
+    # refresh-mode counters (benchmarks / tests assert the mode taken) —
+    # registry-backed, read/written through the old int attribute API
+    full_uploads = counter_attr(
+        "store_full_uploads", "cold whole-block uploads")
+    delta_refreshes = counter_attr(
+        "store_delta_refreshes", "warm dirty-row scatter refreshes")
+    rows_scattered = counter_attr(
+        "store_rows_scattered", "rows moved by dirty scatters")
+    cube_rebuilds = counter_attr(
+        "store_cube_rebuilds", "full partial-cube rebuilds")
+    rollovers = counter_attr(
+        "store_rollovers", "age-bucket moves served on-device")
+    store_queries = counter_attr(
+        "store_queries", "report queries served resident")
+    perm_materializations = counter_attr(
+        "store_perm_materializations", "per-group perm bitset (re)builds")
+    perm_word_scatters = counter_attr(
+        "store_perm_word_scatters", "warm packed perm-word scatters")
+    # tiering counters (RunReport / bench_tiering assert these so a
+    # silently-resident "streaming" run fails loudly)
+    demotions = counter_attr(
+        "store_demotions", "groups packed to warm segments")
+    promotions = counter_attr(
+        "store_promotions", "groups re-uploaded from segments")
+    segments_streamed = counter_attr(
+        "store_segments_streamed", "warm-segment sweeps executed")
+    windows_streamed = counter_attr(
+        "store_windows_streamed", "device-window batches uploaded")
+    window_stalls = counter_attr(
+        "store_window_stalls", "window consume blocked on compute")
+    segment_repacks = counter_attr(
+        "store_segment_repacks", "stale segments re-encoded")
+    demote_races = counter_attr(
+        "store_demote_races", "async packs discarded (raced)")
+    device_pads = counter_attr(
+        "store_device_pads", "on-device re-pads (no re-upload)")
+
     def __init__(self, catalog: Catalog, mesh=None,
                  refresh_frac: float = 0.25, tile: int = 0,
                  headroom: float = 1.25,
@@ -584,7 +622,12 @@ class DeviceColumnStore:
         self._perm_sp = 0                   # padded subject capacity
         self._perm_bufs = None              # per-device (1, Sp, Rp/32) u32
         self._perm_global = None            # assembled (D, Sp, Rp/32) array
-        # perf counters (benchmarks / tests assert the refresh mode taken)
+        # perf/tiering counters: registry-backed series on the catalog's
+        # telemetry plane (instance label keeps several stores sharing one
+        # catalog distinct); the zeroing writes below create the series so
+        # they export as 0 before first use
+        self.telemetry = catalog.telemetry
+        self._tlabels = {"store": catalog.telemetry.instance("store")}
         self.full_uploads = 0
         self.delta_refreshes = 0
         self.rows_scattered = 0
@@ -593,8 +636,6 @@ class DeviceColumnStore:
         self.store_queries = 0              # report queries served resident
         self.perm_materializations = 0      # per-group bitset (re)builds
         self.perm_word_scatters = 0         # warm packed-word scatters
-        # tiering counters (RunReport / bench_tiering assert these so a
-        # silently-resident "streaming" run fails loudly)
         self.demotions = 0                  # groups packed to warm segments
         self.promotions = 0                 # groups re-uploaded from segments
         self.segments_streamed = 0          # warm-segment sweeps executed
@@ -849,6 +890,7 @@ class DeviceColumnStore:
         self._global = None
         self._epoch += 1
         self.full_uploads += 1
+        self._bytes_moved("full", stack.nbytes)
         if self._plane_perm:
             # block capacity may differ from the old packed words: drop
             # the packed buffer (repacked from the kept vis mirror)
@@ -1005,7 +1047,13 @@ class DeviceColumnStore:
         self._epoch += 1
         self.delta_refreshes += 1
         self.rows_scattered += int(dirty.size)
+        self._bytes_moved("scatter", vals.nbytes)
         return True
+
+    def _bytes_moved(self, mode: str, nbytes: int) -> None:
+        self.telemetry.counter(
+            "store_bytes_moved", help="host->device bytes shipped",
+            mode=mode, **self._tlabels).inc(int(nbytes))
 
     def _round_up(self, n: int) -> int:
         return -(-max(n, 1) // self.tile) * self.tile
@@ -1050,6 +1098,12 @@ class DeviceColumnStore:
         sibling. Placement (demote/promote under ``hbm_budget_rows``) and
         warm-segment freshness run first, so after a refresh both the
         resident blocks and the warm segments reflect the catalog."""
+        with self.telemetry.trace("store.refresh", **self._tlabels) as _sp:
+            stats = self._refresh_locked()
+            _sp.annotate(**stats)
+            return stats
+
+    def _refresh_locked(self) -> Dict[str, int]:
         with self._lock:
             self._reap_demote_workers()
             self._placement_pass()
@@ -1596,6 +1650,7 @@ class DeviceColumnStore:
                 if want_perm else None
             res = launch(win, pwin)
             self.windows_streamed += 1
+            self._bytes_moved("window", buf.nbytes)
             if pending is not None:
                 yield self._consume_window(pending)
             pending = (base, nrows, res)
@@ -1603,13 +1658,23 @@ class DeviceColumnStore:
             yield self._consume_window(pending)
 
     def _consume_window(self, pending):
+        import time as _time
         base, nrows, res = pending
         first = res[0] if isinstance(res, tuple) else res
         ready = getattr(first, "is_ready", None)
         if ready is not None and not ready():
             # the overlapped copy did not hide this batch's compute: the
-            # consumer blocks on device_get (bench watches this counter)
+            # consumer blocks on device_get (bench watches this counter);
+            # the wait is timed explicitly so the stall shows up in the
+            # telemetry export, not just as a count
             self.window_stalls += 1
+            import jax
+            t0 = _time.perf_counter()
+            jax.block_until_ready(first)
+            self.telemetry.histogram(
+                "store_window_stall_seconds",
+                help="streaming-window consume blocked on compute",
+                **self._tlabels).observe(_time.perf_counter() - t0)
         return base, nrows, res
 
     def _group_paths(self, group: _ShardGroup):
@@ -1807,9 +1872,13 @@ class DeviceColumnStore:
         # concurrent refresh would donate the resident blocks out from
         # under the in-flight launch and mutate the host mirrors this
         # match translates through — concurrent matches serialize instead
-        with self._lock:
-            return self._match_locked(exprs, now, use_kernel, with_agg,
-                                      subject)
+        with self._lock, \
+                self.telemetry.trace("store.match", **self._tlabels) as _sp:
+            m = self._match_locked(exprs, now, use_kernel, with_agg,
+                                   subject)
+            _sp.annotate(rows_revaluated=m.reval,
+                         scoped=subject is not None)
+            return m
 
     def _match_locked(self, exprs: Sequence, now: float,
                       use_kernel: Optional[bool] = None,
@@ -1843,13 +1912,17 @@ class DeviceColumnStore:
             mesh = self._resident_mesh(res)
             perm = self._assemble_perm(res, mesh) if sid is not None \
                 else None
-            mask, rule, agg = mesh_policy_scan_batch(
-                self._assemble(res, mesh), operands, mesh=mesh,
-                perm=perm, subject=sid, **kw)
+            with self.telemetry.trace("store.match.launch",
+                                      groups=len(res), **self._tlabels):
+                mask, rule, agg = mesh_policy_scan_batch(
+                    self._assemble(res, mesh), operands, mesh=mesh,
+                    perm=perm, subject=sid, **kw)
             # only mask + attribution cross device→host, never the columns
-            mask_np = np.asarray(jax.device_get(mask))
-            rule_np = np.asarray(jax.device_get(rule))
-            agg_parts.append(np.asarray(jax.device_get(agg)))
+            with self.telemetry.trace("store.match.combine",
+                                      **self._tlabels):
+                mask_np = np.asarray(jax.device_get(mask))
+                rule_np = np.asarray(jax.device_get(rule))
+                agg_parts.append(np.asarray(jax.device_get(agg)))
             for i, g in enumerate(res):
                 idx = np.nonzero(mask_np[i, : g.rows] > 0.5)[0]
                 mirrors[g.gid] = (g.fids, g.cols)

@@ -48,6 +48,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 from .catalog import Catalog
 from .changelog import ChangelogStream
 from .stats import ChangelogCounters
+from .telemetry import counter_attr
 from .types import ChangelogRecord, ChangelogType, Entry
 
 
@@ -86,6 +87,14 @@ class _AckTracker:
 class EventPipeline:
     """Consumes one changelog stream into the catalog."""
 
+    # ingest counters, registry-backed (tests read them as plain ints)
+    processed = counter_attr(
+        "pipeline_records_processed", "changelog records folded into the "
+        "catalog")
+    dedup_hits = counter_attr(
+        "pipeline_dedup_hits", "records folded into an already-pending "
+        "dirty tag (async mode)")
+
     def __init__(self, fs, catalog: Catalog, stream: ChangelogStream,
                  config: Optional[PipelineConfig] = None,
                  counters: Optional[ChangelogCounters] = None) -> None:
@@ -94,6 +103,13 @@ class EventPipeline:
         self.stream = stream
         self.cfg = config or PipelineConfig()
         self.counters = counters
+        self.telemetry = catalog.telemetry
+        self._tlabels = {"pipeline": catalog.telemetry.instance("pipeline")}
+        # the stream's backlog/lag gauges + events counter land in the
+        # same registry (first binder wins; a stream shared by several
+        # catalogs keeps its first registry)
+        if stream.telemetry is None:
+            stream.bind_telemetry(catalog.telemetry)
         self._fs_sem = threading.Semaphore(self.cfg.fs_concurrency)
         self._db_sem = threading.Semaphore(self.cfg.db_concurrency)
         self._ack = _AckTracker(stream)
@@ -118,8 +134,16 @@ class EventPipeline:
 
     def _notify(self, changed: List[int], removed: List[int]) -> None:
         if changed or removed:
-            for fn in self._delta_listeners:
-                fn(changed, removed)
+            self.telemetry.counter(
+                "pipeline_deltas_fanned_out", help="fids propagated to "
+                "delta listeners after a catalog commit",
+                **self._tlabels).inc(len(changed) + len(removed))
+            with self.telemetry.trace("pipeline.fanout",
+                                      changed=len(changed),
+                                      removed=len(removed),
+                                      **self._tlabels):
+                for fn in self._delta_listeners:
+                    fn(changed, removed)
 
     # -- record -> catalog application -------------------------------------------
     def _apply_records(self, recs: List[ChangelogRecord]) -> None:
@@ -130,31 +154,37 @@ class EventPipeline:
         following a ``CREAT`` of the same fid inside the batch results in a
         removal only (the short-lived entry is never materialized).
         """
-        is_removal: Dict[int, bool] = {}      # fid -> last op kind, batch order
-        for rec in recs:
-            if self.counters is not None:
-                self.counters.on_record(rec)
-            is_removal[rec.fid] = rec.type in (ChangelogType.UNLNK,
-                                               ChangelogType.RMDIR)
-        entries: List[Entry] = []
-        removals: List[int] = []
-        for fid, rm in is_removal.items():
-            if rm:
-                removals.append(fid)
-                continue
-            with self._fs_sem:                       # bounded FS concurrency
-                e = self.fs.stat(fid)
-            if e is not None:
-                entries.append(e)
-        with self._db_sem:                            # bounded DB concurrency
-            if entries:
-                self.catalog.upsert_batch(entries)    # durable before ack
-            for fid in removals:
-                self.catalog.remove(fid)
-        with self._processed_lock:
-            self.processed += len(recs)
-        self._notify([e.fid for e in entries], removals)
-        self._ack.complete([r.seq for r in recs])
+        with self.telemetry.trace("pipeline.apply", records=len(recs),
+                                  **self._tlabels):
+            is_removal: Dict[int, bool] = {}  # fid -> last op kind, batch order
+            for rec in recs:
+                if self.counters is not None:
+                    self.counters.on_record(rec)
+                is_removal[rec.fid] = rec.type in (ChangelogType.UNLNK,
+                                                   ChangelogType.RMDIR)
+            entries: List[Entry] = []
+            removals: List[int] = []
+            for fid, rm in is_removal.items():
+                if rm:
+                    removals.append(fid)
+                    continue
+                with self._fs_sem:                   # bounded FS concurrency
+                    e = self.fs.stat(fid)
+                if e is not None:
+                    entries.append(e)
+            with self._db_sem:                        # bounded DB concurrency
+                if entries:
+                    self.catalog.upsert_batch(entries)  # durable before ack
+                for fid in removals:
+                    self.catalog.remove(fid)
+            with self._processed_lock:
+                self.processed += len(recs)
+            self.telemetry.counter(
+                "pipeline_events_folded", help="per-fid folds committed "
+                "(records deduped per batch)", **self._tlabels
+            ).inc(len(is_removal))
+            self._notify([e.fid for e in entries], removals)
+            self._ack.complete([r.seq for r in recs])
 
     def _tag_records(self, recs: List[ChangelogRecord]) -> None:
         """Async mode stage 1: tag dirty + ack immediately after durable tag.
@@ -162,6 +192,7 @@ class EventPipeline:
         Removals still apply synchronously (they can't be 'refreshed' later).
         """
         removals = []
+        folds = 0                 # committed work: new tags + removals
         with self._dirty_lock:
             for rec in recs:
                 if self.counters is not None:
@@ -169,16 +200,21 @@ class EventPipeline:
                 if rec.type in (ChangelogType.UNLNK, ChangelogType.RMDIR):
                     removals.append(rec.fid)
                     self._dirty.discard(rec.fid)      # never refreshed post-rm
+                    folds += 1
                 elif rec.fid in self._dirty:
                     self.dedup_hits += 1              # folded into pending tag
                 else:
                     self._dirty.add(rec.fid)
                     self.catalog.update_fields(rec.fid, dirty=1)
+                    folds += 1
         with self._db_sem:
             for fid in removals:
                 self.catalog.remove(fid)
         with self._processed_lock:
             self.processed += len(recs)
+        self.telemetry.counter(
+            "pipeline_events_folded", help="per-fid folds committed "
+            "(records deduped per batch)", **self._tlabels).inc(folds)
         # changed fids are notified by the updater after the actual refresh
         self._notify([], removals)
         self._ack.complete([r.seq for r in recs])

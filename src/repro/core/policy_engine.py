@@ -113,6 +113,7 @@ import numpy as np
 from .catalog import Catalog, ColumnBatch
 from .changelog import ChangelogHub, ChangelogStream
 from .fidtable import FidTable as _FidTable
+from .telemetry import slug
 from .policy import (AGE_ATTRS, ALWAYS, Cmp, Expr, GLOB_ATTRS, PolicyError,
                      all_of, any_of, attribute_rules, iter_exprs, parse_expr)
 from .types import Entry, FsType
@@ -198,6 +199,11 @@ class RunReport:
     # etc., plus the absolute resident_groups / demoted_groups gauges —
     # bench_tiering asserts streaming really happened from these
     tiering: dict = dataclasses.field(default_factory=dict)
+    # per-run telemetry (empty when the catalog's registry is disabled):
+    # {"spans": nested span tree of the whole run — ingest/match/act
+    # children, the device store's refresh/launch/combine spans nested
+    # inside — "counters": registry counter deltas this run caused}
+    telemetry: dict = dataclasses.field(default_factory=dict)
 
 
 class UsageWatermarkTrigger:
@@ -428,6 +434,8 @@ class PolicyEngine:
                  ) -> None:
         self.catalog = catalog
         self.clock = clock
+        self.telemetry = catalog.telemetry
+        self._tlabels = {"engine": catalog.telemetry.instance("engine")}
         self.policies: Dict[str, PolicyDefinition] = {}
         self.triggers: List[Tuple[str, UsageWatermarkTrigger]] = []
         self.history: List[RunReport] = []
@@ -819,11 +827,93 @@ class PolicyEngine:
         policy = self.policies[policy_name]
         now = self.clock()
         t0 = time.perf_counter()
-        self._poll_streams()
+        c0 = self.telemetry.counter_values() if self.telemetry.enabled \
+            else {}
+        with self.telemetry.trace("run", policy=policy_name,
+                                  trigger=trigger,
+                                  **self._tlabels) as _root:
+            report = self._run_traced(policy_name, policy, now,
+                                      extra_criteria, target_volume,
+                                      trigger, evaluator, execution,
+                                      matching)
+        report.elapsed = time.perf_counter() - t0
+        if self.telemetry.enabled:
+            c1 = self.telemetry.counter_values()
+            report.telemetry = {
+                "spans": _root.to_dict(),
+                "counters": {k: v - c0.get(k, 0.0)
+                             for k, v in c1.items()
+                             if v != c0.get(k, 0.0)},
+            }
+        self.history.append(report)
+        return report
+
+    def _run_traced(self, policy_name: str, policy, now: float,
+                    extra_criteria: Optional[Expr], target_volume: int,
+                    trigger: str, evaluator: Optional[str],
+                    execution: str, matching: str) -> RunReport:
+        with self.telemetry.trace("run.ingest", **self._tlabels):
+            self._poll_streams()
         state = self._inc.get(policy_name)
         mode = self._resolve_matching(matching, policy, state,
                                       has_extra=extra_criteria is not None)
 
+        with self.telemetry.trace("run.match", mode=mode,
+                                  **self._tlabels) as _msp:
+            (fids, sizes, sort_keys, ridx, reval, used_eval, fallback,
+             tiering) = self._match_phase(policy, state, mode,
+                                          extra_criteria, now, evaluator)
+            _msp.annotate(evaluator=used_eval, reval=reval)
+        report = RunReport(policy=policy_name, matched=int(fids.size),
+                           trigger=trigger, evaluator=used_eval,
+                           mode=mode, reval=reval, execution=execution,
+                           fallback_reason=fallback, tiering=tiering,
+                           matched_volume=int(sizes.sum()) if fids.size else 0)
+
+        executed = 0
+        plan = None
+        if fids.size:
+            key = -sort_keys if policy.sort_desc else sort_keys
+            order = np.lexsort((fids, key))    # fid tie-break: total order,
+            plan = _Plan(fids=fids[order],     # identical across planners
+                         sizes=sizes[order], rule_idx=ridx[order])
+            budget_volume = target_volume or policy.max_volume_per_run
+            budget_count = policy.max_actions_per_run
+            with self.telemetry.trace("run.act", execution=execution,
+                                      **self._tlabels):
+                if execution == "scalar":
+                    executed = self._run_scalar(policy, plan, now, report,
+                                                budget_volume, budget_count)
+                else:
+                    executed = self._run_batched(policy, plan, now, report,
+                                                 budget_volume, budget_count,
+                                                 execution)
+        if executed and policy.mutates and not policy.dry_run:
+            # actions may mutate the catalog directly (purge/archive
+            # plugins): re-observe actioned entries on the next run
+            acted = plan.fids[:executed].tolist()
+            for st in list(self._inc.values()):
+                st.note_touched(acted)
+        return report
+
+    def _record_fallback(self, reason: str) -> None:
+        """Mirror a ``RunReport.fallback_reason`` entry into the registry
+        as ``fallback{stage=,reason=}`` — the stage is the downgrade edge
+        (``policy_scan_mesh->policy_scan``, ``policy_scan->numpy``, ...),
+        the reason a bounded slug of the cause, so exports can assert "no
+        silent fallback" without scraping report strings."""
+        stage, _, cause = reason.partition(":")
+        self.telemetry.counter(
+            "fallback", help="evaluator/serving downgrades",
+            stage=stage.strip(), reason=slug(cause.strip() or "unknown"),
+            **self._tlabels).inc()
+
+    def _match_phase(self, policy: PolicyDefinition, state, mode: str,
+                     extra_criteria: Optional[Expr], now: float,
+                     evaluator: Optional[str]):
+        """Resolve the match set for one run (the ``run.match`` span):
+        returns (fids, sizes, sort_keys, ridx, reval, used_eval,
+        fallback_reason, tiering_deltas)."""
         fallback = ""
         tiering: dict = {}
         if mode == "incremental":
@@ -838,6 +928,7 @@ class PolicyEngine:
                 fallback = (f"{want}->incremental: cached match table "
                             "served the run (force matching=\"full\" to "
                             "exercise the evaluator)")
+                self._record_fallback(fallback)
         else:
             want = evaluator or policy.evaluator
             mesh_done = False
@@ -874,6 +965,7 @@ class PolicyEngine:
                     if rebuild:
                         state.invalidate()
                     fallback = f"policy_scan_mesh->policy_scan: {e}"
+                    self._record_fallback(fallback)
                 except Exception:
                     if rebuild:
                         state.invalidate()
@@ -885,6 +977,8 @@ class PolicyEngine:
                 try:
                     mask, rule_idx, cols, used_eval, reason = self._match(
                         policy, extra_criteria, now, want)
+                    if reason:
+                        self._record_fallback(reason)
                     fallback = "; ".join(r for r in (fallback, reason) if r)
                     fids = cols["fid"][mask]
                     sizes = cols["size"][mask]
@@ -900,38 +994,8 @@ class PolicyEngine:
                     if rebuild:
                         state.invalidate()
                     raise
-        report = RunReport(policy=policy_name, matched=int(fids.size),
-                           trigger=trigger, evaluator=used_eval,
-                           mode=mode, reval=reval, execution=execution,
-                           fallback_reason=fallback, tiering=tiering,
-                           matched_volume=int(sizes.sum()) if fids.size else 0)
-
-        executed = 0
-        plan = None
-        if fids.size:
-            key = -sort_keys if policy.sort_desc else sort_keys
-            order = np.lexsort((fids, key))    # fid tie-break: total order,
-            plan = _Plan(fids=fids[order],     # identical across planners
-                         sizes=sizes[order], rule_idx=ridx[order])
-            budget_volume = target_volume or policy.max_volume_per_run
-            budget_count = policy.max_actions_per_run
-            if execution == "scalar":
-                executed = self._run_scalar(policy, plan, now, report,
-                                            budget_volume, budget_count)
-            else:
-                executed = self._run_batched(policy, plan, now, report,
-                                             budget_volume, budget_count,
-                                             execution)
-        if executed and policy.mutates and not policy.dry_run:
-            # actions may mutate the catalog directly (purge/archive
-            # plugins): re-observe actioned entries on the next run
-            acted = plan.fids[:executed].tolist()
-            for st in list(self._inc.values()):
-                st.note_touched(acted)
-
-        report.elapsed = time.perf_counter() - t0
-        self.history.append(report)
-        return report
+        return fids, sizes, sort_keys, ridx, reval, used_eval, fallback, \
+            tiering
 
     # -- batched / columnar execution ---------------------------------------------
     def _run_batched(self, policy: PolicyDefinition, plan: _Plan, now: float,

@@ -61,6 +61,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .fidtable import FidTable
+from .telemetry import counter_attr
 from .types import (AGE_PROFILE_EDGES, AGE_PROFILE_LABELS, FsType, HsmState,
                     SIZE_PROFILE_EDGES, SIZE_PROFILE_LABELS)
 
@@ -366,11 +367,17 @@ class _ShardCube:
 class ProfileCube:
     """Incremental, shard-partitioned ownership/age/size profile cube."""
 
+    rollovers = counter_attr(
+        "cube_rollovers", "age-bucket moves served (host sweeps, or the "
+        "device store's on-device count when one is attached)")
+
     def __init__(self, catalog, clock=time.time,
                  use_kernel: bool = False) -> None:
         self.catalog = catalog
         self.strings = catalog.strings
         self.clock = clock
+        self.telemetry = catalog.telemetry
+        self._tlabels = {"cube": catalog.telemetry.instance("cube")}
         # True: full rebuilds run through the Pallas kernel (on TPU; the
         # interpret-mode kernel off-TPU is for differential tests). The
         # kernel accumulates in f32 — exact only while per-cell sums stay

@@ -36,6 +36,7 @@ from .catalog import Catalog
 from .policy import Expr, KERNEL_COLUMNS, PolicyError, parse_expr
 from .profiles import ProfileCube
 from .stats import DirUsage, StatsAggregator
+from .telemetry import counter_attr, slug, state_attr
 from .types import FsType, format_size
 
 
@@ -79,6 +80,21 @@ class _PathIndex:
 
 
 class Reports:
+    # serving counters, registry-backed (attach_device_store): they
+    # mirror the engine's RunReport telemetry — store_served /
+    # host_served tally where each query answered, index_rebuilds counts
+    # sorted-path index rebuilds, last_fallback_reason says why the most
+    # recent query fell back to the host fold (None = none did)
+    store_served = counter_attr(
+        "reports_store_served", "queries answered mesh-resident")
+    host_served = counter_attr(
+        "reports_host_served", "queries answered by host folds")
+    index_rebuilds = counter_attr(
+        "reports_index_rebuilds", "sorted-path index rebuilds")
+    last_fallback_reason = state_attr(
+        "reports_last_fallback_reason",
+        "why the most recent query fell back to the host fold")
+
     def __init__(self, catalog: Catalog, stats: Optional[StatsAggregator] = None,
                  clock=time.time, profiles: Optional[ProfileCube] = None
                  ) -> None:
@@ -86,19 +102,17 @@ class Reports:
         self.stats = stats
         self.profiles = profiles
         self.clock = clock
+        self.telemetry = catalog.telemetry
+        self._tlabels = {"reports": catalog.telemetry.instance("reports")}
         # one path index per shard, rebuilt only when THAT shard's version
         # ticked — churn in one shard leaves the other indexes warm
         self._pindexes: Dict[int, _PathIndex] = {}
         self._pversions: Dict[int, int] = {}
         self.index_rebuilds = 0
-        # mesh-resident serving (attach_device_store): counters mirror the
-        # engine's RunReport telemetry — store_served / host_served tally
-        # where each query answered, last_fallback_reason says why the
-        # most recent query fell back to the host fold (None = none did)
         self.device_store = None
         self.store_served = 0
         self.host_served = 0
-        self.last_fallback_reason: Optional[str] = None
+        self.last_fallback_reason = None
         # multi-tenant scoping (attach_grants): the shared GrantTable
         # behind every subject= query
         self.grants = None
@@ -157,13 +171,34 @@ class Reports:
                                         self.catalog.strings)
 
     def reset_counters(self) -> None:
-        """Zero the serving telemetry (``store_served`` / ``host_served``
-        / ``index_rebuilds``) and clear ``last_fallback_reason`` — a
-        monitoring scrape boundary."""
-        self.store_served = 0
-        self.host_served = 0
-        self.index_rebuilds = 0
-        self.last_fallback_reason = None
+        """Scrape boundary: delegates to
+        :meth:`~repro.core.telemetry.MetricRegistry.reset`, so the
+        serving counters, ``last_fallback_reason``, the tiering and
+        permission counters of any attached device store, and every
+        other counter family on this catalog's registry clear
+        *together* — a scrape never sees serving zeroed but tiering
+        still accumulating."""
+        self.telemetry.reset()
+
+    # -- serving telemetry ------------------------------------------------------
+    def _observe(self, kind: str, subject: Optional[str], source: str,
+                 t0: float) -> None:
+        """Per-query-kind serve latency histogram
+        (``reports_serve_seconds{kind=,scoped=,source=}``)."""
+        self.telemetry.histogram(
+            "reports_serve_seconds", help="report query latency",
+            kind=kind, scoped=str(subject is not None).lower(),
+            source=source, **self._tlabels
+        ).observe(time.perf_counter() - t0)
+
+    def _fallback(self, kind: str, exc: Exception) -> None:
+        """Count a host-fold downgrade (``fallback{stage=,reason=}``) —
+        the counter sibling of ``last_fallback_reason``, so exports can
+        assert "no silent fallback" without string-scraping."""
+        self.telemetry.counter(
+            "fallback", help="evaluator/serving downgrades",
+            stage=f"reports.{kind}", reason=slug(str(exc)),
+            **self._tlabels).inc()
 
     def _shard_indexes(self) -> List[_PathIndex]:
         """(Re)build the per-shard sorted path indexes that went stale.
@@ -267,6 +302,7 @@ class Reports:
         rows' paths return (same order as the host fold). Predicates the
         kernel can't compile (e.g. name globs) fall back to the host.
         ``subject=`` scopes the listing to that subject's grants."""
+        t0 = time.perf_counter()
         expr = parse_expr(criteria)
         if self.device_store is not None:
             try:
@@ -275,9 +311,11 @@ class Reports:
                                                    subject=subject)
                 self.store_served += 1
                 self.last_fallback_reason = None
+                self._observe("find", subject, "store", t0)
                 return out
             except PolicyError as exc:
                 self.last_fallback_reason = f"find: {exc}"
+                self._fallback("find", exc)
         self.host_served += 1
         cols = self.catalog.arrays()
         mask = expr.mask(cols, self.catalog.strings, self.clock())
@@ -287,7 +325,9 @@ class Reports:
         if limit:
             idx = idx[:limit]
         paths = cols["_paths"]
-        return [paths[i] for i in idx]
+        out = [paths[i] for i in idx]
+        self._observe("find", subject, "host", t0)
+        return out
 
     # -- rbh-du --------------------------------------------------------------------
     def _du_host(self, path_prefix: str,
@@ -328,16 +368,21 @@ class Reports:
         the host path mirrors, one fused on-device range-aggregate psum.
         ``subject=`` counts only rows that subject may see.
         """
+        t0 = time.perf_counter()
         if self.device_store is not None:
             try:
                 out = self.device_store.du(path_prefix, subject=subject)
                 self.store_served += 1
                 self.last_fallback_reason = None
+                self._observe("du", subject, "store", t0)
                 return out
             except PolicyError as exc:
                 self.last_fallback_reason = f"du: {exc}"
+                self._fallback("du", exc)
         self.host_served += 1
-        return self._du_host(path_prefix, subject)
+        out = self._du_host(path_prefix, subject)
+        self._observe("du", subject, "host", t0)
+        return out
 
     def du_many(self, path_prefixes: List[str],
                 subject: Optional[str] = None) -> List[dict]:
@@ -354,19 +399,23 @@ class Reports:
         use_store = self.device_store is not None
         out = []
         for p in path_prefixes:
+            t0 = time.perf_counter()
             if use_store:
                 try:
                     out.append(self.device_store.du(p, subject=subject))
                     self.store_served += 1
                     self.last_fallback_reason = None
+                    self._observe("du_many", subject, "store", t0)
                     continue
                 except PolicyError as exc:
                     self.last_fallback_reason = f"du: {exc}"
+                    self._fallback("du", exc)
                     use_store = False
                     if subject is None:
                         self._shard_indexes()   # one prefetch, not per-prefix
             self.host_served += 1
             out.append(self._du_host(p, subject))
+            self._observe("du_many", subject, "host", t0)
         return out
 
     def bind_dir_usage(self, du: DirUsage) -> DirUsage:
@@ -386,6 +435,7 @@ class Reports:
         candidate (incl. cross-device ties), and only those rows' paths
         come back — ordering matches the host fold byte-for-byte.
         ``subject=`` ranks only rows that subject may see."""
+        t0 = time.perf_counter()
         if self.device_store is not None and by in KERNEL_COLUMNS:
             try:
                 out = self.device_store.top_files(by=by, k=k, desc=desc,
@@ -393,9 +443,11 @@ class Reports:
                                                   subject=subject)
                 self.store_served += 1
                 self.last_fallback_reason = None
+                self._observe("top_files", subject, "store", t0)
                 return out
             except PolicyError as exc:
                 self.last_fallback_reason = f"top_files: {exc}"
+                self._fallback("top_files", exc)
         self.host_served += 1
         cols = self.catalog.arrays()
         sel = cols["type"] == int(FsType.FILE)
@@ -409,8 +461,10 @@ class Reports:
         order = np.argsort(vals, kind="stable")
         order = order[::-1][:k] if desc else order[:k]
         paths = cols["_paths"]
-        return [{"path": paths[fidx[o]], by: float(vals[o]),
-                 "fid": int(cols["fid"][fidx[o]])} for o in order]
+        out = [{"path": paths[fidx[o]], by: float(vals[o]),
+                "fid": int(cols["fid"][fidx[o]])} for o in order]
+        self._observe("top_files", subject, "host", t0)
+        return out
 
     def top_dirs_by_count(self, k: int = 10) -> List[dict]:
         """Top directories by direct child count (one vector groupby)."""

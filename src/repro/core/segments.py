@@ -33,6 +33,8 @@ from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
+from .telemetry import ambient_counter, span as _tspan
+
 _FORMAT = "repro-segment-v1"
 
 # dict-encode when the unique count is small enough that codes+values
@@ -82,6 +84,15 @@ class PackedSegment:
     @classmethod
     def pack(cls, columns: Mapping[str, np.ndarray],
              meta: Optional[Mapping[str, object]] = None) -> "PackedSegment":
+        with _tspan("segment.pack", columns=len(columns)) as _sp:
+            seg = cls._pack(columns, meta)
+            _sp.annotate(rows=seg.n_rows, encoded_bytes=seg.nbytes)
+            return seg
+
+    @classmethod
+    def _pack(cls, columns: Mapping[str, np.ndarray],
+              meta: Optional[Mapping[str, object]] = None
+              ) -> "PackedSegment":
         seg = cls()
         seg.meta = dict(meta or {})
         n_rows = None
@@ -142,7 +153,9 @@ class PackedSegment:
         with self._lock:
             out = self._cache.get(name)
             if out is None:
-                out = self._decode(name)
+                with _tspan("segment.decode", column=name):
+                    out = self._decode(name)
+                ambient_counter("segment_bytes_decoded", out.nbytes)
                 self._cache[name] = out
             return out
 

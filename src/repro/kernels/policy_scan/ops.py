@@ -534,8 +534,10 @@ def match_programs(arrays, exprs, strings, now: float,
     callers fall back to the numpy mask path.
     """
     from ...core.policy import KERNEL_COLUMNS, compile_programs
-    ops, colidx, operands = compile_programs(exprs, strings, now)
-    kcols = column_stack(arrays)
+    from ...core.telemetry import span as _tspan
+    with _tspan("kernel.compile"):
+        ops, colidx, operands = compile_programs(exprs, strings, now)
+        kcols = column_stack(arrays)
     size_col = KERNEL_COLUMNS.index("size")
     blocks_col = KERNEL_COLUMNS.index("blocks")
     if use_kernel is None:
@@ -543,23 +545,29 @@ def match_programs(arrays, exprs, strings, now: float,
     if single_launch is None:
         single_launch = True
     if single_launch:
-        if use_kernel:
-            m, rule, agg = policy_scan_batch(
-                kcols, jnp.asarray(ops), jnp.asarray(colidx),
-                jnp.asarray(operands), size_col=size_col,
-                blocks_col=blocks_col, use_kernel=True)
-        else:
-            # off-TPU oracle: the unrolled static-program evaluator (same
-            # outputs, ~an order of magnitude less memory traffic)
-            ops_t, colidx_t = _program_tuples(ops, colidx)
-            m, rule, agg = policy_scan_batch_unrolled(
-                kcols, jnp.asarray(operands), ops_t=ops_t,
-                colidx_t=colidx_t, size_col=size_col, blocks_col=blocks_col)
-        m = np.asarray(m) > 0.5
-        masks = [m[r] for r in range(m.shape[0])]
-        per_rule = np.asarray(agg)
-        return masks, _agg_dict(per_rule[0], per_rule), \
-            np.asarray(rule, dtype=np.int32)
+        # the launch span times the async dispatch only; the device wait
+        # lands in kernel.readback where the host actually blocks
+        with _tspan("kernel.launch", programs=int(ops.shape[0])):
+            if use_kernel:
+                m, rule, agg = policy_scan_batch(
+                    kcols, jnp.asarray(ops), jnp.asarray(colidx),
+                    jnp.asarray(operands), size_col=size_col,
+                    blocks_col=blocks_col, use_kernel=True)
+            else:
+                # off-TPU oracle: the unrolled static-program evaluator
+                # (same outputs, ~an order of magnitude less memory
+                # traffic)
+                ops_t, colidx_t = _program_tuples(ops, colidx)
+                m, rule, agg = policy_scan_batch_unrolled(
+                    kcols, jnp.asarray(operands), ops_t=ops_t,
+                    colidx_t=colidx_t, size_col=size_col,
+                    blocks_col=blocks_col)
+        with _tspan("kernel.readback"):
+            m = np.asarray(m) > 0.5
+            masks = [m[r] for r in range(m.shape[0])]
+            per_rule = np.asarray(agg)
+            rule = np.asarray(rule, dtype=np.int32)
+        return masks, _agg_dict(per_rule[0], per_rule), rule
     # Fallback: one launch per program (program 0 still fuses mask +
     # aggregation in a single HBM pass; rule programs reuse the resident
     # column stack), attribution on the host.
@@ -613,17 +621,23 @@ def scan_catalog(catalog, expr, now: float, use_kernel: bool = True,
         fids, _sizes, _sort, _ridx = match.plan("size")
         return fids, match.agg
     from ...core.policy import KERNEL_COLUMNS, compile_program
-    arrays = catalog.arrays()
-    ops, colidx, operands = compile_program(expr, catalog.strings, now)
-    cols = jnp.stack([jnp.asarray(arrays[c], jnp.float32)
-                      for c in KERNEL_COLUMNS], axis=0)
+    from ...core.telemetry import span as _tspan
+    with _tspan("kernel.compile"):
+        arrays = catalog.arrays()
+        ops, colidx, operands = compile_program(expr, catalog.strings, now)
+        cols = jnp.stack([jnp.asarray(arrays[c], jnp.float32)
+                          for c in KERNEL_COLUMNS], axis=0)
     size_col = KERNEL_COLUMNS.index("size")
     blocks_col = KERNEL_COLUMNS.index("blocks")
-    mask, agg = policy_scan(cols, jnp.asarray(ops), jnp.asarray(colidx),
-                            jnp.asarray(operands), size_col=size_col,
-                            blocks_col=blocks_col, use_kernel=use_kernel)
-    mask_np = np.asarray(mask) > 0.5
-    agg_np = np.asarray(agg)
+    with _tspan("kernel.launch"):
+        mask, agg = policy_scan(cols, jnp.asarray(ops),
+                                jnp.asarray(colidx),
+                                jnp.asarray(operands), size_col=size_col,
+                                blocks_col=blocks_col,
+                                use_kernel=use_kernel)
+    with _tspan("kernel.readback"):
+        mask_np = np.asarray(mask) > 0.5
+        agg_np = np.asarray(agg)
     return arrays["fid"][mask_np], {
         "count": float(agg_np[0]), "volume": float(agg_np[1]),
         "spc_used": float(agg_np[2]),
