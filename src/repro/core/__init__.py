@@ -9,12 +9,13 @@ from .types import (AGE_PROFILE_EDGES, AGE_PROFILE_LABELS, ChangelogRecord,
                     age_profile_bucket, format_size, parse_duration,
                     parse_size, size_profile_bucket)
 from .catalog import Catalog, CatalogShard, ColumnBatch, StringTable
-from .changelog import ChangelogHub, ChangelogStream
+from .changelog import ChangelogHub, ChangelogStream, ColumnarRecords
 from .device_store import DeviceColumnStore, MeshMatch
 from .fidtable import FidTable
 from .grants import GrantTable, Subject
 from .scanner import Scanner, multi_client_scan, prune_missing
-from .pipeline import EventPipeline, PipelineConfig
+from .pipeline import (DeltaBatch, EventPipeline, FoldResult, PipelineConfig,
+                       fold_columnar)
 from .policy import (ALWAYS, And, Cmp, Const, Expr, Not, Or, PolicyError,
                      compile_program, parse_expr, KERNEL_COLUMNS)
 from .policy_engine import (PolicyDefinition, PolicyEngine, Rule, RunReport,
@@ -35,11 +36,13 @@ __all__ = [
     "age_profile_bucket", "format_size", "parse_duration", "parse_size",
     "size_profile_bucket",
     "Catalog", "CatalogShard", "ColumnBatch", "StringTable",
-    "ChangelogHub", "ChangelogStream", "DeviceColumnStore", "FidTable",
+    "ChangelogHub", "ChangelogStream", "ColumnarRecords",
+    "DeviceColumnStore", "FidTable",
     "GrantTable", "MeshMatch", "Subject",
     "GroupIndex", "ProfileCube",
     "Scanner", "multi_client_scan", "prune_missing",
-    "EventPipeline", "PipelineConfig",
+    "DeltaBatch", "EventPipeline", "FoldResult", "PipelineConfig",
+    "fold_columnar",
     "ALWAYS", "And", "Cmp", "Const", "Expr", "Not", "Or", "PolicyError",
     "compile_program", "parse_expr", "KERNEL_COLUMNS",
     "PolicyDefinition", "PolicyEngine", "Rule", "RunReport",

@@ -314,42 +314,52 @@ class CatalogShard:
                 int(c["size"][row]), int(c["blocks"][row]),
                 int(c["hsm_state"][row]), float(c["atime"][row]))
 
+    def _upsert_locked(self, e: Entry) -> Tuple[Optional[Delta], Delta]:
+        row = self._rows.get(e.fid)
+        old: Optional[Delta] = None
+        if row is None:
+            row = self._alloc_row()
+            self._rows[e.fid] = row
+            self._valid[row] = True
+        else:
+            old = self._row_delta(row)
+        c = self._cols
+        c["fid"][row] = e.fid
+        c["parent_fid"][row] = e.parent_fid
+        c["type"][row] = int(e.type)
+        c["size"][row] = e.size
+        c["blocks"][row] = e.blocks
+        c["mode"][row] = e.mode
+        c["nlink"][row] = e.nlink
+        c["atime"][row] = e.atime
+        c["mtime"][row] = e.mtime
+        c["ctime"][row] = e.ctime
+        c["ost_idx"][row] = e.ost_idx
+        c["hsm_state"][row] = int(e.hsm_state)
+        c["archive_id"][row] = e.archive_id
+        c["owner"][row] = self.strings.intern(e.owner)
+        c["group"][row] = self.strings.intern(e.group)
+        c["pool"][row] = self.strings.intern(e.pool)
+        c["status"][row] = self.strings.intern(e.status)
+        c["dirty"][row] = 1 if e.dirty else 0
+        self._names[row] = e.name
+        self._paths[row] = e.path
+        self._xattrs[row] = dict(e.xattrs) if e.xattrs else None
+        self._stripes[row] = tuple(e.stripe_osts)
+        self.version += 1
+        return old, self._row_delta(row)
+
     def upsert(self, e: Entry) -> Tuple[Optional[Delta], Delta]:
         """Insert or update an entry; returns (old_delta|None, new_delta)."""
         with self.lock:
-            row = self._rows.get(e.fid)
-            old: Optional[Delta] = None
-            if row is None:
-                row = self._alloc_row()
-                self._rows[e.fid] = row
-                self._valid[row] = True
-            else:
-                old = self._row_delta(row)
-            c = self._cols
-            c["fid"][row] = e.fid
-            c["parent_fid"][row] = e.parent_fid
-            c["type"][row] = int(e.type)
-            c["size"][row] = e.size
-            c["blocks"][row] = e.blocks
-            c["mode"][row] = e.mode
-            c["nlink"][row] = e.nlink
-            c["atime"][row] = e.atime
-            c["mtime"][row] = e.mtime
-            c["ctime"][row] = e.ctime
-            c["ost_idx"][row] = e.ost_idx
-            c["hsm_state"][row] = int(e.hsm_state)
-            c["archive_id"][row] = e.archive_id
-            c["owner"][row] = self.strings.intern(e.owner)
-            c["group"][row] = self.strings.intern(e.group)
-            c["pool"][row] = self.strings.intern(e.pool)
-            c["status"][row] = self.strings.intern(e.status)
-            c["dirty"][row] = 1 if e.dirty else 0
-            self._names[row] = e.name
-            self._paths[row] = e.path
-            self._xattrs[row] = dict(e.xattrs) if e.xattrs else None
-            self._stripes[row] = tuple(e.stripe_osts)
-            self.version += 1
-            return old, self._row_delta(row)
+            return self._upsert_locked(e)
+
+    def upsert_many(self, entries: Sequence[Entry]
+                    ) -> List[Tuple[Optional[Delta], Delta]]:
+        """Upsert a batch under ONE lock acquisition (the columnar ingest
+        commit path) — same per-entry semantics as :meth:`upsert`."""
+        with self.lock:
+            return [self._upsert_locked(e) for e in entries]
 
     def update_fields(self, fid: int, **fields) -> Optional[Tuple[Delta, Delta]]:
         """Patch a subset of attributes; returns (old, new) deltas or None."""
@@ -381,19 +391,28 @@ class CatalogShard:
             self.version += 1
             return old, self._row_delta(row)
 
+    def _remove_locked(self, fid: int) -> Optional[Delta]:
+        row = self._rows.pop(fid, None)
+        if row is None:
+            return None
+        old = self._row_delta(row)
+        self._valid[row] = False
+        self._names[row] = self._paths[row] = ""
+        self._xattrs[row] = None
+        self._stripes[row] = ()
+        self._free.append(row)
+        self.version += 1
+        return old
+
     def remove(self, fid: int) -> Optional[Delta]:
         with self.lock:
-            row = self._rows.pop(fid, None)
-            if row is None:
-                return None
-            old = self._row_delta(row)
-            self._valid[row] = False
-            self._names[row] = self._paths[row] = ""
-            self._xattrs[row] = None
-            self._stripes[row] = ()
-            self._free.append(row)
-            self.version += 1
-            return old
+            return self._remove_locked(fid)
+
+    def remove_many(self, fids: Sequence[int]) -> List[Optional[Delta]]:
+        """Remove a batch under one lock acquisition; absent fids yield
+        ``None`` (a same-batch CREAT→UNLNK annihilation lands here)."""
+        with self.lock:
+            return [self._remove_locked(f) for f in fids]
 
     def get(self, fid: int) -> Optional[Entry]:
         with self.lock:
@@ -467,11 +486,50 @@ class CatalogShard:
             out.append(next(it) if r is not None else None)
         return out
 
+    _DELTA_COLS = ("fid", "owner", "group", "type", "size", "blocks",
+                   "hsm_state", "atime")
+    # fields the vectorized patch can broadcast: plain numeric columns
+    # (string-interned / per-row python fields fall back to the scalar loop)
+    _VECTOR_FIELDS = frozenset(
+        name for name, _ in _NUMERIC_COLUMNS) - frozenset(_STRING_FIELDS)
+
     def update_fields_batch(self, fids: Sequence[int], fields: dict
                             ) -> List[Optional[Tuple[Delta, Delta]]]:
-        """Patch the same field subset on many entries under one lock."""
+        """Patch the same field subset on many entries under one lock.
+
+        When every field is a plain numeric column (the dirty-tag path:
+        ``dirty=1``), the patch is **vectorized**: one fancy-index
+        assignment per field over the present rows instead of a per-fid
+        scalar write — and the old/new :class:`Delta` tuples are gathered
+        with one fancy-index per delta column. Mixed patches (names,
+        paths, xattrs, interned strings) keep the scalar loop.
+        """
+        if not all(k in self._VECTOR_FIELDS for k in fields):
+            with self.lock:
+                return [self.update_fields(f, **fields) for f in fids]
         with self.lock:
-            return [self.update_fields(f, **fields) for f in fids]
+            rows = [self._rows.get(f) for f in fids]
+            hit = [r for r in rows if r is not None]
+            if not hit:
+                return [None] * len(fids)
+            idx = np.asarray(hit, dtype=np.int64)
+            c = self._cols
+            old_cols = [c[name][idx] for name in self._DELTA_COLS]
+            for k, v in fields.items():
+                if k == "hsm_state" or k == "type":
+                    v = int(v)
+                elif k == "dirty":
+                    v = 1 if v else 0
+                c[k][idx] = v
+            new_cols = [c[name][idx] for name in self._DELTA_COLS]
+            self.version += 1
+            olds = list(zip(*(col.tolist() for col in old_cols)))
+            news = list(zip(*(col.tolist() for col in new_cols)))
+        out: List[Optional[Tuple[Delta, Delta]]] = []
+        it = iter(zip(olds, news))
+        for r in rows:
+            out.append(next(it) if r is not None else None)
+        return out
 
     # -- vectorized access ----------------------------------------------------
     def snapshot(self, names: Optional[Sequence[str]] = None,
@@ -582,6 +640,7 @@ class Catalog:
         self.shards = [CatalogShard(i, self.strings) for i in range(n_shards)]
         self.n_shards = n_shards
         self._hooks: List[Callable[[Optional[Delta], Optional[Delta]], None]] = []
+        self._batch_hooks: Dict[Callable, Callable] = {}
         self._entry_hooks: List[Callable[[Entry], None]] = []
         self.db_path = db_path
         self._db: Optional[sqlite3.Connection] = None
@@ -677,8 +736,21 @@ class Catalog:
         return n
 
     # -- hooks (stats aggregators, alerts) -------------------------------------
-    def add_delta_hook(self, fn: Callable[[Optional[Delta], Optional[Delta]], None]) -> None:
+    def add_delta_hook(self, fn: Callable[[Optional[Delta], Optional[Delta]], None],
+                       batch: Optional[Callable[[List[Tuple[Optional[Delta],
+                                                            Optional[Delta]]]],
+                                                None]] = None) -> None:
+        """Register a delta consumer. ``fn(old, new)`` fires per mutation
+        on the scalar paths; a consumer that also passes ``batch`` gets
+        the whole committed batch in **one** call (``batch(pairs)``) on
+        the batched paths instead of N scalar invocations — the single
+        fan-out contract of the columnar ingest plane. Consumers without
+        a batch variant still see every mutation (the batch dispatcher
+        loops their scalar hook), so the two registration styles are
+        behaviorally identical, batch-aware ones just pay one call."""
         self._hooks.append(fn)
+        if batch is not None:
+            self._batch_hooks[fn] = batch
 
     def remove_delta_hook(self, fn: Callable[[Optional[Delta], Optional[Delta]], None]) -> None:
         """Unregister a delta hook (no-op if absent) — long-lived catalogs
@@ -688,6 +760,7 @@ class Catalog:
             self._hooks.remove(fn)
         except ValueError:
             pass
+        self._batch_hooks.pop(fn, None)
 
     def add_entry_hook(self, fn: Callable[[Entry], None]) -> None:
         """Entry-level hook (alerts need names/paths, not just deltas)."""
@@ -696,6 +769,20 @@ class Catalog:
     def _fire(self, old: Optional[Delta], new: Optional[Delta]) -> None:
         for fn in self._hooks:
             fn(old, new)
+
+    def _fire_batch(self, pairs: List[Tuple[Optional[Delta],
+                                            Optional[Delta]]]) -> None:
+        """Dispatch one committed batch to every delta consumer: one call
+        for batch-registered hooks, a scalar loop for the rest."""
+        if not pairs:
+            return
+        for fn in self._hooks:
+            batch_fn = self._batch_hooks.get(fn)
+            if batch_fn is not None:
+                batch_fn(pairs)
+            else:
+                for old, new in pairs:
+                    fn(old, new)
 
     # -- routing ----------------------------------------------------------------
     def _shard_id(self, fid: int) -> int:
@@ -728,6 +815,47 @@ class Catalog:
                 fn(e)
         self._bump()
         self._persist(entries, [])
+
+    def commit_delta_batch(self, entries: Sequence[Entry],
+                           removed: Sequence[int]) -> int:
+        """Commit one folded delta batch: shard-grouped upserts and
+        removals (one lock acquisition per shard group), ONE durable
+        sqlite commit, ONE version bump, and ONE delta fan-out call
+        carrying the whole batch (:meth:`add_delta_hook`'s ``batch``
+        consumers get a single invocation; scalar hooks still see every
+        pair). This is the columnar ingest plane's apply primitive — the
+        scalar equivalent (`upsert_batch` + a remove loop) costs N hook
+        dispatches and N+1 version bumps for the same state change.
+
+        Removals of absent fids (same-batch CREAT→UNLNK annihilations)
+        are no-ops and fire nothing, matching the scalar path. Returns
+        the number of removals that actually hit.
+        """
+        pairs: List[Tuple[Optional[Delta], Optional[Delta]]] = []
+        by_shard: Dict[int, List[Entry]] = {}
+        for e in entries:
+            by_shard.setdefault(self._shard_id(e.fid), []).append(e)
+        for sid, group in by_shard.items():
+            pairs.extend(self.shards[sid].upsert_many(group))
+        rm_by_shard: Dict[int, List[int]] = {}
+        for fid in removed:
+            rm_by_shard.setdefault(self._shard_id(fid), []).append(fid)
+        hit = 0
+        removed_present: List[int] = []
+        for sid, fids in rm_by_shard.items():
+            for fid, old in zip(fids, self.shards[sid].remove_many(fids)):
+                if old is not None:
+                    pairs.append((old, None))
+                    removed_present.append(fid)
+                    hit += 1
+        self._bump()
+        self._persist(entries, removed_present)
+        self._fire_batch(pairs)
+        if self._entry_hooks:
+            for e in entries:
+                for fn in self._entry_hooks:
+                    fn(e)
+        return hit
 
     def update_fields(self, fid: int, **fields) -> bool:
         res = self.shard_of(fid).update_fields(fid, **fields)
@@ -775,12 +903,14 @@ class Catalog:
         for fid in fids:
             by_shard.setdefault(self._shard_id(fid), []).append(fid)
         updated: List[int] = []
+        pairs: List[Tuple[Optional[Delta], Optional[Delta]]] = []
         for sid, group in by_shard.items():
             results = self.shards[sid].update_fields_batch(group, fields)
             for fid, res in zip(group, results):
                 if res is not None:
-                    self._fire(res[0], res[1])
+                    pairs.append(res)
                     updated.append(fid)
+        self._fire_batch(pairs)
         if updated:
             self._bump()
         if self._db is not None and updated:
@@ -789,13 +919,19 @@ class Catalog:
         return updated
 
     def remove_batch(self, fids: Sequence[int]) -> int:
-        """Remove many entries; one durable commit for the whole batch."""
-        removed: List[int] = []
+        """Remove many entries; one lock acquisition per shard group, one
+        durable commit and one hook fan-out for the whole batch."""
+        by_shard: Dict[int, List[int]] = {}
         for fid in fids:
-            old = self.shard_of(fid).remove(fid)
-            if old is not None:
-                self._fire(old, None)
-                removed.append(fid)
+            by_shard.setdefault(self._shard_id(fid), []).append(fid)
+        removed: List[int] = []
+        pairs: List[Tuple[Optional[Delta], Optional[Delta]]] = []
+        for sid, group in by_shard.items():
+            for fid, old in zip(group, self.shards[sid].remove_many(group)):
+                if old is not None:
+                    pairs.append((old, None))
+                    removed.append(fid)
+        self._fire_batch(pairs)
         if removed:
             self._bump()
             self._persist([], removed)

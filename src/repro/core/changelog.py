@@ -32,10 +32,50 @@ from collections import deque
 from itertools import islice
 from typing import Deque, Dict, Iterable, List, Optional
 
+import numpy as np
+
 from .telemetry import MetricRegistry
 from .types import ChangelogRecord, ChangelogType
 
 DEFAULT_SUBSCRIBER = "main"
+
+
+class ColumnarRecords:
+    """One read batch decoded into aligned numpy columns.
+
+    The ingest hot path works on these arrays only — ``seq``/``fid``/
+    ``type``/``time`` — so from the reader onward no per-event Python
+    dict is ever built (the original :class:`ChangelogRecord` objects
+    ride along solely for the per-record uid/jobid counters and the
+    record-at-a-time differential oracle).
+    """
+
+    __slots__ = ("mdt", "seq", "fid", "type", "time", "records")
+
+    def __init__(self, mdt: int, seq: np.ndarray, fid: np.ndarray,
+                 type_: np.ndarray, time_: np.ndarray,
+                 records: List[ChangelogRecord]) -> None:
+        self.mdt = mdt
+        self.seq = seq
+        self.fid = fid
+        self.type = type_
+        self.time = time_
+        self.records = records
+
+    def __len__(self) -> int:
+        return self.seq.shape[0]
+
+    @classmethod
+    def from_records(cls, recs: List[ChangelogRecord],
+                     mdt: int) -> "ColumnarRecords":
+        """Columnar decode: four vectorized passes, no per-event dicts."""
+        n = len(recs)
+        seq = np.fromiter((r.seq for r in recs), dtype=np.int64, count=n)
+        fid = np.fromiter((r.fid for r in recs), dtype=np.int64, count=n)
+        typ = np.fromiter((int(r.type) for r in recs), dtype=np.int8,
+                          count=n)
+        tim = np.fromiter((r.time for r in recs), dtype=np.float64, count=n)
+        return cls(mdt, seq, fid, typ, tim, recs)
 
 
 class _Subscriber:
@@ -282,20 +322,29 @@ class ChangelogStream:
 
     # -- consumer -----------------------------------------------------------------
     def read(self, max_records: int = 1024, timeout: Optional[float] = None,
-             subscriber: Optional[str] = None) -> List[ChangelogRecord]:
+             subscriber: Optional[str] = None,
+             stop: Optional[threading.Event] = None) -> List[ChangelogRecord]:
         """Read the next batch past the subscriber's cursor (does NOT ack).
 
         Retained records are dense in seq and purged only from the front,
         so the cursor position is an index: a read costs O(position +
         batch), not O(backlog) — a lagging subscriber (e.g. an idle policy
         engine) cannot degrade the main consumer's read loop.
+
+        ``timeout=None`` returns immediately when nothing is pending; pass
+        a timeout (or ``float('inf')``-like large value) to block on the
+        stream's condition variable until a record is emitted — no
+        polling. A blocked read wakes on emit, :meth:`close`, :meth:`wake`,
+        or when the optional ``stop`` event is set (checked only at wakeup
+        — pair it with :meth:`wake` for prompt shutdown).
         """
         with self._lock:
             sub = self._sub(subscriber)
             if timeout is not None:
                 self._lock.wait_for(
-                    lambda: self._closed or (
-                        self._records
+                    lambda: self._closed
+                    or (stop is not None and stop.is_set())
+                    or (self._records
                         and self._records[-1].seq > sub.read_cursor),
                     timeout=timeout)
             if not self._records or self._records[-1].seq <= sub.read_cursor:
@@ -305,6 +354,28 @@ class ChangelogStream:
             if out:
                 sub.read_cursor = out[-1].seq
             return out
+
+    def read_columnar(self, max_records: int = 1024,
+                      timeout: Optional[float] = None,
+                      subscriber: Optional[str] = None,
+                      stop: Optional[threading.Event] = None
+                      ) -> Optional[ColumnarRecords]:
+        """:meth:`read`, decoded to a :class:`ColumnarRecords` batch.
+
+        Returns ``None`` instead of an empty batch so callers can
+        distinguish 'nothing pending' without touching numpy.
+        """
+        recs = self.read(max_records=max_records, timeout=timeout,
+                         subscriber=subscriber, stop=stop)
+        if not recs:
+            return None
+        return ColumnarRecords.from_records(recs, self.mdt)
+
+    def wake(self) -> None:
+        """Wake every blocked :meth:`read` (shutdown path: set the stop
+        event the readers were given, then call this)."""
+        with self._lock:
+            self._lock.notify_all()
 
     @property
     def acked(self) -> int:
@@ -369,6 +440,7 @@ class ChangelogHub:
         self.streams: Dict[int, ChangelogStream] = {
             i: ChangelogStream(i, persist_dir, fsync) for i in range(n_mdts)
         }
+        self._rr = 0          # rotating round-robin start cursor
         self._closed = False
 
     def stream(self, mdt: int = 0) -> ChangelogStream:
@@ -382,6 +454,32 @@ class ChangelogHub:
 
     def total_pending(self) -> int:
         return sum(s.pending() for s in self.streams.values())
+
+    def read_round_robin(self, quantum: int = 1024,
+                         subscriber: Optional[str] = None
+                         ) -> List[ColumnarRecords]:
+        """One fair sweep over every MDT stream: up to ``quantum`` records
+        from each, visiting streams in rotating order so a storming MDT
+        can never starve the others — per sweep, every stream with
+        pending records contributes a batch, so a quiet stream's lag is
+        bounded by one quantum regardless of how deep another stream's
+        backlog grows. Returns the non-empty batches in visit order.
+        """
+        mdts = sorted(self.streams)
+        n = len(mdts)
+        start = self._rr % n if n else 0
+        self._rr += 1
+        out: List[ColumnarRecords] = []
+        for i in range(n):
+            s = self.streams[mdts[(start + i) % n]]
+            cb = s.read_columnar(max_records=quantum, subscriber=subscriber)
+            if cb is not None:
+                out.append(cb)
+        return out
+
+    def wake(self) -> None:
+        for s in self.streams.values():
+            s.wake()
 
     def close(self) -> None:
         """Close every stream (idempotent — safe to call more than once)."""

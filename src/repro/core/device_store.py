@@ -644,7 +644,7 @@ class DeviceColumnStore:
         self.segment_repacks = 0            # stale segments re-encoded
         self.demote_races = 0               # async packs discarded (raced)
         self.device_pads = 0                # on-device re-pads (no re-upload)
-        catalog.add_delta_hook(self._on_delta)
+        catalog.add_delta_hook(self._on_delta, batch=self._on_delta_batch)
 
     # -- analytics planes ------------------------------------------------------
     def _block_rows(self) -> int:
@@ -767,6 +767,24 @@ class DeviceColumnStore:
             group.structural = True
         else:
             group.dirty.add(fid)
+
+    def _on_delta_batch(self, pairs) -> None:
+        """Single fan-out arm: classify one committed delta batch in one
+        call — same per-pair semantics as :meth:`_on_delta`, with the
+        group/shard routing hoisted out of the loop."""
+        groups = self._groups
+        shard_id = self.catalog._shard_id
+        n_dev = self.n_devices
+        for old, new in pairs:
+            ref = new if new is not None else old
+            if ref is None:
+                continue
+            group = groups[shard_id(int(ref[0])) % n_dev]
+            group.churn += 1
+            if old is None or new is None:
+                group.structural = True
+            else:
+                group.dirty.add(int(ref[0]))
 
     # -- freshness ------------------------------------------------------------
     def _shard_versions(self, group: _ShardGroup) -> Dict[int, int]:

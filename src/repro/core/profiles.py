@@ -430,7 +430,7 @@ class ProfileCube:
         subscription would double-count every mutation).
         """
         self.claim_delta_feed("ProfileCube.attach")
-        self.catalog.add_delta_hook(self.on_delta)
+        self.catalog.add_delta_hook(self.on_delta, batch=self.on_delta_batch)
         if resume:
             try:
                 if self.load(path):
@@ -493,6 +493,28 @@ class ProfileCube:
         shard = self._shards[self.catalog._shard_id(fid)]
         with shard.lock:
             shard.push(fid, new)
+
+    def on_delta_batch(self, pairs) -> None:
+        """Single fan-out arm: buffer one committed delta batch with one
+        lock acquisition per *touched* shard instead of one per mutation
+        (``Catalog.add_delta_hook(..., batch=...)`` routes batched
+        commits here; scalar mutations still arrive via
+        :meth:`on_delta`)."""
+        if self.device_store is not None:
+            return
+        shard_id = self.catalog._shard_id
+        by_shard: Dict[int, list] = {}
+        for old, new in pairs:
+            src = new if new is not None else old
+            if src is None:
+                continue
+            by_shard.setdefault(shard_id(src[0]), []).append((src[0], new))
+        for sid, items in by_shard.items():
+            shard = self._shards[sid]
+            with shard.lock:
+                push = shard.push
+                for fid, new in items:
+                    push(fid, new)
 
     # -- full rebuild ----------------------------------------------------------
     def rebuild(self, now: Optional[float] = None,

@@ -101,6 +101,25 @@ class StatsAggregator:
         else:
             self._apply(old, new)
 
+    def on_delta_batch(self, pairs) -> None:
+        """Batch variant of :meth:`on_delta` (register it as the ``batch=``
+        arm of ``Catalog.add_delta_hook``): one committed delta batch folds
+        under ONE lock acquisition instead of one per mutation."""
+        if self.async_mode:
+            for p in pairs:
+                self._q.put(p)
+            return
+        if self._cube is not None:
+            self._cube.on_delta_batch(pairs)
+            return
+        with self._lock:
+            fold = self._fold
+            for old, new in pairs:
+                if old is not None:
+                    fold(-1, *old)
+                if new is not None:
+                    fold(+1, *new)
+
     def _drain(self) -> None:
         while not self._stop.is_set() or (self._q is not None and not self._q.empty()):
             try:
@@ -247,6 +266,20 @@ class ChangelogCounters:
                 self.per_user[rec.uid][int(rec.type)] += 1
             if rec.jobid:
                 self.per_job[rec.jobid][int(rec.type)] += 1
+
+    def on_records(self, recs) -> None:
+        """Count a whole read batch under one lock (columnar ingest)."""
+        with self._lock:
+            per_type, per_user, per_job = \
+                self.per_type, self.per_user, self.per_job
+            self.total += len(recs)
+            for rec in recs:
+                t = int(rec.type)
+                per_type[t] += 1
+                if rec.uid:
+                    per_user[rec.uid][t] += 1
+                if rec.jobid:
+                    per_job[rec.jobid][t] += 1
 
     def snapshot(self) -> dict:
         with self._lock:

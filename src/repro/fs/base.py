@@ -16,3 +16,17 @@ class FsBackend(Protocol):
         ...
 
     def stat(self, fid: int) -> Optional[Entry]: ...
+
+
+def stat_batch(fs, fids: Iterable[int]) -> List[Optional[Entry]]:
+    """Batched stat with a scalar fallback.
+
+    The columnar ingest plane resolves every surviving fid of a folded
+    batch in one call; backends that can serve it under a single lock
+    (``LustreSim.stat_batch``) export their own, everything else gets the
+    per-fid loop here.
+    """
+    batched = getattr(fs, "stat_batch", None)
+    if batched is not None:
+        return batched(fids)
+    return [fs.stat(f) for f in fids]

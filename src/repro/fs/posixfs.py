@@ -73,3 +73,7 @@ class PosixFs:
             owner=str(st.st_uid), group=str(st.st_gid),
             mode=stat_mod.S_IMODE(st.st_mode), nlink=st.st_nlink,
             atime=st.st_atime, mtime=st.st_mtime, ctime=st.st_ctime)
+
+    def stat_batch(self, fids) -> List[Optional[Entry]]:
+        """No batched lstat on POSIX — the loop just pins the interface."""
+        return [self.stat(f) for f in fids]

@@ -159,3 +159,74 @@ def test_concurrent_producers_unique_seqs():
     recs = s.read(max_records=1000)
     seqs = [r.seq for r in recs]
     assert seqs == sorted(seqs) and len(set(seqs)) == 400
+
+
+def test_round_robin_bounded_lag_skew_under_single_mdt_burst():
+    """Fairness: a burst on one MDT must not starve the others — every
+    round-robin sweep serves each MDT up to one quantum, so a trickle
+    stream's backlog stays bounded by (quantum + its per-sweep arrivals)
+    for the whole time the burst is draining."""
+    hub = ChangelogHub(n_mdts=4)
+    q = 64
+    for i in range(40 * q):                       # 40-quantum burst, MDT 0
+        hub.stream(0).emit(ChangelogType.CREAT, i + 1)
+    for m in (1, 2, 3):
+        for i in range(8):
+            hub.stream(m).emit(ChangelogType.CLOSE, i + 1)
+
+    sweeps = 0
+    while hub.total_pending():
+        batches = hub.read_round_robin(quantum=q)
+        assert batches, "pending records but an empty sweep"
+        served = {cb.mdt for cb in batches}
+        for cb in batches:
+            hub.stream(cb.mdt).ack(int(cb.seq[-1]))
+        sweeps += 1
+        if sweeps <= 3:
+            # while the burst is hot, every trickle MDT with pending
+            # records was served in the same sweep (no starvation)
+            assert served == {0, 1, 2, 3}
+        for m in (1, 2, 3):
+            # bounded lag skew: the trickle streams never accumulate
+            # more than one quantum of backlog behind the burst
+            assert hub.stream(m).pending() <= q, \
+                f"mdt{m} starved behind the mdt0 burst"
+        if sweeps <= 10:                          # live trickle continues
+            for m in (1, 2, 3):
+                hub.stream(m).emit(ChangelogType.CLOSE, 100 + sweeps)
+        assert sweeps < 200
+    assert sweeps >= 40                           # burst took many sweeps
+
+
+def test_round_robin_rotates_start_mdt():
+    """The sweep's starting MDT rotates so no stream is permanently
+    first in line for the quantum."""
+    hub = ChangelogHub(n_mdts=3)
+    for m in range(3):
+        for i in range(6):
+            hub.stream(m).emit(ChangelogType.CREAT, i + 1)
+    firsts = []
+    for _ in range(3):
+        batches = hub.read_round_robin(quantum=2)
+        firsts.append(batches[0].mdt)
+        for cb in batches:
+            hub.stream(cb.mdt).ack(int(cb.seq[-1]))
+    assert len(set(firsts)) == 3
+
+
+def test_read_columnar_matches_read():
+    s = ChangelogStream()
+    for fid in range(1, 9):
+        s.emit(ChangelogType.CREAT if fid % 2 else ChangelogType.UNLNK, fid)
+    cb = s.read_columnar(max_records=5)
+    assert cb is not None and len(cb) == 5
+    assert cb.seq.tolist() == [1, 2, 3, 4, 5]
+    assert cb.fid.tolist() == [1, 2, 3, 4, 5]
+    assert cb.type.tolist() == [int(ChangelogType.CREAT),
+                                int(ChangelogType.UNLNK),
+                                int(ChangelogType.CREAT),
+                                int(ChangelogType.UNLNK),
+                                int(ChangelogType.CREAT)]
+    assert [r.seq for r in cb.records] == [1, 2, 3, 4, 5]
+    assert s.read_columnar(max_records=5).seq.tolist() == [6, 7, 8]
+    assert s.read_columnar(max_records=5, timeout=0.0) is None

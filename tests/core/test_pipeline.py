@@ -1,8 +1,8 @@
 """Changelog-consumption pipeline: sync + async dirty-tag modes (C4/C11)."""
 import time
 
-from repro.core import (Catalog, ChangelogCounters, EventPipeline,
-                        PipelineConfig, Scanner)
+from repro.core import (Catalog, ChangelogCounters, ChangelogStream,
+                        EventPipeline, PipelineConfig, Scanner)
 from repro.fs import LustreSim
 
 
@@ -153,3 +153,188 @@ def test_scan_and_changelog_agree():
     for fid in fids:
         a, b = by_scan.get(fid), by_log.get(fid)
         assert a.size == b.size and a.owner == b.owner and a.path == b.path
+
+
+# -- columnar ingest plane ----------------------------------------------------
+
+class _SlowStat:
+    """fs proxy whose (batched) stat takes a while — long enough that a
+    drain() racing an in-flight refresh would observe stale state."""
+
+    def __init__(self, inner, delay):
+        self._inner = inner
+        self._delay = delay
+
+    def stat_batch(self, fids):
+        time.sleep(self._delay)
+        return self._inner.stat_batch(fids)
+
+    def stat(self, fid):
+        time.sleep(self._delay)
+        return self._inner.stat(fid)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_drain_waits_for_inflight_updater_refresh():
+    """Regression: drain() returned True while an async updater held fids
+    it had already popped from ``_dirty`` with the refresh still in
+    flight — pending()==0 and an empty dirty set are not 'drained'."""
+    fs, d, fids = _fs_with_files(5)
+    cat = Catalog()
+    pipe = EventPipeline(_SlowStat(fs, 0.25), cat, fs.changelog.stream(0),
+                         PipelineConfig(async_updates=True, n_updaters=1))
+    pipe.start()
+    try:
+        assert pipe.drain(timeout=30)
+        size0 = cat.get(fids[0]).size
+        fs.write(fids[0], 77, uid="u")
+        # wait for the tag to be consumed AND popped by the updater: the
+        # only remaining signal of unfinished work is the refresh itself
+        deadline = time.time() + 10
+        while (fs.changelog.stream(0).pending() or pipe._dirty) \
+                and time.time() < deadline:
+            time.sleep(0.005)
+        assert pipe.drain(timeout=30)
+        assert cat.get(fids[0]).size == size0 + 77, \
+            "drain() returned before the in-flight refresh committed"
+    finally:
+        pipe.stop()
+
+
+def test_drain_counts_inflight_worker_batches():
+    """Same race on the oracle worker pool: a popped-but-uncommitted
+    batch must keep drain() blocked (the batch queue is already empty)."""
+    fs, d, fids = _fs_with_files(6)
+    cat = Catalog()
+    pipe = EventPipeline(_SlowStat(fs, 0.2), cat, fs.changelog.stream(0),
+                         PipelineConfig(columnar=False, n_workers=2))
+    pipe.start()
+    try:
+        assert pipe.drain(timeout=30)
+        assert len(cat) == fs.count() - 1
+    finally:
+        pipe.stop()
+
+
+def test_idle_pipeline_does_not_busy_wait():
+    """Readers and updaters block on Conditions: an idle second must add
+    zero wakeups and zero pipeline.apply spans to the histograms."""
+    fs, d, fids = _fs_with_files(10)
+    cat = Catalog()
+    pipe = EventPipeline(fs, cat, fs.changelog.stream(0),
+                         PipelineConfig(async_updates=True))
+    pipe.start()
+    try:
+        assert pipe.drain(timeout=30)
+        time.sleep(0.2)                      # settle any tail wakeup
+
+        def snap():
+            wake = sum(v for k, v in
+                       cat.telemetry.counter_values().items()
+                       if k.startswith("pipeline_wakeups"))
+            spans = cat.telemetry.histogram(
+                "span_seconds", span="pipeline.apply").count
+            return wake, spans
+
+        before = snap()
+        time.sleep(0.6)
+        assert snap() == before, \
+            "idle pipeline threads iterated without work (busy-wait)"
+        fs.write(fids[0], 9, uid="u")        # ...but wakeups still work
+        assert pipe.drain(timeout=30)
+        assert snap() > before
+    finally:
+        pipe.stop()
+    assert cat.get(fids[0]).size == 109
+
+
+def test_hub_sharded_readers_mirror_all_mdts():
+    """One pipeline over a whole hub: per-MDT readers with independent
+    acks, one shared catalog, all MDT streams drained."""
+    fs = LustreSim(n_mdts=4)
+    dirs = [fs.mkdir(fs.root_fid(), f"d{i}") for i in range(8)]
+    fids = [fs.create(dirs[i % 8], f"f{i}", owner="u", uid="u")
+            for i in range(60)]
+    for f in fids:
+        fs.write(f, 10, uid="u")
+    cat = Catalog()
+    pipe = EventPipeline(fs, cat, fs.changelog, PipelineConfig())
+    pipe.start()
+    try:
+        assert pipe.drain(timeout=30)
+        assert len(cat) == fs.count() - 1
+        for mdt in range(4):
+            assert fs.changelog.stream(mdt).pending() == 0
+        fs.unlink(fids[0])
+        fs.write(fids[1], 90, uid="u")
+        assert pipe.drain(timeout=30)
+        assert cat.get(fids[0]) is None
+        assert cat.get(fids[1]).size == 100
+    finally:
+        pipe.stop()
+
+
+def test_adaptive_quantum_grows_and_is_visible():
+    """A pre-emitted burst on one MDT grows the reader's quantum toward
+    max_batch; transitions land in the adaptation counters."""
+    fs, d, fids = _fs_with_files(10)
+    for _ in range(40):
+        for f in fids:
+            fs.write(f, 1, uid="u")
+    cat = Catalog()
+    pipe = EventPipeline(fs, cat, fs.changelog.stream(0),
+                         PipelineConfig(batch_size=16, min_batch=16,
+                                        max_batch=1024, lag_target=60.0))
+    pipe.start()
+    try:
+        assert pipe.drain(timeout=30)
+    finally:
+        pipe.stop()
+    vals = cat.telemetry.counter_values()
+    grown = sum(v for k, v in vals.items()
+                if k.startswith("pipeline_batch_adaptations")
+                and 'direction="grow"' in k)
+    assert grown >= 1
+    assert pipe._quantum[0] > 16
+
+
+def test_crash_resume_mid_columnar_batch(tmp_path):
+    """Crash after commit but before ack: the restarted stream re-delivers
+    the committed batch; replaying it lands on identical catalog state."""
+    d = str(tmp_path)
+    fs = LustreSim(n_mdts=1, changelog_dir=d)
+    root_d = fs.mkdir(fs.root_fid(), "dir")
+    fids = [fs.create(root_d, f"f{i}", owner="u", uid="u")
+            for i in range(12)]
+    for f in fids:
+        fs.write(f, 100, uid="u")
+    fs.unlink(fids[3])
+
+    cat = Catalog()
+    stream = fs.changelog.stream(0)
+    pipe = EventPipeline(fs, cat, stream, PipelineConfig(batch_size=9))
+    pipe._acks[0].complete_range = lambda lo, hi: None   # die before ack
+    pipe.process_once(10 ** 6)
+    n_committed = len(cat)
+    assert n_committed > 0 and stream.pending() > 0      # mid-batch crash
+
+    # restart: fresh stream over the same persist dir re-delivers all
+    # unacked records; the same catalog replays them idempotently
+    stream.close()
+    s2 = ChangelogStream(mdt=0, persist_dir=d)
+    pipe2 = EventPipeline(fs, cat, s2, PipelineConfig(batch_size=9))
+    pipe2.process_once(10 ** 6)
+    assert s2.pending() == 0
+
+    # byte-identical to a ground-truth mirror of the fs
+    oracle = Catalog()
+    Scanner(fs, oracle).scan()
+    for f in [root_d] + fids:
+        a, b = cat.get(f), oracle.get(f)
+        if b is None:
+            assert a is None
+        else:
+            assert (a.size, a.owner, a.path, int(a.type)) == \
+                (b.size, b.owner, b.path, int(b.type))
